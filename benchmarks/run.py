@@ -1,0 +1,116 @@
+"""Benchmark harness entry point: one function per paper table/figure,
+plus micro-benchmarks of this repo's own layers.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig6_allgather
+
+Prints ``name,metric,value`` CSV at the end; paper reproductions print
+human tables as they go.  The dry-run roofline table is produced by
+``benchmarks.roofline`` (reads results/dryrun/*.json).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def bench_kernels():
+    """Micro-bench the Pallas kernels (interpret mode — CORRECTNESS path
+    timing only; TPU perf comes from the dry-run roofline)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rows = []
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(4, 256, 64)), jnp.float32)
+    t0 = time.monotonic()
+    ops.flash_attention(q, q, q, use_pallas=True, block_q=128,
+                        block_k=128).block_until_ready()
+    rows.append({"name": "flash_attention_interp_256", "metric": "s",
+                 "value": time.monotonic() - t0})
+    t0 = time.monotonic()
+    ref.attention_ref(q, q, q).block_until_ready()
+    rows.append({"name": "attention_ref_256", "metric": "s",
+                 "value": time.monotonic() - t0})
+    return rows
+
+
+def bench_dispatch_sim():
+    """Simulator throughput on the Table-1 workload."""
+    from repro.core import latency_model as lm
+    from repro.core import schedules as sch
+    from repro.core.multiwrite import MultiWriteSimulator
+    from repro.core.topology import two_server_cluster
+    rows = []
+    for batch in (64, 1024):
+        topo = two_server_cluster()
+        sim = MultiWriteSimulator(topo)
+        routing = sch.make_routing(batch, 16, 64, 8, seed=1)
+        t0 = time.monotonic()
+        sch.dispatch_multiwrite(sim, routing, lm.TOKEN_BYTES)
+        rows.append({"name": f"sim_dispatch_mw_b{batch}", "metric": "s",
+                     "value": time.monotonic() - t0})
+    return rows
+
+
+def bench_train_throughput():
+    """Tiny-model CPU train-step wall time (framework overhead check)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM, batch_for_model
+    from repro.models.api import build_model
+    from repro.optim import adamw
+    from repro.runtime.trainer import TrainState, make_train_step
+    cfg = get_config("mistral_nemo_12b").reduced(
+        n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab=256)
+    model = build_model(cfg, dtype=jnp.float32)
+    opt = adamw(lr=1e-3)
+    params = model.init(jax.random.key(0))
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    data = SyntheticLM(DataConfig(vocab=256, seq_len=64, global_batch=8))
+    step = make_train_step(model, opt, donate=False)
+    batch = batch_for_model(cfg, data.batch(0))
+    state, _ = step(state, batch)                     # compile
+    t0 = time.monotonic()
+    m = None
+    for i in range(5):
+        state, m = step(state, batch_for_model(cfg, data.batch(i + 1)))
+    jax.block_until_ready(m)
+    return [{"name": "train_step_smoke_cpu", "metric": "s/step",
+             "value": (time.monotonic() - t0) / 5}]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_figures
+    csv_rows = []
+    for name, fn in paper_figures.ALL.items():
+        if args.only and args.only != name:
+            continue
+        rows = fn()
+        for r in rows:
+            tag = r.get('scheme', r.get('batch', r.get('msg_mb', '')))
+            for k, v in r.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    csv_rows.append((f"{name}.{tag}", k, v))
+    if args.only is None:
+        for bench in (bench_kernels, bench_dispatch_sim,
+                      bench_train_throughput):
+            for r in bench():
+                csv_rows.append((r["name"], r["metric"], r["value"]))
+
+    print("\nname,metric,value")
+    for name, metric, value in csv_rows:
+        print(f"{name},{metric},{value}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

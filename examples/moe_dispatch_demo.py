@@ -1,0 +1,89 @@
+"""MoE dispatch demo: the paper's Table-1 scenario end-to-end in JAX.
+
+Spawns 8 CPU devices (2 "pods" x 4 "chips"), routes tokens top-2 over 16
+experts, and runs BOTH dispatch schemes:
+
+  baseline    one copy per (token, destination chip) crosses the pod axis
+  multiwrite  ONE copy per (token, destination pod), relay replication
+
+then compares (a) numerical equality of the MoE layer output, and (b) the
+pod-axis all-to-all bytes parsed from each scheme's compiled HLO — the
+dry-run version of the paper's Table 1.
+
+Run:  PYTHONPATH=src python examples/moe_dispatch_demo.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import functools  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import collectives as cl  # noqa: E402
+from repro.launch.hlo_analysis import MeshLayout  # noqa: E402
+from repro.launch.hlo_module import analyze_module  # noqa: E402
+
+PODS, EP = 2, 4
+EXPERTS, TOPK, N_PER, H = 16, 2, 64, 32
+
+
+def build(scheme, mesh):
+    epmesh = cl.EPMesh("pod", "ep", PODS, EP)
+    cfg = cl.DispatchConfig(EXPERTS, TOPK, 1.0, 1.0, 1.0)
+    per_rank = EXPERTS // (PODS * EP)
+
+    def step(tok, ids, gates):
+        scale = (jnp.arange(EXPERTS, dtype=jnp.float32) + 1.0) * 0.05
+        rank = jax.lax.axis_index("pod") * EP + jax.lax.axis_index("ep")
+        local = scale[rank * per_rank + jnp.arange(per_rank)][:, None, None]
+        if scheme == "multiwrite":
+            et, eg, st = cl.hierarchical_dispatch(tok, ids, gates, cfg,
+                                                  epmesh)
+            return cl.hierarchical_combine(et * local, eg, st)
+        et, eg, st = cl.baseline_dispatch(tok, ids, gates, cfg, epmesh)
+        return cl.baseline_combine(et * local, eg, st)
+
+    return jax.jit(jax.shard_map(
+        step, mesh=mesh, in_specs=(P(("pod", "ep")),) * 3,
+        out_specs=P(("pod", "ep")), check_vma=False))
+
+
+def main():
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((PODS, EP), ("pod", "ep"))
+    rng = np.random.default_rng(0)
+    n = N_PER * PODS * EP
+    tokens = jnp.asarray(rng.normal(size=(n, H)).astype(np.float32))
+    logits = jnp.asarray(rng.normal(size=(n, EXPERTS)).astype(np.float32))
+    gates, ids = cl.route_topk(logits, TOPK)
+
+    outs, pod_bytes = {}, {}
+    layout = MeshLayout(("pod", "ep"), (PODS, EP))
+    for scheme in ("baseline", "multiwrite"):
+        fn = build(scheme, mesh)
+        lowered = fn.lower(tokens, ids, gates)
+        cost = analyze_module(lowered.compile().as_text(), layout,
+                              default_axis="ep")
+        pod_bytes[scheme] = cost.collective_by_axis.get("pod", 0)
+        outs[scheme] = np.asarray(fn(tokens, ids, gates))
+
+    err = np.max(np.abs(outs["baseline"] - outs["multiwrite"]))
+    print(f"outputs identical across schemes: max|diff| = {err:.2e}")
+    b, m = pod_bytes["baseline"], pod_bytes["multiwrite"]
+    print(f"pod-axis (slow link) wire bytes per chip:")
+    print(f"  baseline (unicast): {b:10.0f}")
+    print(f"  multiwrite        : {m:10.0f}")
+    print(f"  reduction         : {100 * (1 - m / b):.0f}%  "
+          f"(paper Table 1: one crossing per pod vs per expert)")
+    assert m < b
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

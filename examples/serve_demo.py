@@ -1,0 +1,49 @@
+"""Serving demo: batched generation with prefill + KV-cache decode.
+
+Trains nothing — loads random weights into a small dense model and a
+small RWKV6 (attention-free) model, generates with the ServeEngine, and
+reports prefill/decode timings and tokens/s on this host.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.api import build_model
+from repro.runtime.server import ServeConfig, ServeEngine
+
+
+def demo(arch: str, max_new: int = 16):
+    cfg = get_config(arch).reduced(n_layers=4, d_model=128, n_heads=4,
+                                   d_ff=256, vocab=1024)
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params,
+                         ServeConfig(max_new_tokens=max_new,
+                                     temperature=0.0))
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab, size=(4, 32)).astype(np.int32)
+    out = engine.generate(prompts)
+    dec_s = engine.stats["decode_s"]
+    print(f"{arch:24s} generated {out.shape} "
+          f"prefill={engine.stats['prefill_s']*1e3:.0f}ms "
+          f"decode={dec_s*1e3:.0f}ms "
+          f"({out.size / max(dec_s, 1e-9):.0f} tok/s decode)")
+    # determinism check
+    out2 = ServeEngine(model, params,
+                       ServeConfig(max_new_tokens=max_new)).generate(prompts)
+    assert (out == out2).all()
+    return out
+
+
+def main():
+    for arch in ("mistral_nemo_12b", "gemma2_9b", "rwkv6_7b", "zamba2_7b"):
+        demo(arch)
+    print("OK — all families serve deterministically.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-parameter MoE LM for a few hundred
+steps on the synthetic pipeline, with checkpoint/restart fault tolerance.
+
+This exercises every substrate at once: model (MoE family — the paper's
+dispatch path in its single-device degenerate form), data pipeline,
+optimizer, FT trainer, checkpointing, straggler ledger.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM, batch_for_model
+from repro.models.api import build_model, param_count
+from repro.optim import adamw, cosine_schedule
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+
+    # ~100M params: 8 layers, d=512, MoE 8e top-2 (kimi-family shrunk)
+    cfg = ModelConfig(
+        name="moe_100m", family="moe",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+        d_ff=2048, vocab=32000,
+        num_experts=8, top_k=2, moe_d_ff=1024, n_shared_experts=1,
+        first_k_dense=1, moe_capacity=2.0,
+        mlp_gated=True, act="silu", tie_embeddings=True,
+    )
+    model = build_model(cfg, dtype=jnp.float32)
+    n_params = param_count(model.init(jax.random.key(0)))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M")
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch, seed=7))
+    opt = adamw(lr=cosine_schedule(3e-4, warmup=20, total=args.steps),
+                weight_decay=0.01)
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=50,
+                         checkpoint_dir=args.ckpt_dir, log_every=20)
+
+    stragglers = []
+    trainer = Trainer(
+        model, opt, lambda s: batch_for_model(cfg, data.batch(s)), tcfg,
+        init_rng=jax.random.key(0),
+        straggler_hook=lambda s, dt: stragglers.append((s, dt)))
+    print(f"starting at step {int(trainer.state.step)} "
+          f"(resume={'yes' if int(trainer.state.step) else 'no'})")
+    t0 = time.monotonic()
+    hist = trainer.run()
+    wall = time.monotonic() - t0
+
+    first = sum(h["loss"] for h in hist[:10]) / max(len(hist[:10]), 1)
+    last = sum(h["loss"] for h in hist[-10:]) / max(len(hist[-10:]), 1)
+    toks = args.batch * args.seq * len(hist)
+    print(f"\nloss {first:.3f} -> {last:.3f} over {len(hist)} steps "
+          f"({wall:.0f}s, {toks/max(wall,1e-9):.0f} tok/s on CPU)")
+    print(f"stragglers flagged: {len(stragglers)}; "
+          f"checkpoints in {args.ckpt_dir}")
+    assert last < first, "loss did not improve"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

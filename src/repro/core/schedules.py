@@ -1,0 +1,324 @@
+"""Executable collective-communication schedules (paper §3.1, §3.2, §5.2).
+
+A *schedule* is a function that drives a :class:`MultiWriteSimulator` to
+perform one collective operation over a :class:`Topology`, producing
+
+- the delivered buffers (for correctness assertions), and
+- the per-link byte ledger (for the latency model).
+
+Schedules implemented (one per paper scheme):
+
+AllGather on a full-mesh split into TP domains (§3.1 / §5.2):
+  * :func:`allgather_baseline`            — intra-domain unicast only
+  * :func:`allgather_unicast_multipath`   — paired relaying, unicast (3 copies
+                                            cross the pair link)
+  * :func:`allgather_multiwrite`          — paired relaying, MultiWrite (ONE
+                                            copy crosses the pair link; the
+                                            relay replicates)
+  * :func:`allgather_full_multipath`      — full multi-path relaying in both
+                                            unicast and multiwrite modes
+
+AlltoAll dispatch on the 2-server oversubscribed cluster (§3.2 / §6.3):
+  * :func:`dispatch_unicast`              — one unicast write per
+                                            (token, destination NPU): k_remote
+                                            redundant copies cross the rail
+  * :func:`dispatch_multiwrite`           — one MultiWrite per token: a single
+                                            copy per remote server crosses the
+                                            rail, replication at the
+                                            same-index relay (§3.2)
+
+Every AllGather schedule takes a ``split`` — the fraction of each fragment
+sent over direct intra-domain links (paper §5.2 step (1): "split ratio is
+dynamically calculated based on the measured bandwidth of both link types").
+:func:`optimal_split` computes the ratio that equalizes path completion
+times, which is what "arrives simultaneously to minimize overall latency"
+requires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .multiwrite import MultiWriteSimulator
+from .topology import Topology, same_index_peer
+
+# Buffer naming convention: AllGather output slot for source ``i`` is
+# ``ag/<i>``; segment suffixes ``/d`` (direct part) and ``/x`` (cross part)
+# keep the two data segments distinct (§5.2 step (1) splits them).
+
+
+def _split_payload(data: np.ndarray, split: float) -> tuple[np.ndarray, np.ndarray]:
+    """Split a 1-D byte payload into (direct, cross) segments."""
+    n = data.shape[0]
+    cut = int(round(n * split))
+    return data[:cut], data[cut:]
+
+
+def partner_of(node: int, domains: Sequence[Sequence[int]]) -> int:
+    """Paired-relaying partner (§3.1): same index in the other domain."""
+    (da, db) = domains
+    if node in da:
+        return db[list(da).index(node)]
+    return da[list(db).index(node)]
+
+
+def domain_of(node: int, domains: Sequence[Sequence[int]]) -> list[int]:
+    for d in domains:
+        if node in d:
+            return list(d)
+    raise ValueError(f"node {node} in no domain")
+
+
+# ---------------------------------------------------------------------------
+# AllGather schedules (§3.1, §5.2)
+# ---------------------------------------------------------------------------
+
+def allgather_baseline(sim: MultiWriteSimulator,
+                       domains: Sequence[Sequence[int]],
+                       payloads: Sequence[np.ndarray]) -> None:
+    """Traditional AllGather: three concurrent unicast writes per node over
+    direct intra-domain links (paper §5.2 baseline workflow, step (2))."""
+    for dom in domains:
+        for src in dom:
+            for dst in dom:
+                if dst == src:
+                    continue
+                sim.write(src, dst, f"ag/{src}", payloads[src], step=0)
+            sim.memory[src][f"ag/{src}"] = np.array(payloads[src])  # local
+
+
+def allgather_unicast_multipath(sim: MultiWriteSimulator,
+                                domains: Sequence[Sequence[int]],
+                                payloads: Sequence[np.ndarray],
+                                split: float = 0.75) -> None:
+    """Paired-relay multipath with *unicast* cross transfers (§3.1).
+
+    Each node sends the direct segment on its intra-domain links and issues
+    one unicast write PER PEER routed through its partner: three identical
+    copies of the cross segment traverse the node->partner link.
+    """
+    for dom in domains:
+        for src in dom:
+            direct, cross = _split_payload(payloads[src], split)
+            peers = [d for d in dom if d != src]
+            for dst in peers:
+                sim.write(src, dst, f"ag/{src}/d", direct, step=0)
+            partner = partner_of(src, domains)
+            # unicast: one write per destination; every copy crosses the
+            # src->partner link, then the partner forwards (store&forward).
+            for dst in peers:
+                sim.write(src, partner, f"relay/{src}/{dst}", cross, step=0)
+                sim.write(partner, dst, f"ag/{src}/x", cross, step=0)
+                # store-and-forward processing at the relay (rx + tx), kept
+                # in the same ledger the MultiWrite recursion feeds:
+                sim.relay_bytes[partner] += 2 * int(cross.nbytes)
+            sim.memory[src][f"ag/{src}/d"] = np.array(direct)
+            sim.memory[src][f"ag/{src}/x"] = np.array(cross)
+
+
+def allgather_multiwrite(sim: MultiWriteSimulator,
+                         domains: Sequence[Sequence[int]],
+                         payloads: Sequence[np.ndarray],
+                         split: float = 0.5) -> None:
+    """Paired-relay multipath with a single cross-TP MultiWrite (§5.2).
+
+    Workflow (paper §5.2 optimized): (1) split each fragment by ``split``;
+    (2) three standard unicast writes intra-domain plus ONE MultiWrite whose
+    destination set is the three peers, first hop forced through the partner
+    (the relay), which replicates — one copy on the bottleneck link.
+    """
+    for dom in domains:
+        for src in dom:
+            direct, cross = _split_payload(payloads[src], split)
+            peers = [d for d in dom if d != src]
+            for dst in peers:
+                sim.write(src, dst, f"ag/{src}/d", direct, step=0)
+            partner = partner_of(src, domains)
+            sim.multiwrite(src, {dst: f"ag/{src}/x" for dst in peers},
+                           cross, step=0, relay=partner)
+            sim.memory[src][f"ag/{src}/d"] = np.array(direct)
+            sim.memory[src][f"ag/{src}/x"] = np.array(cross)
+
+
+def allgather_full_multipath(sim: MultiWriteSimulator,
+                             domains: Sequence[Sequence[int]],
+                             payloads: Sequence[np.ndarray],
+                             split: float,
+                             multicast: bool) -> None:
+    """Full multi-path relaying (§3.1): every node in the opposite domain
+    relays an equal slice of the cross segment.
+
+    unicast mode:   one write per (relay, destination) — three copies of each
+                    slice cross the src->relay link.
+    multicast mode: one MultiWrite per relay — one copy per slice crosses.
+    """
+    for dom in domains:
+        other = [d for d in domains if list(d) != list(dom)][0]
+        for src in dom:
+            direct, cross = _split_payload(payloads[src], split)
+            peers = [d for d in dom if d != src]
+            for dst in peers:
+                sim.write(src, dst, f"ag/{src}/d", direct, step=0)
+            # slice the cross segment over all opposite-domain relays
+            slices = np.array_split(cross, len(other))
+            for ri, relay in enumerate(other):
+                sl = slices[ri]
+                if sl.size == 0:
+                    continue
+                if multicast:
+                    sim.multiwrite(src, {dst: f"ag/{src}/x{ri}" for dst in peers},
+                                   sl, step=0, relay=relay)
+                else:
+                    for dst in peers:
+                        sim.write(src, relay, f"relay/{src}/{dst}/{ri}", sl, step=0)
+                        sim.write(relay, dst, f"ag/{src}/x{ri}", sl, step=0)
+                        sim.relay_bytes[relay] += 2 * int(sl.nbytes)
+            sim.memory[src][f"ag/{src}/d"] = np.array(direct)
+            for ri in range(len(other)):
+                sl = slices[ri]
+                if sl.size:
+                    sim.memory[src][f"ag/{src}/x{ri}"] = np.array(sl)
+
+
+def check_allgather(sim: MultiWriteSimulator,
+                    domains: Sequence[Sequence[int]],
+                    payloads: Sequence[np.ndarray]) -> None:
+    """Assert every node holds every domain-peer's full fragment."""
+    for dom in domains:
+        for node in dom:
+            for src in dom:
+                got = [v for k, v in sorted(sim.memory[node].items())
+                       if k.startswith(f"ag/{src}")]
+                assert got, f"node {node} missing fragment {src}"
+                np.testing.assert_array_equal(np.concatenate(got), payloads[src])
+
+
+# ---------------------------------------------------------------------------
+# AlltoAll dispatch schedules (§3.2, §6.3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRouting:
+    """MoE dispatch routing decisions for one batch.
+
+    token_owner[t]   source NPU of token t
+    token_dests[t]   sorted list of destination NPUs (expert owners) — the
+                     per-token destination SET the bitmap metadata encodes.
+    """
+    token_owner: np.ndarray          # [T] int
+    token_dests: list[list[int]]     # [T][<=k]
+
+
+def make_routing(num_tokens_per_npu: int, num_npus: int, num_experts: int,
+                 top_k: int, seed: int,
+                 experts_per_npu: int | None = None) -> DispatchRouting:
+    """Random balanced top-k routing (paper §6.1: 'expert load balancing is
+    enabled'), experts round-robin across NPUs."""
+    if experts_per_npu is None:
+        experts_per_npu = num_experts // num_npus
+    assert experts_per_npu * num_npus == num_experts
+    rng = np.random.default_rng(seed)
+    owners = np.repeat(np.arange(num_npus), num_tokens_per_npu)
+    dests: list[list[int]] = []
+    for _ in owners:
+        experts = rng.choice(num_experts, size=top_k, replace=False)
+        npus = sorted(set(int(e) // experts_per_npu for e in experts))
+        dests.append(npus)
+    return DispatchRouting(owners, dests)
+
+
+def dispatch_unicast(sim: MultiWriteSimulator, routing: DispatchRouting,
+                     token_bytes: int) -> None:
+    """Baseline dispatch: one unicast write per (token, destination NPU).
+
+    Under the rail-first forwarding table of :func:`two_server_cluster`,
+    each remote-server copy crosses the source's rail link — k_remote
+    redundant copies of the same token on the bottleneck (§3.2, Table 1
+    'w/ redundant').
+    """
+    for t, (src, dests) in enumerate(zip(routing.token_owner, routing.token_dests)):
+        payload = _token_payload(t, token_bytes)
+        for dst in dests:
+            if dst == int(src):
+                sim.memory[dst][f"tok/{t}"] = payload
+            else:
+                sim.write(int(src), dst, f"tok/{t}", payload, step=0)
+
+
+def dispatch_multiwrite(sim: MultiWriteSimulator, routing: DispatchRouting,
+                        token_bytes: int) -> None:
+    """MultiWrite dispatch (§3.2): ONE MultiWrite per token.
+
+    ``partition_by_next_hop`` over the rail-first table groups all
+    destinations on a remote server under the same-index relay, so exactly
+    one copy crosses the rail; the relay replicates intra-server.
+    """
+    for t, (src, dests) in enumerate(zip(routing.token_owner, routing.token_dests)):
+        payload = _token_payload(t, token_bytes)
+        sim.multiwrite(int(src), {d: f"tok/{t}" for d in dests}, payload, step=0)
+
+
+def _token_payload(token_id: int, token_bytes: int) -> np.ndarray:
+    rng = np.random.default_rng(token_id + 1)
+    return rng.integers(0, 256, size=token_bytes, dtype=np.uint8)
+
+
+def check_dispatch(sim: MultiWriteSimulator, routing: DispatchRouting,
+                   token_bytes: int) -> None:
+    """Every destination received exactly its tokens, bit-exact, once."""
+    for t, dests in enumerate(routing.token_dests):
+        expect = _token_payload(t, token_bytes)
+        for d in dests:
+            np.testing.assert_array_equal(sim.memory[d][f"tok/{t}"], expect)
+            assert sim.delivery_count[(d, f"tok/{t}")] <= 1 or \
+                int(routing.token_owner[t]) == d
+    # no token delivered anywhere it was not routed
+    for (node, buf), cnt in sim.delivery_count.items():
+        if buf.startswith("tok/"):
+            t = int(buf.split("/")[1])
+            assert node in routing.token_dests[t], \
+                f"token {t} spuriously delivered to {node}"
+
+
+# ---------------------------------------------------------------------------
+# Optimal split ratios (paper §5.2 step (1))
+# ---------------------------------------------------------------------------
+
+def optimal_split(scheme: str, num_relays: int = 1) -> float:
+    """Fraction of the fragment to send on the direct path so both paths
+    finish simultaneously (per-link serialization, uniform link bw ``w``).
+
+    Derivations (§3.1, fragment size s, TP=4 so 3 peers):
+
+    baseline              direct only                          -> 1.0
+    unicast paired        direct r*s/w  == cross 3(1-r)s/w     -> r = 3/4
+    multiwrite paired     direct r*s/w  == cross (1-r)s/w      -> r = 1/2
+    unicast full          cross link carries 3p + 3p' = 6(1-r)s/4
+                          (3 copies up per relay slice, 3 relayed-in slices)
+                          r = 6(1-r)/4                         -> r = 3/5
+    multiwrite full       cross link carries p + 3p' = 4(1-r)s/4
+                          r = (1-r)                            -> r = 1/2
+    """
+    return {
+        "baseline": 1.0,
+        "unicast_paired": 0.75,
+        "multiwrite_paired": 0.5,
+        "unicast_full": 0.6,
+        "multiwrite_full": 0.5,
+    }[scheme]
+
+
+ALLGATHER_SCHEMES: dict[str, Callable] = {
+    "baseline": lambda sim, dom, pay: allgather_baseline(sim, dom, pay),
+    "unicast_paired": lambda sim, dom, pay: allgather_unicast_multipath(
+        sim, dom, pay, split=optimal_split("unicast_paired")),
+    "multiwrite_paired": lambda sim, dom, pay: allgather_multiwrite(
+        sim, dom, pay, split=optimal_split("multiwrite_paired")),
+    "unicast_full": lambda sim, dom, pay: allgather_full_multipath(
+        sim, dom, pay, split=optimal_split("unicast_full"), multicast=False),
+    "multiwrite_full": lambda sim, dom, pay: allgather_full_multipath(
+        sim, dom, pay, split=optimal_split("multiwrite_full"), multicast=True),
+}

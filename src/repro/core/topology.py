@@ -1,0 +1,251 @@
+"""Topology models for MultiWrite routing and latency analysis.
+
+A :class:`Topology` is a directed multigraph of nodes (accelerators) and
+links, each link with a bandwidth (bytes/s).  It provides the *unicast
+forwarding table* that MultiWrite reuses (paper §4.1: "we fully reuse the
+unicast forwarding table that each node already employs").
+
+Three concrete constructors cover the paper's scenarios plus the TPU target:
+
+- :func:`full_mesh`          — paper §3.1 (8-NPU HCCS full mesh, 56 GB/s links)
+- :func:`two_server_cluster` — paper §3.2 / §6.1 (2 servers x 8 NPUs; HCCS
+                               intra-server full mesh + oversubscribed,
+                               rail-optimized inter-server links)
+- :func:`tpu_pods`           — TPU adaptation: pods of chips with fast
+                               intra-pod ICI and slow inter-pod DCN, used by
+                               the collective layer's cost accounting.
+
+All bandwidths are bytes/second.  Latency modelling lives in
+``latency_model.py``; this module is purely structural.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Iterable, Mapping, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Hardware constants (paper §6.1 + prompt-supplied TPU v5e numbers)
+# ---------------------------------------------------------------------------
+HCCS_LINK_BW = 56e9          # bytes/s, Huawei Cache Coherence System per link
+ROCE_LINK_BW = 200e9 / 8     # 200 Gbps RoCE NIC -> 25 GB/s
+TPU_ICI_LINK_BW = 50e9       # bytes/s per ICI link (prompt constant)
+TPU_DCN_LINK_BW = 6.25e9     # bytes/s per chip inter-pod (50 Gbps class DCN)
+TPU_PEAK_FLOPS = 197e12      # bf16 per chip
+TPU_HBM_BW = 819e9           # bytes/s per chip
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """A directed physical link ``src -> dst`` with bandwidth ``bw`` bytes/s."""
+
+    src: int
+    dst: int
+    bw: float
+
+    @property
+    def key(self) -> tuple[int, int]:
+        return (self.src, self.dst)
+
+
+class Topology:
+    """Directed graph of nodes + links with unicast forwarding tables.
+
+    Forwarding tables are computed by bandwidth-weighted shortest path
+    (Dijkstra on 1/bw edge costs, hop count then node id as tie-breaks) and
+    may be partially overridden by ``fwd_override`` — the paper's
+    "preconfigured mapping rules" (§4.1).  ``next_hop(u, d)`` returns the
+    neighbor ``u`` forwards to for destination ``d`` — exactly the lookup
+    MultiWrite relays perform.
+    """
+
+    def __init__(self, num_nodes: int, links: Iterable[Link],
+                 name: str = "topology",
+                 fwd_override: Mapping[tuple[int, int], int] | None = None,
+                 ) -> None:
+        self.name = name
+        self.num_nodes = int(num_nodes)
+        self.links: dict[tuple[int, int], Link] = {}
+        for ln in links:
+            if not (0 <= ln.src < num_nodes and 0 <= ln.dst < num_nodes):
+                raise ValueError(f"link {ln} out of range for {num_nodes} nodes")
+            if ln.src == ln.dst:
+                raise ValueError(f"self-link {ln}")
+            self.links[ln.key] = ln
+        self._adj: dict[int, list[Link]] = {n: [] for n in range(num_nodes)}
+        for ln in self.links.values():
+            self._adj[ln.src].append(ln)
+        self._fwd: dict[int, dict[int, int]] | None = None
+        self._override = dict(fwd_override or {})
+        for (src, dst), hop in self._override.items():
+            if (src, hop) not in self.links:
+                raise ValueError(
+                    f"fwd_override ({src},{dst})->{hop}: no link {src}->{hop}")
+
+    # -- structural queries -------------------------------------------------
+    def neighbors(self, node: int) -> list[int]:
+        return sorted(ln.dst for ln in self._adj[node])
+
+    def link(self, src: int, dst: int) -> Link:
+        return self.links[(src, dst)]
+
+    def has_link(self, src: int, dst: int) -> bool:
+        return (src, dst) in self.links
+
+    # -- unicast forwarding table (reused by MultiWrite, §4.1) --------------
+    def _build_forwarding(self) -> None:
+        fwd: dict[int, dict[int, int]] = {}
+        for src in range(self.num_nodes):
+            dist: dict[int, tuple[float, int, int]] = {src: (0.0, 0, -1)}
+            first_hop: dict[int, int] = {}
+            pq: list[tuple[float, int, int, int, int]] = [(0.0, 0, -1, src, -1)]
+            seen: set[int] = set()
+            while pq:
+                d, hops, fh_key, u, fh = heapq.heappop(pq)
+                if u in seen:
+                    continue
+                seen.add(u)
+                if u != src:
+                    first_hop[u] = fh
+                for ln in sorted(self._adj[u], key=lambda l: l.dst):
+                    v = ln.dst
+                    if v in seen:
+                        continue
+                    nfh = v if u == src else fh
+                    cand = (d + 1.0 / ln.bw, hops + 1, nfh)
+                    if v not in dist or cand < dist[v]:
+                        dist[v] = cand
+                        heapq.heappush(pq, (*cand, v, nfh))
+            fwd[src] = first_hop
+        self._fwd = fwd
+
+    def next_hop(self, node: int, dest: int) -> int:
+        """Unicast forwarding lookup: from ``node``, first hop toward ``dest``."""
+        if node == dest:
+            raise ValueError("next_hop queried for self")
+        ov = self._override.get((node, dest))
+        if ov is not None:
+            return ov
+        if self._fwd is None:
+            self._build_forwarding()
+        assert self._fwd is not None
+        try:
+            return self._fwd[node][dest]
+        except KeyError as e:
+            raise ValueError(f"no route {node} -> {dest} in {self.name}") from e
+
+    def path(self, src: int, dst: int, max_hops: int = 64) -> list[int]:
+        """Full unicast path src..dst (inclusive), following next_hop."""
+        out = [src]
+        cur = src
+        for _ in range(max_hops):
+            if cur == dst:
+                return out
+            cur = self.next_hop(cur, dst)
+            out.append(cur)
+        raise RuntimeError(f"routing loop {src}->{dst} in {self.name}: {out}")
+
+    def partition_by_next_hop(self, node: int,
+                              dests: Sequence[int]) -> dict[int, list[int]]:
+        """Group a destination set by next hop (paper §4.3.3 rule 3).
+
+        Destinations equal to ``node`` itself are grouped under ``node``
+        (local delivery).  The number of distinct keys excluding ``node`` is
+        the number of packet copies injected on ``node``'s egress links.
+        """
+        groups: dict[int, list[int]] = {}
+        for d in dests:
+            hop = node if d == node else self.next_hop(node, d)
+            groups.setdefault(hop, []).append(d)
+        return groups
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+def full_mesh(num_nodes: int = 8, link_bw: float = HCCS_LINK_BW,
+              name: str = "full_mesh") -> Topology:
+    """Paper §3.1: every node pair has a dedicated bidirectional link."""
+    links = [Link(a, b, link_bw)
+             for a, b in itertools.permutations(range(num_nodes), 2)]
+    return Topology(num_nodes, links, name=name)
+
+
+def split_tp_full_mesh(num_nodes: int = 8, tp: int = 4,
+                       link_bw: float = HCCS_LINK_BW,
+                       ) -> tuple[Topology, list[list[int]]]:
+    """Paper §3.1 experiment config: full mesh split into ``num_nodes//tp``
+    TP domains.  Returns (topology, domains)."""
+    topo = full_mesh(num_nodes, link_bw, name=f"full_mesh_tp{tp}")
+    domains = [list(range(i, i + tp)) for i in range(0, num_nodes, tp)]
+    return topo, domains
+
+
+def two_server_cluster(npus_per_server: int = 8, num_servers: int = 2,
+                       intra_bw: float = HCCS_LINK_BW,
+                       inter_bw: float = ROCE_LINK_BW,
+                       name: str = "two_server") -> Topology:
+    """Paper §3.2/§6.1: full-mesh HCCS inside each server; rail-optimized
+    inter-server RoCE (each NPU's NIC reaches only the same-index NPU on
+    remote servers — the deployment shape the paper's "same-index NPU"
+    relay language describes).
+
+    Cross-server routes are overridden rail-first ("get onto the
+    destination server via your own rail, then hop intra-server"), so that
+    ``partition_by_next_hop`` at a source groups ALL destinations on a
+    remote server under the single same-index peer — one rail crossing per
+    MultiWrite, replication at the relay, exactly §3.2.  Plain unicast
+    dispatch under the same table sends k copies of a token over the same
+    rail, which is the redundant-bottleneck baseline of Table 1.
+    """
+    n = npus_per_server * num_servers
+    links: list[Link] = []
+    override: dict[tuple[int, int], int] = {}
+    for s in range(num_servers):
+        base = s * npus_per_server
+        for a, b in itertools.permutations(range(npus_per_server), 2):
+            links.append(Link(base + a, base + b, intra_bw))
+    for sa in range(num_servers):
+        for sb in range(num_servers):
+            if sa == sb:
+                continue
+            for i in range(npus_per_server):
+                src = sa * npus_per_server + i
+                rail = sb * npus_per_server + i
+                links.append(Link(src, rail, inter_bw))
+                for j in range(npus_per_server):
+                    dst = sb * npus_per_server + j
+                    override[(src, dst)] = rail
+    return Topology(n, links, name=name, fwd_override=override)
+
+
+def tpu_pods(chips_per_pod: int = 16, num_pods: int = 2,
+             ici_bw: float = TPU_ICI_LINK_BW,
+             dcn_bw: float = TPU_DCN_LINK_BW,
+             name: str = "tpu_pods") -> Topology:
+    """TPU adaptation for the collective cost ledger.
+
+    The intra-pod ICI torus is abstracted as a full mesh of per-chip logical
+    paths at one ICI link bandwidth each (XLA pipelines ring collectives
+    across the torus; per-link serialization is what the latency model
+    accounts).  Inter-pod traffic is rail-optimized per chip over DCN at
+    ``dcn_bw`` — the oversubscribed slow axis, the paper's §3.2 shape with
+    pod ≡ server and DCN ≡ RoCE.
+    """
+    return two_server_cluster(npus_per_server=chips_per_pod,
+                              num_servers=num_pods,
+                              intra_bw=ici_bw, inter_bw=dcn_bw, name=name)
+
+
+def server_of(node: int, npus_per_server: int = 8) -> int:
+    return node // npus_per_server
+
+
+def same_index_peer(node: int, dst_server: int,
+                    npus_per_server: int = 8) -> int:
+    """Rail (same-index) peer of ``node`` on ``dst_server`` (§3.2)."""
+    return dst_server * npus_per_server + node % npus_per_server

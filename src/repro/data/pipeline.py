@@ -1,0 +1,109 @@
+"""Deterministic synthetic data pipeline with per-host sharding.
+
+Production shape: an infinite iterator of global batches, deterministic in
+(seed, step) so a restarted job regenerates the exact token stream — the
+property the fault-tolerant trainer's data-skip replay relies on (restore
+at step k => skip k batches bit-exactly, on any host count).
+
+The token stream is a mixture of Zipf-distributed unigrams and repeated
+n-gram motifs, giving a learnable (compressible) distribution so examples
+show loss curves that actually go down, unlike uniform noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    motif_len: int = 8
+    motif_count: int = 64
+    motif_prob: float = 0.5
+
+
+class SyntheticLM:
+    """Deterministic (seed, step) -> batch generator."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # fixed motif bank (part of the "dataset")
+        self.motifs = rng.integers(
+            0, cfg.vocab, size=(cfg.motif_count, cfg.motif_len)
+        ).astype(np.int32)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        p = ranks ** -cfg.zipf_a
+        self.probs = p / p.sum()
+
+    def batch(self, step: int, host_id: int = 0, num_hosts: int = 1):
+        """Batch shard for ``host_id`` at ``step``.  Concatenating all host
+        shards reproduces the global batch regardless of host count."""
+        cfg = self.cfg
+        assert cfg.global_batch % num_hosts == 0
+        per_host = cfg.global_batch // num_hosts
+        rows = []
+        for r in range(host_id * per_host, (host_id + 1) * per_host):
+            rng = np.random.default_rng(
+                (cfg.seed, step, r))           # row-deterministic
+            toks = rng.choice(cfg.vocab, size=cfg.seq_len + 1,
+                              p=self.probs).astype(np.int32)
+            # paste motifs
+            n_paste = rng.binomial(cfg.seq_len // cfg.motif_len,
+                                   cfg.motif_prob)
+            for _ in range(n_paste):
+                m = rng.integers(0, cfg.motif_count)
+                at = rng.integers(0, cfg.seq_len + 1 - cfg.motif_len)
+                toks[at:at + cfg.motif_len] = self.motifs[m]
+            rows.append(toks)
+        arr = np.stack(rows)
+        return {"tokens": arr[:, :-1].copy(),
+                "labels": arr[:, 1:].copy()}
+
+    def iter_batches(self, start_step: int = 0, host_id: int = 0,
+                     num_hosts: int = 1) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch(step, host_id, num_hosts)
+            step += 1
+
+
+def batch_for_model(cfg: ModelConfig, data: dict, rng_seed: int = 0):
+    """Adapt a token batch to the model's input format (stub frontends
+    supply embeddings deterministically derived from the tokens)."""
+    import jax.numpy as jnp
+    toks, labels = data["tokens"], data["labels"]
+    b, s = toks.shape
+    if cfg.family == "encdec":
+        emb = _stub_embed(toks, cfg.d_model)
+        return {"src_embeds": jnp.asarray(emb),
+                "tgt_tokens": jnp.asarray(toks),
+                "labels": jnp.asarray(labels)}
+    if cfg.input_mode == "embeddings":
+        emb = _stub_embed(toks, cfg.d_model)
+        pos = np.broadcast_to(
+            np.arange(s, dtype=np.int32)[None, :, None], (b, s, 3)).copy()
+        return {"embeds": jnp.asarray(emb), "positions": jnp.asarray(pos),
+                "labels": jnp.asarray(labels)}
+    return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+
+def _stub_embed(tokens: np.ndarray, d: int) -> np.ndarray:
+    """Deterministic cheap 'frontend': hash tokens into embeddings.
+    (The real model would run a ViT / speech encoder here — stubbed per
+    the assignment.)"""
+    b, s = tokens.shape
+    base = (tokens[..., None].astype(np.int64) * 2654435761 % 2**31)
+    idx = base + np.arange(d, dtype=np.int64)
+    vals = ((idx * 1103515245 + 12345) % 65536).astype(np.float32)
+    return ((vals / 32768.0) - 1.0) * 0.05

@@ -1,0 +1,261 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: simple, obviously-right
+implementations (per-step scans, dense masked attention, python-loop
+packing semantics) that the kernels' interpret-mode outputs are
+assert_allclose'd against across shape/dtype sweeps in
+tests/test_kernels.py.  They are also what the models fall back to when
+``use_kernels=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None):
+    """Dense masked attention.  q/k/v: [BH, S, D] / [BH, T, D]."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qlen, klen = q.shape[1], k.shape[1]
+    qpos = jnp.arange(qlen)[:, None]
+    kpos = jnp.arange(klen)[None, :]
+    mask = jnp.ones((qlen, klen), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len=None, *, scale=None, softcap=None,
+                         window=None):
+    """Single-token grouped-GQA decode attention over a (possibly
+    partially-filled) KV cache.
+
+    q: [B, H, D]; k/v: [B, T, G, D] (cache layout, H = G*rep — NO
+    materialized kv broadcast, dots accumulate in fp32 from the cache
+    dtype).  kv_len: valid prefix length.  window masks relative to the
+    current position.  Returns [B, H, D] in q.dtype.
+    """
+    b, h, d = q.shape
+    t, g = k.shape[1], k.shape[2]
+    rep = h // g
+    if scale is None:
+        scale = d ** -0.5
+    qg = q.reshape(b, g, rep, d)
+    s = jnp.einsum("bgrd,btgd->bgrt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(t)
+    if kv_len is None:
+        kv_len = t
+    kv_len = jnp.asarray(kv_len)
+    mask = pos < kv_len
+    if window is not None:
+        mask &= pos >= (kv_len - window)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrt,btgd->bgrd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_ref(x, dt, a, b, c, d):
+    """Per-step recurrent oracle.  Shapes as mamba2_scan."""
+    bh, s, dh = x.shape
+    ds = b.shape[-1]
+
+    def head(xh, dth, ah, bh_, ch, dh_):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt * ah)
+            h = decay * h + dtt * jnp.outer(bt, xt)
+            y = ct @ h + dh_ * xt
+            return h, y
+
+        h0 = jnp.zeros((ds, dh), jnp.float32)
+        _, ys = jax.lax.scan(step, h0,
+                             (xh.astype(jnp.float32),
+                              dth.astype(jnp.float32),
+                              bh_.astype(jnp.float32),
+                              ch.astype(jnp.float32)))
+        return ys
+
+    ys = jax.vmap(head)(x, dt, a.astype(jnp.float32), b, c,
+                        d.astype(jnp.float32))
+    return ys.astype(x.dtype)
+
+
+def mamba2_decode_step(h, xt, dtt, a, bt, ct, d):
+    """One decode step: returns (h_new, y_t).  h: [BH, ds, dh]."""
+    decay = jnp.exp(dtt * a)[..., None, None]          # [BH,1,1]
+    h = decay * h + (dtt[..., None] * bt)[..., :, None] * xt[..., None, :]
+    y = jnp.einsum("bs,bsd->bd", ct, h) + d[..., None] * xt
+    return h, y
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+def rwkv6_ref(r, k, v, logw, u):
+    """Per-step recurrent oracle.  Shapes as rwkv6_scan."""
+    bh, s, dk = r.shape
+    dv = v.shape[-1]
+
+    def head(rh, kh, vh, wh, uh):
+        def step(S, inp):
+            rt, kt, vt, lwt = inp
+            y = rt @ (S + uh[:, None] * jnp.outer(kt, vt))
+            S = jnp.exp(lwt)[:, None] * S + jnp.outer(kt, vt)
+            return S, y
+
+        s0 = jnp.zeros((dk, dv), jnp.float32)
+        _, ys = jax.lax.scan(step, s0,
+                             (rh.astype(jnp.float32),
+                              kh.astype(jnp.float32),
+                              vh.astype(jnp.float32),
+                              wh.astype(jnp.float32)))
+        return ys
+
+    ys = jax.vmap(head)(r, k, v, logw, u.astype(jnp.float32))
+    return ys.astype(v.dtype)
+
+
+def rwkv6_decode_step(S, rt, kt, vt, logwt, u):
+    """One decode step.  S: [BH, dk, dv]."""
+    y = jnp.einsum("bk,bkv->bv", rt,
+                   S + (u * kt)[..., :, None] * vt[..., None, :])
+    S = jnp.exp(logwt)[..., :, None] * S + kt[..., :, None] * vt[..., None, :]
+    return S, y
+
+
+# ---------------------------------------------------------------------------
+# chunked jnp twins (same math as the Pallas kernels, with state carry —
+# used by prefill paths that must return the final recurrent state, and as
+# the fast non-Pallas fallback)
+# ---------------------------------------------------------------------------
+
+def mamba2_chunked_jnp(x, dt, a, b, c, d, *, chunk=64, h0=None,
+                       return_final=False):
+    """Chunk-parallel SSD scan in pure jnp.  Shapes as mamba2_scan."""
+    bh, s, dh = x.shape
+    ds = b.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def to_chunks(t):
+        return t.reshape(bh, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, bc, cc = (to_chunks(t.astype(jnp.float32))
+                       for t in (x, dt, b, c))
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        xq, dtq, bq, cq = inp                     # [bh, Q, ...]
+        log_a = dtq * af[:, None]                 # [bh, Q]
+        cum = jnp.cumsum(log_a, axis=1)
+        ii = jnp.arange(chunk)
+        tri = ii[:, None] >= ii[None, :]
+        sqq = jnp.einsum("bqs,bks->bqk", cq, bq)
+        decay = jnp.where(tri[None], jnp.exp(cum[:, :, None]
+                                             - cum[:, None, :]), 0.0)
+        y = jnp.einsum("bqk,bkd->bqd", sqq * decay * dtq[:, None, :], xq)
+        y += jnp.exp(cum)[..., None] * jnp.einsum("bqs,bsd->bqd", cq, h)
+        total = cum[:, -1]
+        w = jnp.exp(total[:, None] - cum) * dtq
+        h = (jnp.exp(total)[:, None, None] * h
+             + jnp.einsum("bqs,bqd->bsd", bq * w[..., None], xq))
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((bh, ds, dh), jnp.float32)
+    hf, ys = jax.lax.scan(step, h0, (xc, dtc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(bh, -1, dh)[:, :s]
+    y = y + (d.astype(jnp.float32)[:, None, None]
+             * x[:, :s].astype(jnp.float32))
+    y = y.astype(x.dtype)
+    return (y, hf) if return_final else y
+
+
+def rwkv6_chunked_jnp(r, k, v, logw, u, *, chunk=32, s0=None,
+                      return_final=False):
+    """Chunk-parallel RWKV6 scan in pure jnp.  Shapes as rwkv6_scan."""
+    bh, s, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0)))
+    nc = r.shape[1] // chunk
+
+    def to_chunks(t):
+        return t.reshape(bh, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    rc, kc, vc, wc = (to_chunks(t.astype(jnp.float32))
+                      for t in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rq, kq, vq, wq = inp                      # [bh, Q, ...]
+        cum = jnp.cumsum(wq, axis=1)
+        cum_prev = cum - wq
+        r_s = rq * jnp.exp(cum_prev)
+        k_s = kq * jnp.exp(-cum)
+        att = jnp.einsum("bqk,bsk->bqs", r_s, k_s)
+        ii = jnp.arange(chunk)
+        att = jnp.where((ii[:, None] > ii[None, :])[None], att, 0.0)
+        bonus = jnp.einsum("bqk,bqk->bq", rq * uf[:, None], kq)
+        y = jnp.einsum("bqs,bsv->bqv", att, vq) + bonus[..., None] * vq
+        y += jnp.einsum("bqk,bkv->bqv", r_s, S)
+        p_last = jnp.exp(cum[:, -1])
+        k_up = kq * jnp.exp(cum[:, -1][:, None] - cum)
+        S = p_last[..., None] * S + jnp.einsum("bqk,bqv->bkv", k_up, vq)
+        return S, y
+
+    if s0 is None:
+        s0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    sf, ys = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    y = ys.swapaxes(0, 1).reshape(bh, -1, dv)[:, :s].astype(v.dtype)
+    return (y, sf) if return_final else y
+
+
+# ---------------------------------------------------------------------------
+# dispatch pack
+# ---------------------------------------------------------------------------
+
+def pack_ref(tokens, bitmap, valid, num_dests, capacity):
+    """jnp oracle == core.collectives.pack_by_bitmap (shared semantics)."""
+    from repro.core.collectives import pack_by_bitmap
+    return pack_by_bitmap(tokens, bitmap, valid, num_dests, capacity)

@@ -1,0 +1,180 @@
+"""Parse compiled (SPMD) HLO text for collective byte accounting.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+collective term comes from here: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute call site is parsed for
+its (per-device, post-SPMD) shapes and its replica groups, wire bytes are
+estimated with standard ring/pairwise factors, and each op is attributed
+to the slowest mesh axis its groups span (the paper's bottleneck-link
+view, §3.3):
+
+  pod    groups span multiple pods          -> crosses DCN
+  data   single pod, multiple data rows     -> intra-pod ICI
+  model  single data row                    -> intra-pod ICI
+
+Wire-byte model (per device, per op):
+  all-gather      out_bytes * (g-1)/g          (ring)
+  reduce-scatter  in_bytes  * (g-1)/g  = out_bytes*(g-1)
+  all-reduce      2 * bytes * (g-1)/g          (ring RS+AG)
+  all-to-all      bytes * (g-1)/g
+  collective-permute  bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACED = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?")
+_SOURCE_TARGET = re.compile(
+    r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+def _parse_shapes(text: str) -> list[tuple[str, list[int]]]:
+    """All dtype[dims] shapes in a type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dtype, shape))
+    return out
+
+
+def _shape_bytes(shapes) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        total += DTYPE_BYTES[dtype] * math.prod(dims) if dims else \
+            DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_groups(line: str):
+    """Returns list of device-id groups, or None."""
+    m = _GROUPS_BRACED.search(line)
+    if m:
+        groups = []
+        for g in re.findall(r"\{([^}]*)\}", m.group(1)):
+            ids = [int(x) for x in g.split(",") if x.strip()]
+            if ids:
+                groups.append(ids)
+        return groups or None
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        ng, sz = int(m.group(1)), int(m.group(2))
+        reshape_dims = [int(x) for x in m.group(3).split(",")]
+        n = math.prod(reshape_dims)
+        ids = list(range(n))
+        if m.group(5):      # transpose permutation
+            perm = [int(x) for x in m.group(5).split(",")]
+            import numpy as np
+            arr = np.arange(n).reshape(reshape_dims).transpose(perm).reshape(-1)
+            ids = arr.tolist()
+        return [ids[i * sz:(i + 1) * sz] for i in range(ng)]
+    m = _SOURCE_TARGET.search(line)
+    if m:
+        pairs = re.findall(r"\{(\d+),(\d+)\}", "{" + m.group(1) + "}")
+        return [[int(a), int(b)] for a, b in pairs] or None
+    return None
+
+
+@dataclasses.dataclass
+class MeshLayout:
+    """Row-major device-id layout of the mesh axes."""
+    axes: tuple          # e.g. ("pod", "data", "model")
+    sizes: tuple         # e.g. (2, 16, 16)
+
+    def coords(self, dev: int):
+        out = []
+        rem = dev
+        for s in reversed(self.sizes):
+            out.append(rem % s)
+            rem //= s
+        return tuple(reversed(out))
+
+    def classify(self, group: list[int]) -> str:
+        """Slowest axis this group spans."""
+        coords = [self.coords(d) for d in group]
+        for i, ax in enumerate(self.axes):     # axes ordered slow->fast
+            if len({c[i] for c in coords}) > 1:
+                return ax
+        return self.axes[-1]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: list                      # per-op dicts
+    bytes_by_axis: dict            # axis -> wire bytes per device
+    bytes_by_kind: dict
+
+    def total(self) -> int:
+        return sum(self.bytes_by_axis.values())
+
+
+def analyze_collectives(hlo_text: str, layout: MeshLayout,
+                        default_axis: str = "model") -> CollectiveStats:
+    ops = []
+    by_axis = defaultdict(int)
+    by_kind = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for k in COLLECTIVE_OPS:
+            # match op name at the instruction position: "= <type> opname("
+            if f" {k}(" in stripped or f" {k}-start(" in stripped:
+                kind = k
+                break
+        if kind is None:
+            continue
+        if stripped.startswith("ROOT"):
+            stripped = stripped[5:]
+        # output type(s): between '=' and the op name
+        try:
+            lhs, rhs = stripped.split("=", 1)
+        except ValueError:
+            continue
+        type_str = rhs.split(kind)[0]
+        shapes = _parse_shapes(type_str)
+        if not shapes:
+            continue
+        out_bytes = _shape_bytes(shapes)
+        groups = _parse_groups(stripped)
+        if groups:
+            g = max(len(gr) for gr in groups)
+            axis = layout.classify(max(groups, key=len))
+        else:
+            g = 2
+            axis = default_axis
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            wire = out_bytes * (g - 1) // g
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (g - 1)
+        elif kind == "all-reduce":
+            wire = 2 * out_bytes * (g - 1) // g
+        elif kind == "all-to-all":
+            wire = out_bytes * (g - 1) // g
+        else:  # collective-permute
+            wire = out_bytes
+        ops.append({"kind": kind, "bytes": out_bytes, "wire": wire,
+                    "group_size": g, "axis": axis})
+        by_axis[axis] += wire
+        by_kind[kind] += wire
+    return CollectiveStats(ops=ops, bytes_by_axis=dict(by_axis),
+                           bytes_by_kind=dict(by_kind))

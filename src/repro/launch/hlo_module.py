@@ -1,0 +1,489 @@
+"""Optimized-HLO module parser with loop-multiplicity-aware costing.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts a ``while``
+body ONCE regardless of trip count — fatal for scanned-layer models (a
+40-layer scan under-reports by 40x).  This module re-derives the roofline
+inputs directly from the optimized HLO text, weighting every computation
+by the product of enclosing loop trip counts (parsed from the while op's
+``backend_config known_trip_count``, falling back to the condition's
+``compare(counter, constant(N)) direction=LT``):
+
+  * FLOPs      — 2*M*N*K per dot (operand shapes + contracting dims),
+                 counted in every reachable computation;
+  * HBM bytes  — per instruction in EXECUTION computations (entry, while
+                 bodies, called branches): output + operand bytes.
+                 Instructions inside fusion/reduce-lambda computations are
+                 fused — no standalone HBM traffic.  Post-fusion HLO
+                 granularity == XLA's own traffic model;
+  * collective wire bytes per mesh axis (ring/pairwise factors), including
+    collectives inside scanned bodies.
+
+Validated against cost_analysis on non-looped programs in
+tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+from repro.launch.hlo_analysis import (
+    COLLECTIVE_OPS, DTYPE_BYTES, MeshLayout, _parse_groups)
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPND = re.compile(r"%([\w.\-]+)")
+_TRIP_BC = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+_CONSTANT_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+            "constant", "after-all", "iota", "while", "optimization-barrier",
+            "partition-id", "replica-id"}
+
+# ops whose to_apply/calls computations are scalar lambdas or fused bodies:
+# their internals produce no standalone HBM traffic
+_LAMBDA_CALLERS = {"fusion", "reduce", "scatter", "sort", "map",
+                   "reduce-window", "select-and-scatter", "all-reduce",
+                   "reduce-scatter"}
+
+
+def _shapes_in(text: str):
+    out = []
+    for m in _SHAPE.finditer(text):
+        if m.group(1) in DTYPE_BYTES:
+            dims = [int(d) for d in m.group(2).split(",") if d] \
+                if m.group(2) else []
+            out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    return sum(DTYPE_BYTES[d] * (math.prod(s) if s else 1)
+               for d, s in shapes)
+
+
+def _split_type_op(rhs: str):
+    """rhs = '<type> <opname>(<args>), <attrs>'.  Types may be tuples
+    '(f32[..], s32[])'.  Returns (type_str, opname, rest_after_paren)."""
+    s = rhs.lstrip()
+    if s.startswith("("):                 # tuple type: skip balanced parens
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = s[:i + 1]
+                    rest = s[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        # type ends at the last space before the first '('
+        paren = s.find("(")
+        if paren <= 0:
+            return None
+        type_str = s[:paren].rsplit(None, 1)[0] if " " in s[:paren] else ""
+        rest = s[len(type_str):].lstrip()
+    paren = rest.find("(")
+    if paren <= 0:
+        return None
+    op = rest[:paren].strip().strip("%")
+    if not op or not re.fullmatch(r"[\w\-]+", op):
+        return None
+    return type_str, op, rest[paren:]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rhs: str
+    op: str
+    out_shapes: list
+    operands: list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    symbols: dict
+
+
+def parse_module(text: str):
+    comps: dict[str, Computation] = {}
+    fused_names: set[str] = set()
+    entry_name = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        ls = line.strip()
+        if not ls:
+            continue
+        if ls.endswith("{") and "->" in ls:
+            m = _COMP_HDR.match(ls)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry_name = cur.name
+                continue
+        if ls == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(ls)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        parsed = _split_type_op(rhs)
+        if parsed is None:
+            continue
+        type_str, op, args = parsed
+        out_shapes = _shapes_in(type_str)
+        # operands: %refs inside the first balanced arg parens
+        depth = 0
+        end = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPND.findall(args[:end + 1])
+        attrs = args[end + 1:]
+        # mark lambda/fusion-called computations
+        if op in _LAMBDA_CALLERS:
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", attrs):
+                fused_names.add(cm.group(1))
+        ins = Instr(name, rhs, op, out_shapes, operands)
+        cur.instrs.append(ins)
+        cur.symbols[name] = out_shapes
+    return comps, fused_names, entry_name
+
+
+def _while_parts(ins: Instr):
+    bm = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+    cm = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+    tm = _TRIP_BC.search(ins.rhs)
+    return (bm.group(1) if bm else None, cm.group(1) if cm else None,
+            int(tm.group(1)) if tm else None)
+
+
+def _trip_from_cond(cond: Computation) -> int:
+    bound = None
+    for ins in cond.instrs:
+        m = _CONSTANT_S32.search(ins.rhs)
+        if m:
+            bound = int(m.group(1))
+    return bound or 1
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    hbm_bytes: float
+    collective_by_axis: dict
+    collective_by_kind: dict
+    collective_ops: int
+    loops: dict
+    hbm_tagged: dict = dataclasses.field(default_factory=dict)
+    # ^ bytes attributed to source regions by metadata op_name match —
+    #   used to discount intermediates a Pallas kernel keeps in VMEM
+    #   (flash scores, scan chunk matrices) from the TPU-target roofline.
+
+    @property
+    def collective_total(self):
+        return sum(self.collective_by_axis.values())
+
+
+# HLO metadata op_name patterns whose fusion traffic a fused TPU kernel
+# would keep in VMEM (tag -> regex).  Transformed (bwd/remat) ops resolve
+# only to the CALLER frame, so caller names are included; the discount is
+# applied to fusion/copy ops only — dot products (the MXU work, whose
+# operands a kernel does stream) remain fully counted (conservative).
+VMEM_TAGS = {
+    "flash_intermediate": re.compile(
+        r"flash_attention_jnp|decode_attention_ref|_cross_attention"
+        r"|(?:^|[ .])attention\b"),
+    "scan_chunk_intermediate": re.compile(
+        r"mamba2_chunked_jnp|rwkv6_chunked_jnp|mamba2_block|time_mix"),
+}
+_VMEM_DISCOUNT_OPS = {"fusion", "copy", "select", "broadcast", "transpose",
+                      "convert", "compare", "reduce", "exponential"}
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+_FRAME_ID_RE = re.compile(r"stack_frame_id=(\d+)")
+
+
+def parse_stack_tables(text: str):
+    """Parse the FunctionNames / FileLocations / StackFrames prelude into
+    frame_id -> set of python function names in the frame's ancestor chain.
+    """
+    fn_names: dict[int, str] = {}
+    floc_fn: dict[int, int] = {}
+    frames: dict[int, tuple[int, int]] = {}   # id -> (file_loc, parent)
+    section = None
+    for line in text.splitlines():
+        ls = line.strip()
+        if ls in ("FunctionNames", "FileLocations", "StackFrames",
+                  "FileNames"):
+            section = ls
+            continue
+        if not ls or ls.startswith(("HloModule", "%", "ENTRY", "}")):
+            if ls and not ls[0].isdigit():
+                section = None
+            continue
+        if section == "FunctionNames":
+            m = re.match(r'(\d+)\s+"(.*)"', ls)
+            if m:
+                fn_names[int(m.group(1))] = m.group(2)
+        elif section == "FileLocations":
+            m = re.match(r"(\d+)\s+\{.*function_name_id=(\d+)", ls)
+            if m:
+                floc_fn[int(m.group(1))] = int(m.group(2))
+        elif section == "StackFrames":
+            m = re.match(
+                r"(\d+)\s+\{file_location_id=(\d+)"
+                r"(?:\s+parent_frame_id=(\d+))?", ls)
+            if m:
+                frames[int(m.group(1))] = (int(m.group(2)),
+                                           int(m.group(3) or 0))
+    resolved: dict[int, set] = {}
+
+    def chain(fid: int, depth=0) -> set:
+        if fid in resolved:
+            return resolved[fid]
+        if fid not in frames or depth > 64:
+            return set()
+        floc, parent = frames[fid]
+        names = set()
+        fn_id = floc_fn.get(floc)
+        if fn_id is not None and fn_id in fn_names:
+            names.add(fn_names[fn_id])
+        if parent and parent != fid:
+            names |= chain(parent, depth + 1)
+        resolved[fid] = names
+        return names
+
+    for fid in list(frames):
+        chain(fid)
+    return resolved
+
+
+def analyze_module(text: str, layout: MeshLayout,
+                   default_axis: str = "model",
+                   collect_rows: list | None = None,
+                   vmem_elem_counts: set | None = None) -> ModuleCost:
+    """collect_rows: optional list to append (weighted_bytes, mult, op,
+    name, out_bytes, comp) per instruction — the debug_bytes view.
+
+    vmem_elem_counts: element counts of kernel-resident intermediates
+    (flash score blocks, scan chunk matrices).  Fusion metadata picks an
+    arbitrary representative source op, so SHAPE is the reliable
+    discriminator: any discountable op whose output element count matches
+    is tagged "shape_vmem"."""
+    comps, fused_names, entry_name = parse_module(text)
+    if entry_name is None:
+        return ModuleCost(0, 0, {}, {}, 0, {})
+    vmem_elem_counts = vmem_elem_counts or set()
+
+    mult: dict[str, float] = defaultdict(float)
+    loops: dict[str, float] = {}
+
+    def visit(cname: str, m: float, stack: tuple):
+        if cname in stack or cname not in comps:
+            return
+        mult[cname] += m
+        comp = comps[cname]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body, cond, trip = _while_parts(ins)
+                if trip is None and cond in comps:
+                    trip = _trip_from_cond(comps[cond])
+                trip = trip or 1
+                loops[ins.name] = trip
+                if body:
+                    visit(body, m * trip, stack + (cname,))
+            elif ins.op in ("call", "conditional", "async-start"):
+                for cm in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                                      ins.rhs):
+                    visit(cm.group(1), m, stack + (cname,))
+            elif ins.op in _LAMBDA_CALLERS:
+                for cm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                      ins.rhs):
+                    visit(cm.group(1), m, stack + (cname,))
+
+    visit(entry_name, 1.0, ())
+
+    flops = 0.0
+    hbm = 0.0
+    by_axis = defaultdict(float)
+    by_kind = defaultdict(float)
+    hbm_tagged = defaultdict(float)
+    frames = parse_stack_tables(text)
+    n_coll = 0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        fused = cname in fused_names
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, comp.symbols)
+            if fused:
+                continue
+            if ins.op in FREE_OPS:
+                continue
+            out_b = _nbytes(ins.out_shapes)
+            base_kind = ins.op.replace("-start", "")
+            if base_kind in COLLECTIVE_OPS:
+                n_coll += 1
+                wire, axis = _collective_wire(ins, layout, default_axis)
+                by_axis[axis] += m * wire
+                by_kind[base_kind] += m * wire
+                hbm += m * out_b
+                continue
+            if ins.op.endswith("-done") or ins.op == "copy-done":
+                continue
+            if ins.op in ("dynamic-slice", "gather"):
+                # reads only the sliced window (= output); the consumer's
+                # operand accounting covers the second touch
+                cost = m * out_b
+            elif ins.op in ("dynamic-update-slice", "scatter") or (
+                    ins.op == "fusion"
+                    and "dynamic-update-slice" in ins.name):
+                # in-place window write (TPU aliases the buffer): traffic =
+                # the non-aliased operands twice (read update, write
+                # window); operand reads are window-aware (gather rows)
+                if ins.op == "fusion":
+                    opnds = sorted(_fusion_operand_list(ins, comp, comps),
+                                   reverse=True)
+                else:
+                    opnds = sorted((_nbytes(comp.symbols.get(o, []))
+                                    for o in ins.operands), reverse=True)
+                small = sum(opnds[1:]) if len(opnds) > 1 else out_b
+                cost = m * 2 * min(small, out_b)
+            else:
+                if ins.op == "fusion":
+                    opnd_b = _fusion_operand_bytes(ins, comp, comps)
+                else:
+                    opnd_b = sum(_nbytes(comp.symbols.get(o, []))
+                                 for o in ins.operands)
+                cost = m * (out_b + opnd_b)
+            hbm += cost
+            if ins.op in _VMEM_DISCOUNT_OPS:
+                out_elems = sum(math.prod(s) if s else 1
+                                for _, s in ins.out_shapes)
+                if out_elems in vmem_elem_counts:
+                    hbm_tagged["shape_vmem"] += cost
+                else:
+                    fid_m = _FRAME_ID_RE.search(ins.rhs)
+                    if fid_m:
+                        names = frames.get(int(fid_m.group(1)), ())
+                        if names:
+                            joined = " ".join(names)
+                            for tag, rx in VMEM_TAGS.items():
+                                if rx.search(joined):
+                                    hbm_tagged[tag] += cost
+                                    break
+            if collect_rows is not None:
+                collect_rows.append((cost, m, ins.op, ins.name, out_b,
+                                     cname))
+    return ModuleCost(flops=flops, hbm_bytes=hbm,
+                      collective_by_axis=dict(by_axis),
+                      collective_by_kind=dict(by_kind),
+                      collective_ops=n_coll, loops=loops,
+                      hbm_tagged=dict(hbm_tagged))
+
+
+def _fusion_operand_bytes(ins: Instr, comp: Computation,
+                          comps: dict) -> float:
+    return sum(_fusion_operand_list(ins, comp, comps))
+
+
+def _fusion_operand_list(ins: Instr, comp: Computation,
+                         comps: dict) -> list:
+    """Window-aware read bytes per fusion operand.  An operand whose
+    in-fusion consumer is a (dynamic-)slice is read only through the
+    sliced window (layer-sliced stacked weights, gather rows!); everything
+    else reads fully."""
+    fm = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+    fused = comps.get(fm.group(1)) if fm else None
+    windows: dict[int, int] = {}
+    if fused is not None:
+        pidx: dict[str, int] = {}
+        for fins in fused.instrs:
+            if fins.op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", fins.rhs)
+                if pm:
+                    pidx[fins.name] = int(pm.group(1))
+        passthrough = {"convert", "bitcast", "copy", "transpose", "reshape"}
+        for pname, pi in pidx.items():
+            # follow single-operand elementwise chains to a slice:
+            # convert(param) -> slice(...) reads only the window
+            cur = {pname}
+            for _ in range(6):
+                nxt = set()
+                for fins in fused.instrs:
+                    if fins.operands and fins.operands[0] in cur:
+                        if fins.op in ("slice", "dynamic-slice"):
+                            w = _nbytes(fins.out_shapes)
+                            windows[pi] = min(windows.get(pi, w), w)
+                        elif fins.op in passthrough:
+                            nxt.add(fins.name)
+                if pi in windows or not nxt:
+                    break
+                cur = nxt
+    out = []
+    for i, o in enumerate(ins.operands):
+        full = _nbytes(comp.symbols.get(o, []))
+        out.append(min(windows[i], full) if i in windows else full)
+    return out
+
+
+def _dot_flops(ins: Instr, symbols: dict) -> float:
+    out_elems = sum(math.prod(s) if s else 1 for _, s in ins.out_shapes)
+    if not ins.operands:
+        return 0.0
+    lhs = symbols.get(ins.operands[0])
+    if not lhs:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+    k = 1
+    if m and lhs:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        shape = lhs[0][1]
+        for d in dims:
+            if d < len(shape):
+                k *= shape[d]
+    return 2.0 * out_elems * k
+
+
+def _collective_wire(ins: Instr, layout: MeshLayout, default_axis: str):
+    out_b = _nbytes(ins.out_shapes)
+    groups = _parse_groups(ins.rhs)
+    kind = ins.op.replace("-start", "")
+    if groups:
+        g = max(len(gr) for gr in groups)
+        axis = layout.classify(max(groups, key=len))
+    else:
+        g, axis = 2, default_axis
+    if g <= 1:
+        return 0.0, axis
+    if kind == "all-gather":
+        wire = out_b * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = out_b * (g - 1)
+    elif kind == "all-reduce":
+        wire = 2 * out_b * (g - 1) / g
+    elif kind == "all-to-all":
+        wire = out_b * (g - 1) / g
+    else:
+        wire = out_b
+    return wire, axis

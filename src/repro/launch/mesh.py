@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state):
+
+  single-pod:  (16, 16)      axes ("data", "model")        = 256 chips
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+Axis roles: see :mod:`repro.parallel.context`.  The dry-run launcher
+forces 512 host devices via XLA_FLAGS before any jax import; everything
+else (tests, benches) sees the real device count.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.parallel.context import ParallelContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_pctx(*, multi_pod: bool = False, **kw) -> ParallelContext:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return ParallelContext(mesh=mesh,
+                           pod_axis="pod" if multi_pod else None, **kw)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for multi-device CPU tests (device count must match)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

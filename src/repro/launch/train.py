@@ -1,0 +1,87 @@
+"""Training launcher.
+
+Local (real devices, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch mistral_nemo_12b \
+      --smoke --steps 50
+
+Production (multi-host TPU; this process shape is what you'd launch per
+host — jax.distributed.initialize is invoked when JAX_COORDINATOR is set):
+  python -m repro.launch.train --arch kimi_k2_1t --shape train_4k \
+      --multi-pod --ckpt-dir gs://...
+
+The mesh is the production (16,16) / (2,16,16) layout from launch/mesh.py;
+parallelism knobs (moe scheme, remat, SP, FSDP) come from --variant, same
+names as the dry-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny batch on local devices")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="mw")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO)
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()          # multi-host entry
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM, batch_for_model
+    from repro.models.api import build_model
+    from repro.optim import adamw, cosine_schedule
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+        pctx = None
+        batch, seq = 4, 64
+    else:
+        from repro.launch.dryrun import VARIANTS
+        from repro.launch.mesh import make_pctx
+        pctx = make_pctx(multi_pod=args.multi_pod,
+                         **VARIANTS[args.variant])
+        shape = SHAPES[args.shape]
+        batch, seq = shape.global_batch, shape.seq_len
+
+    model = build_model(cfg, pctx,
+                        dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch, seed=args.seed))
+    opt = adamw(lr=cosine_schedule(args.lr, warmup=min(100, args.steps // 10
+                                                       or 1),
+                                   total=args.steps), weight_decay=0.01)
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         checkpoint_every=args.ckpt_every,
+                         checkpoint_dir=args.ckpt_dir, log_every=10)
+    trainer = Trainer(model, opt,
+                      lambda s: batch_for_model(cfg, data.batch(s)),
+                      tcfg, init_rng=jax.random.key(args.seed))
+    hist = trainer.run()
+    if hist:
+        print(f"final loss {hist[-1]['loss']:.4f} over {len(hist)} steps; "
+              f"straggler events: {len(trainer.ledger.events)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

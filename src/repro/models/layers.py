@@ -1,0 +1,390 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, MLPs, GQA attention, caches.
+
+Pure-functional: params are nested dicts of jnp arrays; every layer is a
+``(params, x, ...) -> y`` function plus an ``init_*`` constructor.  Compute
+dtype is the input dtype (bf16 in production configs); params are stored
+in fp32 and cast at use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.parallel.context import shard
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d):
+    return {"w": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + p["w"])).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=1e4,
+               mrope_sections: Optional[tuple] = None):
+    """Rotary embedding.
+
+    x: [B, S, H, D]; positions: [B, S] int — or [B, S, 3] when
+    ``mrope_sections`` is given (qwen2-vl M-RoPE: the head-dim halves are
+    split into (t, h, w) sections, each rotated by its own position id).
+    """
+    b, s, h, d = x.shape
+    inv = rope_freqs(d, theta)                               # [d/2]
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv  # [B,S,d/2]
+    else:
+        assert sum(mrope_sections) == d // 2, (mrope_sections, d)
+        parts = []
+        off = 0
+        for sec_i, sec in enumerate(mrope_sections):
+            p = positions[..., sec_i].astype(jnp.float32)    # [B,S]
+            parts.append(p[..., None] * inv[off:off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)                # [B,S,d/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# streaming (flash) attention in pure jnp — the scan-friendly production
+# fallback; supports TRACED window sizes (gemma2 alternating layers under
+# lax.scan).  Oracle-equivalent to kernels/ref.attention_ref.
+# ---------------------------------------------------------------------------
+
+def flash_attention_jnp(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None, block_k=1024):
+    """GQA-aware streaming attention.
+
+    q: [B, H, S, D]; k/v: [B, G, T, D] with H = G * rep (grouped heads —
+    NO materialized kv broadcast).  Dots run on the input dtype with fp32
+    accumulation (``preferred_element_type``) — no fp32 copies of q/k/v.
+    window may be a traced scalar.  Returns [B, H, S, D] in q.dtype.
+    """
+    b, h, sq, d = q.shape
+    g, t = k.shape[1], k.shape[2]
+    rep = h // g
+    qg = q.reshape(b, g, rep, sq, d)
+    if scale is None:
+        scale = d ** -0.5
+    block_k = min(block_k, t)
+    nb = (t + block_k - 1) // block_k
+    pad = nb * block_k - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, g, nb, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, g, nb, block_k, d).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, bi = inp
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = bi * block_k + jnp.arange(block_k)
+        mask = kpos[None, :] < t
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bgkd->bgrqd", p.astype(q.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, g, rep, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, g, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, rep, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kb, vb, jnp.arange(nb)))
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None],
+                    0.0)
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+
+
+def init_attention(key, dims: AttnDims):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, g, dh = dims.d_model, dims.n_heads, dims.n_kv, dims.d_head
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "wq": truncated_normal(kq, (d, h * dh), sc),
+        "wk": truncated_normal(kk, (d, g * dh), sc),
+        "wv": truncated_normal(kv, (d, g * dh), sc),
+        "wo": truncated_normal(ko, (h * dh, d), 1.0 / math.sqrt(h * dh)),
+    }
+
+
+def attention_specs(pctx, fsdp: bool):
+    """PartitionSpecs matching init_attention params (col/col/col/row TP)."""
+    from jax.sharding import PartitionSpec as P
+    fs = pctx.data_axis if fsdp else None
+    return {"wq": P(fs, pctx.model_axis), "wk": P(fs, pctx.model_axis),
+            "wv": P(fs, pctx.model_axis), "wo": P(pctx.model_axis, fs)}
+
+
+def attention(p, x, positions, dims: AttnDims, pctx, *, causal=True,
+              window=None, softcap=None, rope_theta=1e4, mrope=None,
+              use_pallas=False, return_kv=False):
+    """Training/prefill attention.  x: [B, S, D]."""
+    b, s, d = x.shape
+    h, g, dh = dims.n_heads, dims.n_kv, dims.d_head
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, dh)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, g, dh)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, g, dh)
+    q = apply_rope(q, positions, rope_theta, mrope)
+    k = apply_rope(k, positions, rope_theta, mrope)
+    kv = (k, v) if return_kv else None
+    if pctx is not None:
+        # Megatron GQA sharding: q heads over model; kv heads over model
+        # only when divisible, else REPLICATED (g < tp).  Without the
+        # explicit kv constraint the partitioner ping-pongs between
+        # (g-split, d-split) layouts fwd vs bwd and re-gathers the full
+        # fp32 score tensor every kv block (8 GiB x 240 on kimi-k2).
+        q = shard(q, pctx, pctx.dp_axes, None, pctx.model_axis, None)
+        g_ax = (pctx.model_axis if g % pctx.model_size == 0 else None)
+        k = shard(k, pctx, pctx.dp_axes, None, g_ax, None)
+        v = shard(v, pctx, pctx.dp_axes, None, g_ax, None)
+    qt = q.transpose(0, 2, 1, 3)            # [B, H, S, dh]
+    kt = k.transpose(0, 2, 1, 3)            # [B, G, S, dh]
+    vt = v.transpose(0, 2, 1, 3)
+    if use_pallas and (window is None or isinstance(window, int)):
+        rep = h // g
+        kx = jnp.repeat(kt, rep, axis=1)    # kernel path takes matched heads
+        vx = jnp.repeat(vt, rep, axis=1)
+        o = ops.flash_attention(
+            qt.reshape(b * h, s, dh), kx.reshape(b * h, s, dh),
+            vx.reshape(b * h, s, dh), causal=causal, window=window,
+            softcap=softcap).reshape(b, h, s, dh)
+    else:
+        o = flash_attention_jnp(qt, kt, vt, causal=causal, window=window,
+                                softcap=softcap)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    out = o @ p["wo"].astype(dt)
+    if pctx is not None:
+        out = shard(out, pctx, pctx.dp_axes, None, None)
+    return (out, kv) if return_kv else out
+
+
+def decode_attention_block(p, x, cache_k, cache_v, cur_len, dims: AttnDims,
+                           pctx, *, window=None, softcap=None,
+                           rope_theta=1e4, mrope=None):
+    """Single-token decode.  x: [B, 1, D]; cache_[kv]: [B, Smax, g, dh];
+    cur_len: scalar int (tokens already in cache).  Returns
+    (out [B,1,D], cache_k, cache_v updated)."""
+    b, _, d = x.shape
+    h, g, dh = dims.n_heads, dims.n_kv, dims.d_head
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, 1, h, dh)
+    k = (x @ p["wk"].astype(dt)).reshape(b, 1, g, dh)
+    v = (x @ p["wv"].astype(dt)).reshape(b, 1, g, dh)
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    if mrope is not None:
+        pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+    q = apply_rope(q, pos, rope_theta, mrope)
+    k = apply_rope(k, pos, rope_theta, mrope)
+    if pctx is not None:
+        # flash-decoding style: KV length sharded over model (cache spec);
+        # the single-token q is tiny — replicate it over model so the
+        # score einsum contracts against the length-sharded cache without
+        # a batch reshard (softmax over the sharded length reduces via
+        # all-reduce of max/sum).
+        mdl = pctx.model_axis if pctx.seq_shard_decode else None
+        q = shard(q, pctx, pctx.dp_axes, None,
+                  None if mdl else pctx.model_axis, None)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, cur_len, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, cur_len, 0, 0))
+    o = ops.decode_attention(
+        q[:, 0], cache_k, cache_v,
+        kv_len=cur_len + 1, softcap=softcap, window=window)
+    o = o.reshape(b, 1, h * dh).astype(dt)
+    if pctx is not None:
+        o = shard(o, pctx, pctx.dp_axes, None, None)
+    return o @ p["wo"].astype(dt), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, f, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {"w1": truncated_normal(ks[0], (d, f), 1.0 / math.sqrt(d)),
+         "w2": truncated_normal(ks[1], (f, d), 1.0 / math.sqrt(f))}
+    if gated:
+        p["w3"] = truncated_normal(ks[2], (d, f), 1.0 / math.sqrt(d))
+    return p
+
+
+def mlp_specs(pctx, gated: bool, fsdp: bool):
+    from jax.sharding import PartitionSpec as P
+    fs = pctx.data_axis if fsdp else None
+    p = {"w1": P(fs, pctx.model_axis), "w2": P(pctx.model_axis, fs)}
+    if gated:
+        p["w3"] = P(fs, pctx.model_axis)
+    return p
+
+
+def mlp(p, x, act_name: str, pctx=None):
+    dt = x.dtype
+    act = activation(act_name)
+    hidden = act(x @ p["w1"].astype(dt))
+    if "w3" in p:
+        hidden = hidden * (x @ p["w3"].astype(dt))
+    if pctx is not None:
+        hidden = shard(hidden, pctx, pctx.dp_axes, None, pctx.model_axis)
+    return hidden @ p["w2"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d):
+    return {"emb": truncated_normal(key, (vocab, d), d ** -0.5)}
+
+
+def embed(p, tokens, dtype=DEFAULT_DTYPE):
+    return p["emb"].astype(dtype)[tokens]
+
+
+def unembed(p_emb, x, out_proj=None, final_softcap=None):
+    """Logits; tied (x @ emb.T) unless out_proj given."""
+    dt = x.dtype
+    w = (p_emb["emb"].astype(dt).T if out_proj is None
+         else out_proj.astype(dt))
+    logits = x @ w
+    if final_softcap is not None:
+        logits = final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / final_softcap).astype(dt)
+    return logits
+
+
+def cross_entropy(logits, labels, ignore: int = -1):
+    """Mean token CE in fp32; labels == ignore are masked."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = labels != ignore
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def chunked_cross_entropy(h, emb, labels, *, tied=True, chunk=512,
+                          final_softcap=None, ignore: int = -1):
+    """Sequence-chunked CE that never materializes [B, S, V] logits.
+
+    The unembed matmul + softmax run per S-chunk under a remat wrapper, so
+    both forward AND backward hold one chunk of logits at a time — the
+    production answer to fp32-logit memory blowup at long seq x huge vocab.
+
+    h: [B, S, D]; emb: [V, D] (tied=True) or [D, V]; labels: [B, S].
+    Returns mean token CE (fp32 scalar).
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=ignore)
+    nc = h.shape[1] // chunk
+    hc = h.reshape(b, nc, chunk, d).swapaxes(0, 1)        # [nc, B, C, D]
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    contract = ((2,), (1,)) if tied else ((2,), (0,))
+
+    @jax.checkpoint
+    def chunk_loss(hh, ll):
+        dt = hh.dtype
+        logits = jax.lax.dot_general(
+            hh, emb.astype(dt), (contract, ((), ())))     # [B, C, V]
+        lf = logits.astype(jnp.float32)
+        if final_softcap is not None:
+            lf = final_softcap * jnp.tanh(lf / final_softcap)
+        logz = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(
+            lf, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+        mask = ll != ignore
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    def body(carry, inp):
+        nll, cnt = carry
+        hh, ll = inp
+        dn, dc = chunk_loss(hh, ll)
+        return (nll + dn, cnt + dc), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32)), (hc, lc))
+    return nll / jnp.maximum(cnt, 1)

@@ -1,0 +1,199 @@
+"""MoE FFN layer built on the MultiWrite hierarchical dispatch.
+
+Token path per layer (DeepSeek-style EP):
+
+  router -> top-k -> hierarchical_dispatch (stage-1 ONE copy per
+  (token, remote pod) over DCN, stage-2 relay replication intra-pod)
+  -> per-expert gated FFN (TP over the model axis inside each expert)
+  -> hierarchical_combine (relay-side partial reduction on the way back)
+
+``pctx.moe_scheme`` selects hierarchical (MultiWrite) vs baseline
+(unicast: one copy per (token, destination chip)) — the paper's comparison
+pair, selectable per run for the §Perf ablation.
+
+EP placement: EP spans (pod, data) when the arch has enough experts
+(kimi-k2: 384 experts over 32 EP ranks — the paper's large-EP regime);
+otherwise EP = the data axis and pod stays pure DP (dbrx: 16 experts).
+Without a mesh (pctx=None) the dispatch degenerates to local packing —
+the same code path, zero collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as cl
+from repro.models import layers as L
+from repro.parallel.context import ParallelContext
+
+
+def init_moe(key, d: int, f: int, num_experts: int, ep_ranks: int = 1):
+    """Router + stacked expert weights [E, ...] (gated FFN)."""
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    sc_d, sc_f = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "router": L.truncated_normal(kr, (d, num_experts), sc_d),
+        "w1": L.truncated_normal(k1, (num_experts, d, f), sc_d),
+        "w3": L.truncated_normal(k3, (num_experts, d, f), sc_d),
+        "w2": L.truncated_normal(k2, (num_experts, f, d), sc_f),
+    }
+
+
+def moe_specs(pctx: ParallelContext, num_experts: int, fsdp: bool):
+    """Experts sharded over the EP axes; expert hidden over model (TP)."""
+    use_pod, _ = pctx.ep_ranks(num_experts)
+    ep = (("pod", "data") if use_pod and pctx.pod_axis
+          else (pctx.data_axis,))
+    return {
+        "router": P(None, None),
+        "w1": P(ep, None, pctx.model_axis),
+        "w3": P(ep, None, pctx.model_axis),
+        "w2": P(ep, pctx.model_axis, None),
+    }
+
+
+def _expert_ffn(w1, w3, w2, x, act_name: str, model_axis: str | None):
+    """Per-expert gated FFN on packed buffers x: [E_l, C, D].
+    w*: [E_l, D, F_shard] — row-parallel over model_axis (psum inside)."""
+    act = L.activation(act_name)
+    dt = x.dtype
+    h = act(jnp.einsum("ecd,edf->ecf", x, w1.astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", x, w3.astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", h, w2.astype(dt))
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
+    return out
+
+
+def balanced_capacities(n_tokens: int, k: int, p: int, d: int,
+                        per_rank: int, cf: float) -> cl.DispatchConfig:
+    """Capacity factors sized from *balanced-routing expectations* (the
+    paper evaluates with load balancing on, §6.1), with headroom ``cf``:
+
+      stage-1 slots/pod     ~ N * min(1, k/p)
+      stage-2 slots/ep rank ~ (arrivals p*Cp) * min(1, (k/p)/d)
+      expert slots          ~ N*k/per_rank  (total (token,expert) pairs)
+    """
+    pod_cap = min(1.0, k / p) * cf
+    cp = max(1, int(round(n_tokens * pod_cap)))
+    ep_cap = min(1.0, (k / p) / d) * cf
+    cd = max(1, int(round(p * cp * ep_cap)))
+    ce_target = max(1, int(round(n_tokens * k / per_rank * cf)))
+    exp_cap = ce_target / (d * cd)
+    return cl.DispatchConfig(num_experts=per_rank * p * d, top_k=k,
+                             pod_capacity=pod_cap, ep_capacity=ep_cap,
+                             expert_capacity=exp_cap)
+
+
+def load_balance_loss(logits, ids, num_experts: int):
+    """Switch-style aux loss: E * sum_i f_i * P_i (local estimate)."""
+    probs = jax.nn.softmax(logits, axis=-1)                  # [N, E]
+    onehot = jnp.any(ids[..., None] == jnp.arange(num_experts), axis=1)
+    f = jnp.mean(onehot.astype(jnp.float32), axis=0)         # fraction routed
+    p_mean = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * p_mean)
+
+
+def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
+            capacity_factor: float | None = None):
+    """x: [B, S, D] -> ([B, S, D], aux_loss).  params from init_moe."""
+    b, s, d = x.shape
+    dt = x.dtype
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity
+    tokens_in = x.reshape(b * s, d)
+
+    if pctx is None:
+        epmesh = cl.EPMesh(pod_axis=None, ep_axis="_none", num_pods=1,
+                           ep_per_pod=1)
+        dcfg = balanced_capacities(b * s, cfg.top_k, 1, 1, cfg.num_experts,
+                                   capacity_factor)
+        out, aux = _moe_local(params, tokens_in, cfg, dcfg, epmesh)
+        return out.reshape(b, s, d).astype(dt), aux
+
+    use_pod, _ = pctx.ep_ranks(cfg.num_experts)
+    p = pctx.num_pods if use_pod else 1
+    dd = pctx.data_size
+    epmesh = cl.EPMesh(
+        pod_axis=pctx.pod_axis if use_pod else None,
+        ep_axis=pctx.data_axis, num_pods=p, ep_per_pod=dd)
+    per_rank = cfg.num_experts // (p * dd)
+    ep_spec = ((pctx.pod_axis, pctx.data_axis) if use_pod
+               else (pctx.data_axis,))
+    dp_spec = pctx.dp_axes
+    n_local = (b * s) // (pctx.num_pods * pctx.data_size)
+    dcfg = balanced_capacities(n_local, cfg.top_k, p, dd, per_rank,
+                               capacity_factor)
+    if pctx.moe_scheme == "baseline":
+        # unicast packs per destination RANK: fair capacity is the
+        # balanced per-rank expectation (k/R), not the per-pod one
+        rank_cap = min(1.0, cfg.top_k / (p * dd)) * capacity_factor
+        dcfg = dataclasses.replace(dcfg, pod_capacity=rank_cap)
+
+    # deferred TP reduction: the combine tree is LINEAR in the expert
+    # outputs, so the row-parallel psum commutes through it — emit partial
+    # (F-shard) contributions from the experts and reduce ONCE on the
+    # final [N, D] result instead of per-layer [E_l, Ce, D] buffers.
+    expert_axis = (None if pctx.moe_deferred_tp_reduce
+                   else pctx.model_axis)
+
+    def one_chunk(tok, router, w1, w3, w2):
+        logits = tok.astype(jnp.float32) @ router
+        gates, ids = cl.route_topk(logits, cfg.top_k)
+        aux = load_balance_loss(logits, ids, cfg.num_experts)
+        aux = jax.lax.pmean(aux, dp_spec)
+        if pctx.moe_scheme == "hierarchical":
+            exp_tok, exp_gate, st = cl.hierarchical_dispatch(
+                tok, ids, gates, dcfg, epmesh)
+            exp_out = _expert_ffn(w1, w3, w2, exp_tok, cfg.act, expert_axis)
+            out = cl.hierarchical_combine(exp_out, exp_gate, st)
+        else:
+            exp_tok, exp_gate, st = cl.baseline_dispatch(
+                tok, ids, gates, dcfg, epmesh)
+            exp_out = _expert_ffn(w1, w3, w2, exp_tok, cfg.act, expert_axis)
+            out = cl.baseline_combine(exp_out, exp_gate, st)
+        if pctx.moe_deferred_tp_reduce:
+            out = jax.lax.psum(out, pctx.model_axis)
+        return out.astype(tok.dtype), aux
+
+    def inner(tok, router, w1, w3, w2):
+        g = pctx.moe_microbatch
+        if g <= 1:
+            return one_chunk(tok, router, w1, w3, w2)
+        n_loc, h = tok.shape
+        assert n_loc % g == 0, (n_loc, g)
+        chunks = tok.reshape(g, n_loc // g, h)
+        out, aux = jax.lax.map(
+            lambda c: one_chunk(c, router, w1, w3, w2), chunks)
+        return out.reshape(n_loc, h), jnp.mean(aux)
+
+    out, aux = jax.shard_map(
+        inner, mesh=pctx.mesh,
+        in_specs=(P(dp_spec, None),            # tokens split over DP ranks
+                  P(None, None),               # router replicated
+                  P(ep_spec, None, pctx.model_axis),
+                  P(ep_spec, None, pctx.model_axis),
+                  P(ep_spec, pctx.model_axis, None)),
+        out_specs=(P(dp_spec, None), P()),
+        check_vma=False,
+    )(tokens_in, params["router"].astype(jnp.float32),
+      params["w1"], params["w3"], params["w2"])
+    return out.reshape(b, s, d).astype(dt), aux
+
+
+def _moe_local(params, tokens, cfg, dcfg, epmesh):
+    """Single-device path (smoke tests): same dispatch code, no axes."""
+    logits = tokens.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    gates, ids = cl.route_topk(logits, cfg.top_k)
+    aux = load_balance_loss(logits, ids, cfg.num_experts)
+    exp_tok, exp_gate, st = cl.hierarchical_dispatch(
+        tokens, ids, gates, dcfg, epmesh)
+    exp_out = _expert_ffn(params["w1"], params["w3"], params["w2"],
+                          exp_tok, cfg.act, None)
+    return cl.hierarchical_combine(exp_out, exp_gate, st), aux

@@ -1,0 +1,237 @@
+"""RWKV-6 ("Finch") blocks: time-mix (WKV6) + channel-mix.
+
+Attention-free: per-head matrix-valued state [dk, dv] with data-dependent
+per-channel decay (the Finch headline — a rank-``rwkv_decay_lora`` LoRA
+produces log-decays from the shifted input).  Token-shift mixing uses
+static per-channel coefficients (the released model also LoRAs the mix
+coefficients; simplified — noted in DESIGN.md).
+
+Decode state per layer: two shift registers [B, D] + WKV state
+[B, H, dk, dv] — O(1)/token, so this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops, ref
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    dk = cfg.rwkv_head_dim
+    heads = cfg.d_model // dk
+    return heads, dk
+
+
+def init_rwkv_block(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    heads, dk = _dims(cfg)
+    lora = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "ln1": L.init_rmsnorm(d),
+        "ln2": L.init_rmsnorm(d),
+        "mu": L.truncated_normal(ks[0], (5, d), 0.3),   # r,k,v,w,g mixes
+        "wr": L.truncated_normal(ks[1], (d, d), sc),
+        "wk": L.truncated_normal(ks[2], (d, d), sc),
+        "wv": L.truncated_normal(ks[3], (d, d), sc),
+        "wg": L.truncated_normal(ks[4], (d, d), sc),
+        "w0": jnp.zeros((d,), jnp.float32),             # base log-log decay
+        "wA": L.truncated_normal(ks[5], (d, lora), sc),
+        "wB": L.truncated_normal(ks[6], (lora, d), 1.0 / math.sqrt(lora)),
+        "u": L.truncated_normal(ks[7], (heads, dk), 0.3),
+        "gn": L.init_rmsnorm(d),                        # post-wkv group norm
+        "wo": L.truncated_normal(ks[8], (d, d), sc),
+        # channel mix
+        "cmu": L.truncated_normal(ks[9], (2, d), 0.3),  # k, r mixes
+        "ck": L.truncated_normal(ks[10], (d, f), sc),
+        "cr": L.truncated_normal(ks[11], (d, d), sc),
+        "cv": L.truncated_normal(jax.random.fold_in(key, 99), (f, d),
+                                 1.0 / math.sqrt(f)),
+    }
+
+
+def _shift_train(x):
+    """xx[t] = x[t-1], zeros at t=0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _decay_logw(p, xw):
+    """Data-dependent per-channel log decay (<= ~0)."""
+    lo = jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    return -jnp.exp(p["w0"] + lo)                      # [.., d]
+
+
+def time_mix(p, x, cfg, state=None, *, use_pallas=False):
+    """x: [B, S, D] (train/prefill) or with state for decode handled in
+    time_mix_decode.  Returns y [B, S, D] (+ final wkv state if asked)."""
+    b, s, d = x.shape
+    heads, dk = _dims(cfg)
+    dt = x.dtype
+    xx = _shift_train(x)
+    xr, xk, xv, xw, xg = (_mix(x, xx, p["mu"][i]) for i in range(5))
+    r = xr @ p["wr"].astype(dt)
+    k = xk @ p["wk"].astype(dt)
+    v = xv @ p["wv"].astype(dt)
+    g = xg @ p["wg"].astype(dt)
+    logw = _decay_logw(p, xw)                          # [B, S, D] f32
+
+    def to_heads(t):
+        return t.reshape(b, s, heads, dk).transpose(0, 2, 1, 3).reshape(
+            b * heads, s, dk)
+
+    rh, kh, vh, wh = to_heads(r), to_heads(k), to_heads(v), \
+        to_heads(logw.astype(jnp.float32))
+    u = jnp.tile(p["u"], (b, 1))                       # [B*H, dk]
+    if state is None:
+        y = ops.rwkv6_scan(rh, kh, vh, wh, u, use_pallas=use_pallas)
+        final = None
+    else:
+        y, final = ref.rwkv6_chunked_jnp(rh, kh, vh, wh, u, s0=state,
+                                         return_final=True)
+    y = y.reshape(b, heads, s, dk).transpose(0, 2, 1, 3).reshape(b, s, d)
+    y = L.rmsnorm(p["gn"], y, cfg.norm_eps)
+    out = (y * jax.nn.silu(g)) @ p["wo"].astype(dt)
+    return out, x[:, -1], final
+
+
+def time_mix_decode(p, x, shift, wkv, cfg):
+    """One token.  x: [B, 1, D]; shift: [B, D]; wkv: [B, H, dk, dv]."""
+    b, _, d = x.shape
+    heads, dk = _dims(cfg)
+    dt = x.dtype
+    xx = shift[:, None].astype(dt)
+    xr, xk, xv, xw, xg = (_mix(x, xx, p["mu"][i]) for i in range(5))
+    r = (xr @ p["wr"].astype(dt))[:, 0]
+    k = (xk @ p["wk"].astype(dt))[:, 0]
+    v = (xv @ p["wv"].astype(dt))[:, 0]
+    g = (xg @ p["wg"].astype(dt))[:, 0]
+    logw = _decay_logw(p, xw)[:, 0]                    # [B, D]
+
+    def to_heads(t):
+        return t.reshape(b * heads, dk)
+
+    S = wkv.reshape(b * heads, dk, dk)
+    u = jnp.tile(p["u"], (b, 1))
+    S, y = ref.rwkv6_decode_step(
+        S, to_heads(r.astype(jnp.float32)), to_heads(k.astype(jnp.float32)),
+        to_heads(v.astype(jnp.float32)),
+        to_heads(logw), u)
+    y = y.reshape(b, 1, d).astype(dt)
+    y = L.rmsnorm(p["gn"], y, cfg.norm_eps)
+    out = (y * jax.nn.silu(g[:, None])) @ p["wo"].astype(dt)
+    return out, x[:, -1], S.reshape(b, heads, dk, dk)
+
+
+def channel_mix(p, x, shift=None):
+    """x: [B, S, D].  shift: [B, D] decode shift register or None."""
+    dt = x.dtype
+    xx = _shift_train(x) if shift is None else shift[:, None].astype(dt)
+    xk = _mix(x, xx, p["cmu"][0])
+    xr = _mix(x, xx, p["cmu"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["ck"].astype(dt)))
+    return jax.nn.sigmoid(xr @ p["cr"].astype(dt)) * (
+        k @ p["cv"].astype(dt)), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# stack
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ks[1], cfg.vocab, cfg.d_model),
+        "ln_in": L.init_rmsnorm(cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "layers": jax.vmap(lambda k: init_rwkv_block(k, cfg))(layer_keys),
+        "unembed": {"w": L.truncated_normal(
+            ks[2], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5)},
+    }
+
+
+def rwkv6_hidden(params, cfg, pctx, x, *, use_pallas=False):
+    x = L.rmsnorm(params["ln_in"], x, cfg.norm_eps)
+
+    def body(carry, lp):
+        def inner(lp_, x_):
+            t, _, _ = time_mix(lp_, L.rmsnorm(lp_["ln1"], x_, cfg.norm_eps),
+                               cfg, use_pallas=use_pallas)
+            x_ = x_ + t
+            c, _ = channel_mix(lp_, L.rmsnorm(lp_["ln2"], x_, cfg.norm_eps))
+            from repro.parallel.context import shard_residual
+            return shard_residual(x_ + c, pctx)
+
+        from repro.models.transformer import _remat
+        return _remat(inner, pctx)(lp, carry), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), \
+        jnp.zeros((), jnp.float32)
+
+
+def rwkv6_init_state(cfg, batch, dtype=jnp.bfloat16):
+    heads, dk = _dims(cfg)
+    n = cfg.n_layers
+    return {
+        "tshift": jnp.zeros((n, batch, cfg.d_model), dtype),
+        "cshift": jnp.zeros((n, batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((n, batch, heads, dk, dk), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def rwkv6_prefill(params, cfg, pctx, x, state):
+    """Prefill: chunked scan per layer, capturing final states."""
+    x = L.rmsnorm(params["ln_in"], x, cfg.norm_eps)
+    b = x.shape[0]
+    heads, dk = _dims(cfg)
+
+    def body(x, lp):
+        s0 = jnp.zeros((b * heads, dk, dk), jnp.float32)
+        t, tsh, wkv = time_mix(lp, L.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                               cfg, state=s0)
+        x = x + t
+        c, csh = channel_mix(lp, L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        x = x + c
+        return x, (tsh, csh, wkv.reshape(b, heads, dk, dk))
+
+    x, (tsh, csh, wkv) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_state = {"tshift": tsh.astype(state["tshift"].dtype),
+                 "cshift": csh.astype(state["cshift"].dtype),
+                 "wkv": wkv,
+                 "len": jnp.asarray(x.shape[1], jnp.int32)}
+    return x, new_state
+
+
+def rwkv6_decode_step(params, cfg, pctx, x, state):
+    x = L.rmsnorm(params["ln_in"], x, cfg.norm_eps)
+
+    def body(x, xs):
+        lp, tsh, csh, wkv = xs
+        t, tsh2, wkv2 = time_mix_decode(
+            lp, L.rmsnorm(lp["ln1"], x, cfg.norm_eps), tsh, wkv, cfg)
+        x = x + t
+        c, csh2 = channel_mix(lp, L.rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                              csh)
+        x = x + c
+        return x, (tsh2.astype(tsh.dtype), csh2.astype(csh.dtype), wkv2)
+
+    x, (tsh, csh, wkv) = jax.lax.scan(
+        body, x, (params["layers"], state["tshift"], state["cshift"],
+                  state["wkv"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, {"tshift": tsh, "cshift": csh, "wkv": wkv,
+               "len": state["len"] + 1}

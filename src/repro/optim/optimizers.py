@@ -1,0 +1,259 @@
+"""Optimizers in pure JAX (no optax): AdamW, Adafactor, Lion, SGD.
+
+An :class:`Optimizer` is an (init, update) pair over param pytrees:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+ZeRO-1 note: optimizer state inherits the parameter PartitionSpecs under
+pjit (states are elementwise over params), so FSDP-sharded params give
+sharded m/v for free; ``state_specs`` mirrors a param-spec pytree onto the
+state for explicit in_shardings.
+
+``opt_dtype`` controls moment storage (fp32 default; bf16 halves optimizer
+HBM for the 1T-param kimi-k2 cell — the error is absorbed by Adam's
+normalization, a standard large-model trick).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params, step)
+    state_specs: Callable[[Any], Any]        # param_specs -> state specs
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def tree_zeros_like(params, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          opt_dtype=None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": tree_zeros_like(params, opt_dtype),
+                "v": tree_zeros_like(params, opt_dtype)}
+
+    def update(grads, state, params, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step
+        bc2 = 1 - b2 ** step
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * gf
+            v_new = b2 * v32 + (1 - b2) * gf * gf
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    def state_specs(param_specs):
+        return {"m": param_specs, "v": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — frontier-scale memory savings)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return jax.tree_util.tree_map(per_leaf, params)
+
+    def update(grads, state, params, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        rho = 1.0 - step ** (-decay)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in s:
+                vr = rho * s["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * s["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = gf / jnp.sqrt(vhat + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = rho * s["v"] + (1 - rho) * g2
+                u = gf / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return u, new_s
+
+        flat, treedef = jax.tree_util.tree_flatten(
+            grads, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        sflat = treedef.flatten_up_to(state)
+        pflat = treedef.flatten_up_to(params)
+        pairs = [upd(g, s, p) for g, s, p in zip(flat, sflat, pflat)]
+        updates = treedef.unflatten([u for u, _ in pairs])
+        new_state = treedef.unflatten([s for _, s in pairs])
+        return updates, new_state
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def per_leaf(spec):
+            # factored state drops the last / second-to-last dims; emitting
+            # exact specs requires shapes, so replicate factored moments
+            # (they are tiny) — P() is safe and cheap.
+            return {"vr": P(), "vc": P()}
+        return jax.tree_util.tree_map(
+            per_leaf, param_specs,
+            is_leaf=lambda x: not isinstance(x, dict))
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Lion
+# ---------------------------------------------------------------------------
+
+def lion(lr=1e-4, b1=0.9, b2=0.99, weight_decay=0.1,
+         opt_dtype=None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": tree_zeros_like(params, opt_dtype)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(jnp.asarray(step, jnp.float32))
+
+        def upd(g, m, p):
+            gf = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32)
+            u = -lr_t * (jnp.sign(b1 * m32 + (1 - b1) * gf)
+                         + weight_decay * p.astype(jnp.float32))
+            m_new = b2 * m32 + (1 - b2) * gf
+            return u, m_new.astype(m.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], params)
+        updates = jax.tree_util.tree_map(
+            lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree_util.tree_map(
+            lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m}
+
+    def state_specs(param_specs):
+        return {"m": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# SGD (baseline / tests)
+# ---------------------------------------------------------------------------
+
+def sgd(lr=1e-2, momentum=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum:
+            return {"m": tree_zeros_like(params, jnp.float32)}
+        return {}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(jnp.asarray(step, jnp.float32))
+        if momentum:
+            m = jax.tree_util.tree_map(
+                lambda m_, g: momentum * m_ + g.astype(jnp.float32),
+                state["m"], grads)
+            updates = jax.tree_util.tree_map(lambda m_: -lr_t * m_, m)
+            return updates, {"m": m}
+        updates = jax.tree_util.tree_map(
+            lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, state
+
+    def state_specs(param_specs):
+        return {"m": param_specs} if momentum else {}
+
+    return Optimizer(init, update, state_specs)
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params, step)
+    return Optimizer(opt.init, update, opt.state_specs)
+
+
+REGISTRY = {"adamw": adamw, "adafactor": adafactor, "lion": lion,
+            "sgd": sgd}

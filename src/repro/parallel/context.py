@@ -1,0 +1,87 @@
+"""Parallelism context: which mesh axes exist and how layers shard.
+
+A :class:`ParallelContext` travels with a model instance.  ``pctx=None``
+means single-device (smoke tests); all sharding helpers become no-ops and
+the MoE path degenerates to local dispatch.
+
+Axis roles on the production mesh (launch/mesh.py):
+
+  pod    slow inter-pod axis (DCN) — DP, and the outer level of the
+         MultiWrite hierarchical EP dispatch.
+  data   fast intra-pod axis — DP/FSDP, and EP for MoE layers.
+  model  fast intra-pod axis — TP (Megatron col/row), sequence/KV-length
+         sharding for decode, optionally subdivided into split-TP domains
+         for the §3.1 multiwrite AllGather scenario.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Mesh
+    pod_axis: Optional[str] = None    # None on a single-pod mesh
+    data_axis: str = "data"
+    model_axis: str = "model"
+    fsdp: bool = True                 # shard weights over data (ZeRO-3-ish)
+    moe_scheme: str = "hierarchical"  # hierarchical (MultiWrite) | baseline
+    tp_subgroups: int = 1             # §3.1 split-TP domains on model axis
+    remat: str = "full"               # none | selective | full
+    seq_shard_decode: bool = True     # shard decode KV length over model
+    seq_parallel: bool = True         # Megatron-SP: residual stream's seq
+    #                                   dim sharded over model between blocks
+    # --- MoE perf levers (§Perf hillclimb; defaults = paper-faithful) -----
+    moe_deferred_tp_reduce: bool = False  # move the expert row-parallel
+    #   psum ([E_l, Ce, D] per layer) through the LINEAR combine tree to a
+    #   single [N, D] psum at the end — ~Ce*E_l/N x fewer model-axis bytes
+    moe_microbatch: int = 1           # split dispatch into G chunks
+    #   (scan) — dispatch buffer memory / G
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def dp_axes(self):
+        return ((self.pod_axis, self.data_axis) if self.pod_axis
+                else (self.data_axis,))
+
+    @property
+    def num_pods(self) -> int:
+        return self.mesh.shape[self.pod_axis] if self.pod_axis else 1
+
+    @property
+    def data_size(self) -> int:
+        return self.mesh.shape[self.data_axis]
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def ep_ranks(self, num_experts: int) -> tuple[bool, int]:
+        """(use_pod_axis, total EP ranks) for an MoE layer: EP spans the pod
+        axis only when there are enough experts (the paper's large-EP
+        regime); otherwise EP = data axis and pod stays pure DP."""
+        if self.pod_axis and num_experts >= self.num_pods * self.data_size:
+            return True, self.num_pods * self.data_size
+        return False, self.data_size
+
+
+def shard(x, pctx: Optional[ParallelContext], *spec):
+    """with_sharding_constraint that no-ops without a context."""
+    if pctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_residual(x, pctx: Optional[ParallelContext]):
+    """Between-block constraint on the residual stream [B, S, D]:
+    SP shards S over model (memory / L x smaller scan-bwd carry stack)."""
+    if pctx is None:
+        return x
+    if pctx.seq_parallel and x.shape[1] % pctx.model_size == 0:
+        return shard(x, pctx, pctx.dp_axes, pctx.model_axis, None)
+    return shard(x, pctx, pctx.dp_axes, None, None)

@@ -1,0 +1,214 @@
+"""PartitionSpec assignment for params, batches, and caches.
+
+Sharding layout (Megatron TP over ``model``, FSDP/ZeRO over ``data``,
+DP over ``pod``×``data``):
+
+  attention  wq/wk/wv [D, H*dh]  -> P(fsdp, model)      (column parallel)
+             wo       [H*dh, D]  -> P(model, fsdp)      (row parallel)
+  mlp        w1/w3    [D, F]     -> P(fsdp, model)
+             w2       [F, D]     -> P(model, fsdp)
+  embedding  emb      [V, D]     -> P(model, fsdp)      (vocab parallel)
+  unembed    w        [D, V]     -> P(fsdp, model)
+  MoE        w*       [E, D, F]  -> P(ep, ..., model)   (EP over pod+data
+                                    when experts >= ranks, else data)
+  mamba2     in_proj  [D, Pout]  -> P(fsdp, model); out_proj row-parallel
+  rwkv6      time/channel mats   -> col/row parallel as above
+  norms / scalars / small tables -> replicated
+
+Stacked (scanned) layers get a leading ``None``; rules are rank-relative.
+Optimizer moments inherit param specs elementwise (ZeRO comes free).
+Caches: batch dim over DP when divisible; KV length over ``model`` for
+decode (flash-decoding style sharded-KV attention) else heads.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.parallel.context import ParallelContext
+
+
+def _rule_for(path_keys: list[str], cfg: ModelConfig,
+              pctx: ParallelContext) -> Optional[tuple]:
+    """Base (unstacked) spec template for a leaf, by name/context."""
+    name = path_keys[-1]
+    in_moe = "moe" in path_keys
+    fsdp = pctx.data_axis if pctx.fsdp else None
+    model = pctx.model_axis
+    if in_moe and name in ("w1", "w3", "w2", "router"):
+        use_pod, _ = pctx.ep_ranks(cfg.num_experts)
+        ep = ((pctx.pod_axis, pctx.data_axis) if (use_pod and pctx.pod_axis)
+              else (pctx.data_axis,))
+        if name == "router":
+            return (None, None)
+        if name == "w2":
+            return (ep, model, None)
+        return (ep, None, model)                     # w1 / w3
+    col = {"wq", "wk", "wv", "w1", "w3", "ck", "cr", "wr", "wg",
+           "in_proj", "wA"}
+    row = {"wo", "w2", "cv", "out_proj"}
+    if name in col:
+        return (fsdp, model)
+    if name in row:
+        return (model, fsdp)
+    if name == "emb":
+        return (model, fsdp)
+    if name == "w" and "unembed" in path_keys:
+        return (fsdp, model)
+    if name == "wB":
+        return (None, model)
+    if name == "conv":
+        return (None, model)
+    if name in ("mu", "cmu", "u"):
+        return (None, None)
+    if name in ("A_log", "D", "dt_bias", "w0", "w"):
+        return (None,)                                # norms & head scalars
+    return None                                       # replicate
+
+
+def param_specs(params: Any, cfg: ModelConfig,
+                pctx: ParallelContext) -> Any:
+    """PartitionSpec pytree matching ``params`` (shapes may be
+    ShapeDtypeStructs — only ndim is used)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        keys = [_k(p) for p in path]
+        base = _rule_for(keys, cfg, pctx)
+        nd = len(leaf.shape)
+        if base is None:
+            specs.append(P())
+            continue
+        spec = list(base)
+        while len(spec) < nd:                 # stacked scan dims lead
+            spec.insert(0, None)
+        spec = spec[:nd] if len(spec) > nd else spec
+        # divisibility guard: drop axes that don't divide the dim
+        spec = _guard(spec, leaf.shape, pctx)
+        specs.append(P(*spec))
+    return treedef.unflatten(specs)
+
+
+def _k(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _axis_size(pctx: ParallelContext, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= _axis_size(pctx, a)
+        return out
+    return pctx.mesh.shape[axis]
+
+
+def _guard(spec: list, shape: tuple, pctx: ParallelContext) -> list:
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+        elif dim % _axis_size(pctx, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch: Any, pctx: ParallelContext) -> Any:
+    """Shard the batch dim over DP axes (when divisible)."""
+    def per_leaf(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        dp = pctx.dp_axes if (leaf.ndim and
+                              b % _axis_size(pctx, pctx.dp_axes) == 0) \
+            else None
+        return P(dp, *([None] * (leaf.ndim - 1))) if leaf.ndim else P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return treedef.unflatten([per_leaf(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# caches / decode state
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache: Any, cfg: ModelConfig, pctx: ParallelContext) -> Any:
+    """Per-leaf rules keyed by the cache field names used across families.
+    KV caches are per-layer tuples: the name is the last STRING key in the
+    path (tuple indices are skipped)."""
+    model = pctx.model_axis
+    msize = _axis_size(pctx, model)
+    dpsize = _axis_size(pctx, pctx.dp_axes)
+
+    def per_leaf(path, leaf):
+        names = [_k(p) for p in path if hasattr(p, "key")]
+        name = names[-1] if names else _k(path[-1])
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        shape = leaf.shape
+        if name in ("k", "v") and nd == 4:   # [B, S, g, dh] (tuple entry)
+            b_ok = shape[0] % dpsize == 0
+            s_ok = pctx.seq_shard_decode and shape[1] % msize == 0
+            g_ok = shape[2] % msize == 0
+            return P(pctx.dp_axes if b_ok else None,
+                     model if s_ok else None,
+                     model if (g_ok and not s_ok) else None, None)
+        if name in ("k", "v"):            # [L, B, S, g, dh]
+            b_ok = shape[1] % dpsize == 0
+            s_ok = pctx.seq_shard_decode and shape[2] % msize == 0
+            g_ok = shape[3] % msize == 0
+            return P(None, pctx.dp_axes if b_ok else None,
+                     model if s_ok else None,
+                     model if (g_ok and not s_ok) else None, None)
+        if name == "enc_out":             # [B, S, D]
+            b_ok = shape[0] % dpsize == 0
+            return P(pctx.dp_axes if b_ok else None, None,
+                     model if shape[2] % msize == 0 else None)
+        if name == "conv":                # [L, B, K-1, d_inner]
+            b_ok = shape[1] % dpsize == 0
+            return P(None, pctx.dp_axes if b_ok else None, None,
+                     model if shape[3] % msize == 0 else None)
+        if name == "ssd":                 # [L, B, H, ds, dh]
+            b_ok = shape[1] % dpsize == 0
+            return P(None, pctx.dp_axes if b_ok else None,
+                     model if shape[2] % msize == 0 else None, None, None)
+        if name == "wkv":                 # [L, B, H, dk, dv]
+            b_ok = shape[1] % dpsize == 0
+            return P(None, pctx.dp_axes if b_ok else None,
+                     model if shape[2] % msize == 0 else None, None, None)
+        if name in ("tshift", "cshift"):  # [L, B, D]
+            b_ok = shape[1] % dpsize == 0
+            return P(None, pctx.dp_axes if b_ok else None,
+                     model if shape[2] % msize == 0 else None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return treedef.unflatten([per_leaf(p, l) for p, l in flat])
+
+
+def named(tree_specs: Any, pctx: ParallelContext) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(pctx.mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_sharding(shapes: Any, specs: Any, pctx: ParallelContext) -> Any:
+    """ShapeDtypeStructs with NamedShardings attached (dry-run inputs)."""
+    return jax.tree_util.tree_map(
+        lambda sh, sp: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=NamedSharding(pctx.mesh, sp)),
+        shapes, specs)

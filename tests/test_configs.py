@@ -1,0 +1,82 @@
+"""Spec-conformance: every architecture config matches the assignment
+table literally, and the shape set / skip logic follows the brief."""
+
+import pytest
+
+from repro.configs.base import (
+    ARCH_IDS, ALIASES, SHAPES, cell_is_skipped, get_config, shapes_for)
+
+# (n_layers, d_model, n_heads, n_kv, d_ff, vocab) from the assignment table
+TABLE = {
+    "starcoder2_15b": (40, 6144, 48, 4, 24576, 49152),
+    "minitron_8b": (32, 4096, 32, 8, 16384, 256000),
+    "mistral_nemo_12b": (40, 5120, 32, 8, 14336, 131072),
+    "gemma2_9b": (42, 3584, 16, 8, 14336, 256000),
+    "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+    "kimi_k2_1t": (61, 7168, 64, 8, 2048, 163840),   # d_ff = expert dim
+    "qwen2_vl_2b": (28, 1536, 12, 2, 8960, 151936),
+    "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+    "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+    "rwkv6_7b": (32, 4096, None, None, 14336, 65536),
+}
+
+MOE = {"dbrx_132b": (16, 4), "kimi_k2_1t": (384, 8)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_table_conformance(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = TABLE[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h
+        assert cfg.n_kv_heads == kv
+    if arch in MOE:
+        e, k = MOE[arch]
+        assert (cfg.num_experts, cfg.top_k) == (e, k)
+        assert cfg.expert_d_ff == ff
+    else:
+        assert cfg.d_ff == ff
+
+
+def test_aliases_cover_assignment_names():
+    for dash in ("starcoder2-15b", "kimi-k2-1t-a32b", "qwen2-vl-2b",
+                 "seamless-m4t-medium", "zamba2-7b", "rwkv6-7b"):
+        assert get_config(dash) is not None
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_skip_logic():
+    """long_500k runs ONLY for the sub-quadratic archs."""
+    runners = {a for a in ARCH_IDS if "long_500k" in shapes_for(a)}
+    assert runners == {"zamba2_7b", "rwkv6_7b"}
+    for a in ARCH_IDS:
+        reason = cell_is_skipped(a, "long_500k")
+        assert (reason is None) == (a in runners)
+        assert cell_is_skipped(a, "train_4k") is None
+
+
+def test_arch_specific_features():
+    g = get_config("gemma2_9b")
+    assert g.window == 4096 and g.local_global_alternating
+    assert g.attn_softcap == 50.0 and g.final_softcap == 30.0
+    q = get_config("qwen2_vl_2b")
+    assert sum(q.mrope_sections) == q.head_dim // 2
+    assert q.input_mode == "embeddings"
+    z = get_config("zamba2_7b")
+    assert z.ssm_state == 64 and z.shared_attn_every > 0
+    k = get_config("kimi_k2_1t")
+    assert k.first_k_dense == 1 and k.n_shared_experts == 1
+    s = get_config("seamless_m4t_medium")
+    assert s.family == "encdec" and s.n_enc_layers == 12

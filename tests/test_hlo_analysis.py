@@ -1,0 +1,145 @@
+"""Tests for the HLO cost analyzer (launch/hlo_module.py + hlo_analysis).
+
+The analyzer is the dry-run's profiler, so it gets its own correctness
+suite: validated against XLA's cost_analysis on non-looped programs, and
+against hand-computed values for loops (where XLA:CPU cost_analysis is
+wrong — it counts while bodies once).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import MeshLayout, _parse_groups
+from repro.launch.hlo_module import analyze_module, parse_module
+
+LAYOUT = MeshLayout(("data", "model"), (16, 16))
+
+
+def compile_text(fn, *sds):
+    return jax.jit(fn).lower(*sds).compile().as_text()
+
+
+def xla_cost(fn, *sds):
+    c = jax.jit(fn).lower(*sds).compile().cost_analysis()
+    return c[0] if isinstance(c, (list, tuple)) else c
+
+
+class TestFlops:
+    def test_matmul_matches_xla(self):
+        m = k = n = 256
+        sds = jax.ShapeDtypeStruct((m, k), jnp.float32)
+
+        def f(a, b):
+            return jnp.tanh(a @ b) @ b
+
+        text = compile_text(f, sds, sds)
+        mine = analyze_module(text, LAYOUT)
+        ref = xla_cost(f, sds, sds)
+        assert mine.flops == pytest.approx(float(ref["flops"]), rel=0.01)
+        assert mine.hbm_bytes == pytest.approx(
+            float(ref["bytes accessed"]), rel=0.05)
+
+    def test_scan_multiplies_flops(self):
+        """THE fix: XLA counts a while body once; we multiply by trip."""
+        m = k = n = 128
+        sds = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        trips = 10
+
+        def f(a, b):
+            def body(x, _):
+                return jnp.tanh(x @ b), None
+            y, _ = jax.lax.scan(body, a, None, length=trips)
+            return y
+
+        text = compile_text(f, sds, sds)
+        mine = analyze_module(text, LAYOUT)
+        expected = trips * 2 * m * k * n
+        assert mine.flops == pytest.approx(expected, rel=0.02)
+        assert list(mine.loops.values()) == [trips]
+        # and confirm XLA itself is wrong (if this starts passing, the
+        # workaround can be removed):
+        ref = xla_cost(f, sds, sds)
+        assert float(ref["flops"]) < expected / 2
+
+    def test_nested_scans_multiply(self):
+        m = 64
+        sds = jax.ShapeDtypeStruct((m, m), jnp.float32)
+
+        def f(a, b):
+            def outer(x, _):
+                def inner(y, _):
+                    return y @ b, None
+                y, _ = jax.lax.scan(inner, x, None, length=3)
+                return y, None
+            y, _ = jax.lax.scan(outer, a, None, length=5)
+            return y
+
+        mine = analyze_module(compile_text(f, sds, sds), LAYOUT)
+        assert mine.flops == pytest.approx(15 * 2 * m**3, rel=0.02)
+
+    def test_dynamic_slice_counts_window_only(self):
+        big = jax.ShapeDtypeStruct((64, 1024, 16), jnp.float32)
+
+        def f(x, i):
+            return jax.lax.dynamic_index_in_dim(x, i, 0, False) * 2.0
+
+        mine = analyze_module(
+            compile_text(f, big, jax.ShapeDtypeStruct((), jnp.int32)),
+            LAYOUT)
+        # window = 1024*16*4 = 64KB; full operand would be 4MB
+        assert mine.hbm_bytes < 1e6
+
+
+class TestReplicaGroups:
+    def test_braced(self):
+        g = _parse_groups("replica_groups={{0,1,2,3},{4,5,6,7}}")
+        assert g == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+    def test_iota(self):
+        g = _parse_groups("replica_groups=[2,4]<=[8]")
+        assert g == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+    def test_iota_transposed(self):
+        g = _parse_groups("replica_groups=[4,2]<=[2,4]T(1,0)")
+        assert g == [[0, 4], [1, 5], [2, 6], [3, 7]]
+
+    def test_source_target_pairs(self):
+        g = _parse_groups("source_target_pairs={{0,1},{1,0}}")
+        assert g == [[0, 1], [1, 0]]
+
+
+class TestMeshClassify:
+    def test_axis_attribution(self):
+        lay = MeshLayout(("pod", "data", "model"), (2, 16, 16))
+        assert lay.classify([0, 1, 2, 3]) == "model"        # contiguous
+        assert lay.classify([0, 16, 32]) == "data"          # stride 16
+        assert lay.classify([0, 256]) == "pod"              # crosses pods
+        assert lay.classify([0, 16, 256, 272]) == "pod"     # mixed -> slowest
+
+
+class TestCollectiveBytes:
+    def test_allreduce_in_scan_multiplied(self):
+        """Collective inside a scan body gets the trip multiplier."""
+        import functools
+        from jax.sharding import PartitionSpec as P
+        if len(jax.devices()) < 1:
+            pytest.skip("no devices")
+        mesh = jax.make_mesh((1,), ("model",))
+
+        def inner(x):
+            def body(c, _):
+                return jax.lax.psum(c, "model"), None
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y
+
+        fn = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P(),
+                                   out_specs=P(), check_vma=False))
+        text = fn.lower(
+            jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile().as_text()
+        # single-device mesh: psum may lower to no collective; just check
+        # the parser doesn't crash and loops are found
+        cost = analyze_module(text, MeshLayout(("model",), (1,)))
+        assert 7 in cost.loops.values() or cost.loops == {} \
+            or 7 in list(cost.loops.values())

@@ -1,0 +1,214 @@
+"""Semantic tests for the MultiWrite core: topology, bitmap, simulator.
+
+Covers the paper's §4.3.4 properties: per-destination atomicity,
+exactly-once delivery, statelessness (all routing info in packet metadata),
+and the §4.1 forwarding-table reuse + metadata rewrite behaviour.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import bitmap as bm
+from repro.core.multiwrite import MultiWriteSimulator
+from repro.core.topology import (
+    Link, Topology, full_mesh, same_index_peer, split_tp_full_mesh,
+    two_server_cluster, tpu_pods,
+)
+
+
+# ---------------------------------------------------------------------------
+# Topology / forwarding table
+# ---------------------------------------------------------------------------
+
+class TestTopology:
+    def test_full_mesh_direct_routes(self):
+        topo = full_mesh(8)
+        for a in range(8):
+            for b in range(8):
+                if a != b:
+                    assert topo.next_hop(a, b) == b
+                    assert topo.path(a, b) == [a, b]
+
+    def test_two_server_rail_first_routing(self):
+        topo = two_server_cluster()
+        # cross-server destinations route via the same-index rail peer
+        for i in range(8):
+            for j in range(8):
+                assert topo.next_hop(i, 8 + j) == same_index_peer(i, 1)
+                assert topo.next_hop(8 + i, j) == same_index_peer(8 + i, 0)
+        # intra-server stays direct
+        assert topo.next_hop(0, 3) == 3
+        assert topo.path(0, 8 + 3) == [0, 8, 11]
+
+    def test_partition_by_next_hop_groups_remote_server(self):
+        """§4.3.3 rule 3 over the rail-first table: ALL destinations on a
+        remote server share one next hop -> one packet copy on the rail."""
+        topo = two_server_cluster()
+        groups = topo.partition_by_next_hop(0, [1, 2, 9, 12, 15])
+        assert groups == {1: [1], 2: [2], 8: [9, 12, 15]}
+
+    def test_partition_includes_self_delivery(self):
+        topo = full_mesh(4)
+        groups = topo.partition_by_next_hop(0, [0, 1, 2])
+        assert groups == {0: [0], 1: [1], 2: [2]}
+
+    def test_no_route_raises(self):
+        topo = Topology(3, [Link(0, 1, 1e9)], name="line")
+        with pytest.raises(ValueError):
+            topo.next_hop(1, 0)
+
+    def test_multi_hop_path(self):
+        topo = Topology(3, [Link(0, 1, 1e9), Link(1, 2, 1e9)], name="line")
+        assert topo.path(0, 2) == [0, 1, 2]
+
+    def test_bandwidth_weighted_shortest_path(self):
+        # 0->2 direct at 1 GB/s vs 0->1->2 at 100 GB/s each: cost 1/1e9 vs
+        # 2/100e9 -> via 1 wins.
+        topo = Topology(3, [Link(0, 2, 1e9), Link(0, 1, 100e9),
+                            Link(1, 2, 100e9)], name="tri")
+        assert topo.next_hop(0, 2) == 1
+
+    def test_tpu_pods_shape(self):
+        topo = tpu_pods(chips_per_pod=16, num_pods=2)
+        assert topo.num_nodes == 32
+        assert topo.next_hop(3, 16 + 9) == 16 + 3  # rail peer
+
+
+# ---------------------------------------------------------------------------
+# Bitmap metadata (§4.1)
+# ---------------------------------------------------------------------------
+
+class TestBitmap:
+    def test_roundtrip(self):
+        dests = [0, 3, 17, 63]
+        code = bm.encode(dests, 64)
+        assert bm.decode(code, 64) == dests
+        assert bm.popcount(code) == 4
+
+    def test_out_of_range(self):
+        with pytest.raises(ValueError):
+            bm.encode([64], 64)
+
+    def test_metadata_bytes(self):
+        assert bm.metadata_bytes(64) == 0          # rides in immediate field
+        assert bm.metadata_bytes(128) == 16
+        assert bm.metadata_bytes(1024) == 128      # §6.4: 3.13% of 4 KiB
+        assert bm.metadata_bytes(1024) / 4096 == pytest.approx(0.03125)
+
+    def test_jnp_encode_decode_roundtrip(self):
+        rng = np.random.default_rng(0)
+        for num_ranks in (8, 32, 64, 100, 256):
+            oh = rng.integers(0, 2, size=(5, num_ranks)).astype(bool)
+            words = bm.encode_onehot(oh, num_ranks)
+            assert words.shape == (5, bm.num_words(num_ranks))
+            back = np.asarray(bm.decode_onehot(words, num_ranks))
+            np.testing.assert_array_equal(back, oh)
+            np.testing.assert_array_equal(
+                np.asarray(bm.popcount_words(words)), oh.sum(-1))
+
+    def test_jnp_matches_numpy_oracle(self):
+        rng = np.random.default_rng(1)
+        oh = rng.integers(0, 2, size=(7, 70)).astype(bool)
+        np.testing.assert_array_equal(
+            np.asarray(bm.encode_onehot(oh, 70)), bm.np_encode_rows(oh, 70))
+
+    def test_mask_range_rewrite(self):
+        """Relay metadata rewrite (§4.1): keep only the forwarded subset."""
+        oh = np.zeros((1, 64), bool)
+        oh[0, [2, 20, 40, 60]] = True
+        words = bm.encode_onehot(oh, 64)
+        masked = bm.mask_range(words, 16, 48, 64)
+        back = np.asarray(bm.decode_onehot(masked, 64))[0]
+        assert list(np.nonzero(back)[0]) == [20, 40]
+
+
+# ---------------------------------------------------------------------------
+# MultiWrite simulator semantics (§4.3)
+# ---------------------------------------------------------------------------
+
+class TestMultiWriteSemantics:
+    def test_degenerates_to_write(self):
+        """|M| == 1 -> identical ledger to a standard write (§4.3.3 rule 2)."""
+        topo = full_mesh(4)
+        a, b = MultiWriteSimulator(topo), MultiWriteSimulator(topo)
+        data = np.arange(100, dtype=np.uint8)
+        a.write(0, 2, "buf", data)
+        b.multiwrite(0, {2: "buf"}, data)
+        assert a.link_bytes == b.link_bytes
+        np.testing.assert_array_equal(a.memory[2]["buf"], b.memory[2]["buf"])
+
+    def test_atomic_delivery_all_destinations(self):
+        topo = full_mesh(8)
+        sim = MultiWriteSimulator(topo)
+        data = np.arange(64, dtype=np.uint8)
+        sim.multiwrite(0, {d: "x" for d in [1, 3, 5, 7]}, data)
+        for d in [1, 3, 5, 7]:
+            np.testing.assert_array_equal(sim.memory[d]["x"], data)
+            assert sim.delivery_count[(d, "x")] == 1  # exactly once
+
+    def test_single_copy_on_bottleneck(self):
+        """The paper's central property: ONE copy of the payload crosses
+        the rail regardless of destination count (§3.2)."""
+        topo = two_server_cluster()
+        sim = MultiWriteSimulator(topo)
+        data = np.arange(1000, dtype=np.uint8)
+        sim.multiwrite(0, {d: "x" for d in [9, 10, 12, 15]}, data)
+        assert sim.link_bytes[(0, 8)] == 1000          # one rail crossing
+        assert sim.redundant_bytes()[(0, 8)] == 0
+        for d in [9, 10, 12, 15]:
+            np.testing.assert_array_equal(sim.memory[d]["x"], data)
+        # relay 8 is not a destination: nothing delivered there
+        assert (8, "x") not in sim.delivery_count
+
+    def test_unicast_equivalent_is_redundant(self):
+        topo = two_server_cluster()
+        sim = MultiWriteSimulator(topo)
+        data = np.arange(1000, dtype=np.uint8)
+        for d in [9, 10, 12, 15]:
+            sim.write(0, d, "x", data)
+        assert sim.link_bytes[(0, 8)] == 4000          # 4 redundant copies
+        assert sim.redundant_bytes()[(0, 8)] == 3000
+
+    def test_relay_delivery_when_relay_is_destination(self):
+        topo = two_server_cluster()
+        sim = MultiWriteSimulator(topo)
+        data = np.arange(10, dtype=np.uint8)
+        sim.multiwrite(0, {8: "x", 11: "x"}, data)
+        np.testing.assert_array_equal(sim.memory[8]["x"], data)
+        np.testing.assert_array_equal(sim.memory[11]["x"], data)
+        assert sim.link_bytes[(0, 8)] == 10
+
+    def test_relay_hint_forces_first_hop(self):
+        """Schedule-level path selection (§3.1 paired relaying)."""
+        topo = full_mesh(8)
+        sim = MultiWriteSimulator(topo)
+        data = np.arange(300, dtype=np.uint8)
+        sim.multiwrite(0, {1: "x", 2: "x", 3: "x"}, data, relay=4)
+        assert sim.link_bytes[(0, 4)] == 300           # single copy up
+        for d in [1, 2, 3]:
+            assert sim.link_bytes[(4, d)] == 300       # replicated at relay
+            np.testing.assert_array_equal(sim.memory[d]["x"], data)
+        assert (0, 1) not in sim.link_bytes            # direct links unused
+
+    def test_conflicting_duplicate_delivery_detected(self):
+        topo = full_mesh(4)
+        sim = MultiWriteSimulator(topo)
+        sim.write(0, 1, "x", np.array([1], np.uint8))
+        with pytest.raises(AssertionError):
+            sim.write(2, 1, "x", np.array([2], np.uint8))
+
+    def test_relay_byte_accounting(self):
+        topo = two_server_cluster()
+        sim = MultiWriteSimulator(topo)
+        data = np.zeros(500, np.uint8)
+        sim.multiwrite(0, {9: "x", 10: "x"}, data)
+        # relay 8: rx 500 + tx 2x500
+        assert sim.relay_bytes[8] == 1500
+
+    def test_metadata_payload_overhead_large_domain(self):
+        """§6.4: domains > 64 ranks embed the bitmap in the payload."""
+        topo = full_mesh(96, link_bw=1e9)
+        sim = MultiWriteSimulator(topo)
+        data = np.zeros(1000, np.uint8)
+        sim.write(0, 1, "x", data)
+        assert sim.link_bytes[(0, 1)] == 1000 + bm.metadata_bytes(96)

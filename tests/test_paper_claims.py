@@ -1,0 +1,224 @@
+"""Validation of the paper's quantitative claims (§3.1, §6.2–§6.4).
+
+Three tiers:
+  1. EXACT — the §3.1 derivations, reproduced by both the closed-form
+     latency model in the ideal regime AND the simulator ledger.
+  2. CALIBRATED — Fig 6/7 endpoints and Table 1, reproduced by the
+     calibrated model within stated tolerances.
+  3. QUALITATIVE — Fig 8 shape (mw worse at batch 64, parity ~128,
+     growing gains at 1k/2k).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import latency_model as lm
+from repro.core import schedules as sch
+from repro.core.multiwrite import MultiWriteSimulator
+from repro.core.topology import (
+    HCCS_LINK_BW, split_tp_full_mesh, two_server_cluster)
+
+S16 = 16 * 2**20  # Fig 6 per-rank message
+
+
+def run_allgather(scheme: str, frag_bytes: int = 1 << 16):
+    topo, domains = split_tp_full_mesh(8, tp=4)
+    sim = MultiWriteSimulator(topo)
+    rng = np.random.default_rng(42)
+    payloads = [rng.integers(0, 256, frag_bytes, dtype=np.uint8)
+                for _ in range(8)]
+    sch.ALLGATHER_SCHEMES[scheme](sim, domains, payloads)
+    sch.check_allgather(sim, domains, payloads)
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: exact §3.1 derivations
+# ---------------------------------------------------------------------------
+
+class TestSection31Exact:
+    """Paper §3.1: baseline s/w; unicast paired 3s/(4w); multiwrite paired
+    s/(2w) -> 50% vs baseline, 33% vs unicast; full-multipath multicast
+    >= 16% vs full-multipath unicast."""
+
+    def test_closed_form_ideal_regime(self):
+        s, w = float(S16), HCCS_LINK_BW
+        t = {k: lm.allgather_latency(k, s, w, lm.IDEAL)
+             for k in lm.ALLGATHER_LINK_LOAD}
+        assert t["baseline"] == pytest.approx(s / w)
+        assert t["unicast_paired"] == pytest.approx(3 * s / (4 * w))
+        assert t["multiwrite_paired"] == pytest.approx(s / (2 * w))
+        assert t["unicast_full"] == pytest.approx(3 * s / (5 * w))
+        assert t["multiwrite_full"] == pytest.approx(s / (2 * w))
+        # headline reductions
+        assert 1 - t["multiwrite_paired"] / t["baseline"] == pytest.approx(0.50)
+        assert 1 - t["multiwrite_paired"] / t["unicast_paired"] == \
+            pytest.approx(1 / 3)
+        assert 1 - t["multiwrite_full"] / t["unicast_full"] == \
+            pytest.approx(1 / 6)  # "at least 16%"
+        assert 1 - t["multiwrite_full"] / t["unicast_full"] >= 0.16
+
+    @pytest.mark.parametrize("scheme", list(lm.ALLGATHER_LINK_LOAD))
+    def test_simulator_ledger_matches_closed_form(self, scheme):
+        """The executable schedule's bottleneck-link bytes == the closed-form
+        link-load fraction (the §3.1 math, via actual packet accounting)."""
+        frag = 1 << 16
+        sim = run_allgather(scheme, frag)
+        t_ledger = lm.ledger_latency(sim, lm.IDEAL)
+        t_model = lm.allgather_latency(scheme, frag, HCCS_LINK_BW, lm.IDEAL)
+        # array_split rounding on the full-multipath slices -> 2% tolerance
+        assert t_ledger == pytest.approx(t_model, rel=0.02)
+
+    @pytest.mark.parametrize("scheme", list(lm.ALLGATHER_LINK_LOAD))
+    def test_relay_bytes_ledger_matches_model(self, scheme):
+        frag = 1 << 16
+        sim = run_allgather(scheme, frag)
+        _, relay_frac, _ = lm.ALLGATHER_LINK_LOAD[scheme]
+        if relay_frac == 0:
+            assert not sim.relay_bytes
+        else:
+            got = max(sim.relay_bytes.values()) / frag
+            assert got == pytest.approx(relay_frac, rel=0.02)
+
+    def test_multiwrite_eliminates_cross_link_redundancy(self):
+        sim_u = run_allgather("unicast_paired")
+        sim_m = run_allgather("multiwrite_paired")
+        topo, domains = split_tp_full_mesh(8, tp=4)
+
+        def cross(a, b):
+            return sch.domain_of(a, domains) != sch.domain_of(b, domains)
+
+        red_u = sum(v for (a, b), v in sim_u.redundant_bytes().items()
+                    if cross(a, b))
+        red_m = sum(v for (a, b), v in sim_m.redundant_bytes().items()
+                    if cross(a, b))
+        assert red_u > 0
+        assert red_m == 0
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: calibrated Fig 6 / Fig 7 / Table 1
+# ---------------------------------------------------------------------------
+
+class TestFig6Fig7Calibrated:
+    def test_fig6_30pct_reduction_at_16mb(self):
+        t_base = lm.allgather_latency("baseline", S16)
+        t_mw = lm.allgather_latency("multiwrite_paired", S16)
+        reduction = 1 - t_mw / t_base
+        assert reduction == pytest.approx(0.30, abs=0.03)  # paper: ~30%
+
+    def test_fig6_mw_beats_unicast_multipath(self):
+        t_uni = lm.allgather_latency("unicast_paired", S16)
+        t_mw = lm.allgather_latency("multiwrite_paired", S16)
+        reduction = 1 - t_mw / t_uni
+        # paper: 17%; model (mean, no interference derate): same ordering,
+        # 15-30% band
+        assert 0.15 <= reduction <= 0.30
+
+    def test_fig7_crossover_near_2mb(self):
+        s_star = lm.allgather_crossover_bytes()
+        assert 1.0 * 2**20 <= s_star <= 3.0 * 2**20  # paper: "around 2 MB"
+
+    def test_fig7_small_messages_favor_baseline(self):
+        s = 256 * 2**10
+        assert lm.allgather_latency("multiwrite_paired", s) > \
+            lm.allgather_latency("baseline", s)
+
+    def test_fig7_large_messages_favor_multiwrite(self):
+        for s in (8 * 2**20, 64 * 2**20, 200 * 2**20):
+            assert lm.allgather_latency("multiwrite_paired", s) < \
+                lm.allgather_latency("baseline", s)
+
+    def test_fig7_monotone_in_message_size(self):
+        ts = [lm.allgather_latency("multiwrite_paired", s)
+              for s in lm.FIG7_MESSAGE_BYTES]
+        assert ts == sorted(ts)
+
+
+class TestTable1Calibrated:
+    @pytest.mark.parametrize("batch", sorted(lm.TABLE1_PAPER_US))
+    def test_with_redundant_within_12pct(self, batch):
+        paper_us = lm.TABLE1_PAPER_US[batch][0]
+        model_us = lm.dispatch_cross_server_time(batch, redundant=True) * 1e6
+        assert model_us == pytest.approx(paper_us, rel=0.12)
+
+    @pytest.mark.parametrize("batch", sorted(lm.TABLE1_PAPER_US))
+    def test_without_redundant_within_8pct(self, batch):
+        paper_us = lm.TABLE1_PAPER_US[batch][1]
+        model_us = lm.dispatch_cross_server_time(batch, redundant=False) * 1e6
+        assert model_us == pytest.approx(paper_us, rel=0.08)
+
+    def test_delta_grows_with_batch(self):
+        deltas = [lm.dispatch_cross_server_time(b, True)
+                  - lm.dispatch_cross_server_time(b, False)
+                  for b in sorted(lm.TABLE1_PAPER_US)]
+        assert deltas == sorted(deltas)
+
+
+# ---------------------------------------------------------------------------
+# Tier 2b: simulator ledger reproduces Table 1 byte counts
+# ---------------------------------------------------------------------------
+
+class TestDispatchLedger:
+    def _run(self, batch, scheme, seed=0):
+        topo = two_server_cluster()
+        sim = MultiWriteSimulator(topo)
+        routing = sch.make_routing(batch, 16, 64, 8, seed)
+        fn = sch.dispatch_unicast if scheme == "unicast" else sch.dispatch_multiwrite
+        fn(sim, routing, lm.TOKEN_BYTES)
+        sch.check_dispatch(sim, routing, lm.TOKEN_BYTES)
+        return sim, routing
+
+    def rail_bytes(self, sim):
+        def is_rail(a, b):
+            return a // 8 != b // 8
+        return max(v for (a, b), v in sim.link_bytes.items() if is_rail(a, b))
+
+    def test_multiwrite_rail_bytes_one_copy_per_server(self, batch=64):
+        sim, routing = self._run(batch, "multiwrite")
+        # every token crosses its source rail at most once
+        expect = lm.TOKEN_BYTES * batch  # upper bound: all tokens cross
+        assert self.rail_bytes(sim) <= expect
+        # and redundancy on every rail is zero
+        red = sim.redundant_bytes()
+        for (a, b), v in red.items():
+            if a // 8 != b // 8:
+                assert v == 0
+
+    def test_unicast_rail_redundancy_ratio(self, batch=128):
+        """Table 1 ratio: ~4 crossings/token unicast vs ~1 multiwrite."""
+        sim_u, _ = self._run(batch, "unicast", seed=3)
+        sim_m, _ = self._run(batch, "multiwrite", seed=3)
+        ratio = self.rail_bytes(sim_u) / self.rail_bytes(sim_m)
+        # expected remote NPUs/token ~3.375 unicast (per-NPU dedup in the
+        # routing -> one write per distinct NPU), ~1 crossing multiwrite
+        assert 2.5 <= ratio <= 4.5
+
+    def test_ledger_latency_ordering_large_batch(self):
+        sim_u, _ = self._run(1024, "unicast", seed=1)
+        sim_m, _ = self._run(1024, "multiwrite", seed=1)
+        assert lm.ledger_latency(sim_m) < lm.ledger_latency(sim_u)
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: Fig 8 qualitative shape
+# ---------------------------------------------------------------------------
+
+class TestFig8Qualitative:
+    def test_decode_batch64_mw_worse(self):
+        assert lm.dispatch_e2e_time(64, "multiwrite") > \
+            lm.dispatch_e2e_time(64, "unicast")
+
+    def test_parity_near_batch128(self):
+        t_u = lm.dispatch_e2e_time(128, "unicast")
+        t_m = lm.dispatch_e2e_time(128, "multiwrite")
+        assert abs(t_m - t_u) / t_u < 0.15  # "nearly identical latency"
+
+    def test_prefill_gains_grow_with_batch(self):
+        red = []
+        for b in (1024, 2048):
+            t_u = lm.dispatch_e2e_time(b, "unicast")
+            t_m = lm.dispatch_e2e_time(b, "multiwrite")
+            red.append(1 - t_m / t_u)
+        assert red[0] > 0.05          # paper: 12% at 1k
+        assert red[1] > red[0]        # paper: 27% at 2k > 12% at 1k

@@ -1,0 +1,131 @@
+"""Hypothesis property tests on system invariants.
+
+Invariants covered:
+  * MultiWrite delivers exactly-once to exactly the destination set, for
+    ANY topology/destination combination — and never puts more bytes on
+    any link than unicast does.
+  * The latency model is monotone in message size and respects the
+    scheme ordering at large sizes.
+  * Checkpoint save/restore is identity for arbitrary pytrees.
+  * Data pipeline determinism across host splits.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import latency_model as lm
+from repro.core.multiwrite import MultiWriteSimulator
+from repro.core.topology import full_mesh, two_server_cluster
+
+
+class TestMultiWriteProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(src=st.integers(0, 15),
+           dests=st.sets(st.integers(0, 15), min_size=1, max_size=10),
+           nbytes=st.integers(1, 2048))
+    def test_exactly_once_delivery_two_server(self, src, dests, nbytes):
+        topo = two_server_cluster()
+        sim = MultiWriteSimulator(topo)
+        data = np.arange(nbytes, dtype=np.uint8)
+        sim.multiwrite(src, {d: "x" for d in dests}, data)
+        for d in dests:
+            np.testing.assert_array_equal(sim.memory[d]["x"], data)
+            assert sim.delivery_count[(d, "x")] == 1
+        # nobody else got it
+        for node in range(topo.num_nodes):
+            if node not in dests:
+                assert (node, "x") not in sim.delivery_count
+
+    @settings(max_examples=30, deadline=None)
+    @given(src=st.integers(0, 15),
+           dests=st.sets(st.integers(0, 15), min_size=1, max_size=10),
+           nbytes=st.integers(1, 1024))
+    def test_never_worse_than_unicast_per_link(self, src, dests, nbytes):
+        """MultiWrite bytes <= unicast bytes on EVERY link (the paper's
+        §3.3 principle as a universally-quantified invariant)."""
+        topo = two_server_cluster()
+        data = np.arange(nbytes, dtype=np.uint8)
+        mw, uni = MultiWriteSimulator(topo), MultiWriteSimulator(topo)
+        mw.multiwrite(src, {d: "x" for d in dests}, data)
+        for d in dests:
+            if d != src:
+                uni.write(src, d, "x", data)
+            else:
+                uni.memory[d]["x"] = data
+        for link, b in mw.link_bytes.items():
+            assert b <= uni.link_bytes.get(link, 0) + 0, \
+                f"link {link}: mw {b} > unicast {uni.link_bytes.get(link)}"
+
+    @settings(max_examples=30, deadline=None)
+    @given(n=st.sampled_from([4, 6, 8, 12]), seed=st.integers(0, 999))
+    def test_full_mesh_single_hop_no_relay_cost(self, n, seed):
+        """On a full mesh with no relay hint, MultiWrite == n unicasts
+        (every destination is one hop away: rule 3 degenerates)."""
+        topo = full_mesh(n)
+        rng = np.random.default_rng(seed)
+        dests = rng.choice([i for i in range(n) if i != 0],
+                           size=min(3, n - 1), replace=False)
+        sim = MultiWriteSimulator(topo)
+        data = np.arange(64, dtype=np.uint8)
+        sim.multiwrite(0, {int(d): "x" for d in dests}, data)
+        assert not sim.relay_bytes        # no relaying needed
+        assert sum(sim.link_bytes.values()) == 64 * len(dests)
+
+
+class TestLatencyModelProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(s1=st.integers(2**20, 2**27), s2=st.integers(2**20, 2**27))
+    def test_monotone_in_size(self, s1, s2):
+        if s1 > s2:
+            s1, s2 = s2, s1
+        for scheme in lm.ALLGATHER_LINK_LOAD:
+            assert lm.allgather_latency(scheme, s1) <= \
+                lm.allgather_latency(scheme, s2)
+
+    @settings(max_examples=30, deadline=None)
+    @given(s=st.integers(8 * 2**20, 2**28))
+    def test_scheme_ordering_at_large_sizes(self, s):
+        """Above the crossover: mw_paired < unicast_paired < baseline."""
+        b = lm.allgather_latency("baseline", s)
+        u = lm.allgather_latency("unicast_paired", s)
+        m = lm.allgather_latency("multiwrite_paired", s)
+        assert m < u < b
+
+    @settings(max_examples=30, deadline=None)
+    @given(batch=st.integers(32, 4096))
+    def test_dispatch_redundant_always_slower_at_scale(self, batch):
+        assert lm.dispatch_cross_server_time(batch, True) > \
+            lm.dispatch_cross_server_time(batch, False)
+
+
+class TestCheckpointProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(shapes=st.lists(
+        st.tuples(st.integers(1, 5), st.integers(1, 5)),
+        min_size=1, max_size=4),
+        seed=st.integers(0, 2**31))
+    def test_roundtrip_identity(self, tmp_path_factory, shapes, seed):
+        import jax.numpy as jnp
+        from repro.checkpoint.store import CheckpointManager
+        d = tmp_path_factory.mktemp("ck")
+        rng = np.random.default_rng(seed)
+        tree = {f"k{i}": jnp.asarray(rng.normal(size=s).astype(np.float32))
+                for i, s in enumerate(shapes)}
+        cm = CheckpointManager(str(d))
+        cm.save(1, tree)
+        back, _ = cm.restore(1, tree)
+        for a, b in zip(tree.values(), back.values()):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDataProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(hosts=st.sampled_from([1, 2, 4, 8]), step=st.integers(0, 100))
+    def test_host_split_invariance(self, hosts, step):
+        from repro.data.pipeline import DataConfig, SyntheticLM
+        d = SyntheticLM(DataConfig(vocab=64, seq_len=8, global_batch=8))
+        full = d.batch(step, 0, 1)["tokens"]
+        parts = np.concatenate([d.batch(step, h, hosts)["tokens"]
+                                for h in range(hosts)])
+        np.testing.assert_array_equal(parts, full)

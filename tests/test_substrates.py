@@ -1,0 +1,275 @@
+"""Tests for optimizers, data pipeline, checkpointing, and the FT trainer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointManager
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM, batch_for_model
+from repro.models.api import build_model
+from repro.optim import adamw, adafactor, lion, sgd, chain_clip, \
+    cosine_schedule
+from repro.optim.optimizers import apply_updates, global_norm
+from repro.runtime.trainer import (
+    Trainer, TrainerConfig, TransientFault, make_train_step, StragglerLedger)
+from repro.runtime.server import ServeEngine, ServeConfig
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def quadratic_params():
+    return {"a": jnp.asarray([2.0, -3.0]), "b": {"c": jnp.asarray([[1.5]])}}
+
+
+@pytest.mark.parametrize("make_opt,steps,tol", [
+    (lambda: adamw(lr=0.1), 200, 1e-2),
+    (lambda: adafactor(lr=0.3), 800, 5e-2),   # relative-update optimizer
+    (lambda: lion(lr=0.05), 200, 1e-2),
+    (lambda: sgd(lr=0.3, momentum=0.9), 200, 1e-2),
+])
+def test_optimizers_minimize_quadratic(make_opt, steps, tol):
+    opt = make_opt()
+    params = quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x))
+                   for x in jax.tree_util.tree_leaves(p))
+
+    for step in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, step)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < tol
+
+
+def test_adamw_bf16_state():
+    opt = adamw(lr=0.1, opt_dtype=jnp.bfloat16)
+    params = quadratic_params()
+    state = opt.init(params)
+    assert state["m"]["a"].dtype == jnp.bfloat16
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    upd, state = opt.update(g, state, params, 0)
+    assert np.isfinite(np.asarray(upd["a"])).all()
+
+
+def test_clip_and_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(100)) == pytest.approx(0.1, abs=1e-6)
+    opt = chain_clip(sgd(lr=1.0), max_norm=1.0)
+    params = {"a": jnp.zeros(4)}
+    state = opt.init(params)
+    upd, _ = opt.update({"a": jnp.full((4,), 100.0)}, state, params, 0)
+    assert float(global_norm(upd)) == pytest.approx(1.0, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_deterministic_in_step(self):
+        d = SyntheticLM(DataConfig(vocab=100, seq_len=16, global_batch=4))
+        a = d.batch(7)
+        b = d.batch(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_host_sharding_reconstructs_global(self):
+        d = SyntheticLM(DataConfig(vocab=100, seq_len=16, global_batch=8))
+        full = d.batch(3, 0, 1)
+        parts = [d.batch(3, h, 4)["tokens"] for h in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts), full["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticLM(DataConfig(vocab=100, seq_len=16, global_batch=2))
+        b = d.batch(0)
+        # labels[t] continues tokens[t] (same underlying stream)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_model_batch_adapters(self):
+        d = SyntheticLM(DataConfig(vocab=512, seq_len=8, global_batch=2))
+        raw = d.batch(0)
+        for arch in ("qwen2_vl_2b", "seamless_m4t_medium", "rwkv6_7b"):
+            cfg = get_config(arch).reduced()
+            batch = batch_for_model(cfg, raw)
+            assert "labels" in batch
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def make_tree(self, x=0.0):
+        return {"w": jnp.full((4, 3), x), "nested": {"b": jnp.arange(5.0)},
+                "step": jnp.asarray(7, jnp.int32)}
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        tree = self.make_tree(1.5)
+        cm.save(10, tree, extra={"note": "hi"})
+        got, extra = cm.restore(10, jax.tree_util.tree_map(jnp.zeros_like,
+                                                           tree))
+        assert extra["note"] == "hi"
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomic_commit_no_partial_visible(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(1, self.make_tree())
+        names = os.listdir(tmp_path)
+        assert names == ["step_00000001"]
+
+    def test_keep_last_k_gc(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), keep_last_k=2)
+        for s in (1, 2, 3, 4):
+            cm.save(s, self.make_tree())
+        assert cm.all_steps() == [3, 4]
+
+    def test_corruption_detected(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(5, self.make_tree())
+        # flip bytes in the shard
+        shard = tmp_path / "step_00000005" / "shard_00000.npz"
+        data = dict(np.load(shard))
+        data["w"] = data["w"] + 1
+        np.savez(shard, **data)
+        with pytest.raises(IOError):
+            cm.restore(5, self.make_tree())
+
+    def test_async_write(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), async_write=True)
+        cm.save(2, self.make_tree())
+        cm.wait()
+        assert cm.all_steps() == [2]
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant trainer
+# ---------------------------------------------------------------------------
+
+def tiny_setup(tmp_path=None, total=12, ckpt_every=4):
+    cfg = get_config("mistral_nemo_12b").reduced(
+        n_layers=1, d_model=32, n_heads=2, d_ff=64, vocab=128)
+    model = build_model(cfg, dtype=jnp.float32)
+    data = SyntheticLM(DataConfig(vocab=128, seq_len=16, global_batch=4))
+    tcfg = TrainerConfig(total_steps=total, checkpoint_every=ckpt_every,
+                         checkpoint_dir=str(tmp_path) if tmp_path else None,
+                         log_every=1000)
+    make_batch = lambda s: batch_for_model(cfg, data.batch(s))  # noqa: E731
+    return model, data, tcfg, make_batch
+
+
+class TestTrainer:
+    def test_loss_decreases(self, tmp_path):
+        model, data, tcfg, mb = tiny_setup(tmp_path, total=30)
+        tr = Trainer(model, adamw(lr=3e-3), mb, tcfg)
+        hist = tr.run()
+        first = np.mean([h["loss"] for h in hist[:5]])
+        last = np.mean([h["loss"] for h in hist[-5:]])
+        assert last < first - 0.1, (first, last)
+
+    def test_checkpoint_resume_bitexact(self, tmp_path):
+        model, data, tcfg, mb = tiny_setup(tmp_path, total=8, ckpt_every=4)
+        tr1 = Trainer(model, adamw(lr=1e-3), mb, tcfg,
+                      init_rng=jax.random.key(1))
+        tr1.run()
+        final1 = jax.tree_util.tree_leaves(tr1.state.params)
+
+        # second trainer: resumes from step 8 checkpoint, runs 0 more steps
+        tr2 = Trainer(model, adamw(lr=1e-3), mb, tcfg,
+                      init_rng=jax.random.key(999))  # init overwritten
+        assert int(tr2.state.step) == 8
+        final2 = jax.tree_util.tree_leaves(tr2.state.params)
+        for a, b in zip(final1, final2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_interrupted_run_resumes_and_matches_uninterrupted(self, tmp_path):
+        """Gold FT test: crash at step 6, resume, final params == a run
+        that never crashed (deterministic data replay)."""
+        model, data, tcfg, mb = tiny_setup(tmp_path / "a", total=10,
+                                           ckpt_every=2)
+
+        class Crash(Exception):
+            pass
+
+        boom = {"armed": True}
+
+        def fault(step):
+            if step == 6 and boom["armed"]:
+                boom["armed"] = False
+                raise Crash()
+
+        tr = Trainer(model, sgd(lr=1e-2), mb, tcfg,
+                     init_rng=jax.random.key(3), fault_hook=fault)
+        with pytest.raises(Crash):
+            tr.run()
+        # "new process": fresh trainer, same dir -> resumes at step 6
+        tr2 = Trainer(model, sgd(lr=1e-2), mb, tcfg,
+                      init_rng=jax.random.key(3))
+        assert int(tr2.state.step) == 6
+        tr2.run()
+
+        model3, _, tcfg3, mb3 = tiny_setup(tmp_path / "b", total=10,
+                                           ckpt_every=2)
+        tr3 = Trainer(model3, sgd(lr=1e-2), mb3, tcfg3,
+                      init_rng=jax.random.key(3))
+        tr3.run()
+        for a, b in zip(jax.tree_util.tree_leaves(tr2.state.params),
+                        jax.tree_util.tree_leaves(tr3.state.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+    def test_transient_fault_retried(self, tmp_path):
+        model, data, tcfg, mb = tiny_setup(tmp_path, total=6, ckpt_every=2)
+        fails = {"n": 0}
+
+        def flaky(step):
+            if step == 3 and fails["n"] < 1:
+                fails["n"] += 1
+                raise TransientFault("injected")
+
+        tr = Trainer(model, sgd(lr=1e-2), mb, tcfg, fault_hook=flaky)
+        hist = tr.run()
+        assert fails["n"] == 1
+        assert len(hist) == 6          # all steps completed
+
+    def test_straggler_detection(self):
+        led = StragglerLedger(threshold=3.0)
+        outliers = []
+        for step in range(30):
+            dt = 0.1 if step != 20 else 2.0
+            if led.record(step, dt):
+                outliers.append(step)
+        assert outliers == [20]
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+class TestServer:
+    @pytest.mark.parametrize("arch", ["mistral_nemo_12b", "rwkv6_7b",
+                                      "zamba2_7b"])
+    def test_generate_shapes_and_determinism(self, arch):
+        cfg = get_config(arch).reduced(n_layers=2, d_model=32, n_heads=2,
+                                       d_ff=64, vocab=64)
+        model = build_model(cfg, dtype=jnp.float32)
+        params = model.init(jax.random.key(0))
+        eng = ServeEngine(model, params, ServeConfig(max_new_tokens=5))
+        prompts = np.random.default_rng(0).integers(
+            0, 64, size=(2, 8)).astype(np.int32)
+        out1 = eng.generate(prompts)
+        eng2 = ServeEngine(model, params, ServeConfig(max_new_tokens=5))
+        out2 = eng2.generate(prompts)
+        assert out1.shape == (2, 5)
+        np.testing.assert_array_equal(out1, out2)   # greedy deterministic
