@@ -56,6 +56,48 @@ def bench_dispatch_sim():
     return rows
 
 
+def bench_planner():
+    """Planner sweep: which registered plan wins per payload cell, and the
+    predicted-vs-baseline latency delta (the Fig 7 / Fig 8 decisions as
+    planner output rather than hand-picked schemes)."""
+    from repro.core import latency_model as lm
+    from repro.core import planner as pl
+    from repro.core.topology import split_tp_full_mesh, two_server_cluster
+    rows = []
+    planner = pl.Planner()
+    topo, _ = split_tp_full_mesh(8, tp=4)
+    print("\n== planner: §3.1 AllGather (Fig 7 cells) ==")
+    print(f"{'frag':>10} {'winner':<20} {'split':>6} "
+          f"{'pred us':>9} {'base us':>9} {'delta%':>7}")
+    for frag in lm.FIG7_MESSAGE_BYTES:
+        d = planner.choose("allgather", frag, topo)
+        print(f"{frag/2**20:8.2f}MB {d.plan:<20} {d.knob('split', 1.0):>6} "
+              f"{d.predicted_s*1e6:9.1f} {d.baseline_s*1e6:9.1f} "
+              f"{d.speedup_pct:7.1f}")
+        rows.append({"name": f"planner_ag_{frag//2**10}kb_{d.plan}",
+                     "metric": "delta_vs_baseline_us",
+                     "value": d.delta_vs_baseline * 1e6})
+    xover = pl.emergent_crossover_bytes(topo, planner=planner)
+    print(f"emergent crossover: {xover/2**20:.2f} MB (paper: ~2 MB)")
+    rows.append({"name": "planner_ag_crossover", "metric": "bytes",
+                 "value": xover})
+    print("\n== planner: §3.2 dispatch (Fig 8 cells) ==")
+    topo2 = two_server_cluster()
+    for batch in lm.FIG8_BATCHES:
+        d = planner.choose("dispatch", batch * lm.TOKEN_BYTES, topo2,
+                           token_bytes=lm.TOKEN_BYTES)
+        print(f"batch {batch:>5}: {d.plan:<10} "
+              f"pred={d.predicted_s*1e6:9.1f}us "
+              f"base={d.baseline_s*1e6:9.1f}us ({d.speedup_pct:+.1f}%)")
+        rows.append({"name": f"planner_disp_b{batch}_{d.plan}",
+                     "metric": "delta_vs_baseline_us",
+                     "value": d.delta_vs_baseline * 1e6})
+    ci = planner.cache_info()
+    rows.append({"name": "planner_cache_hit_rate", "metric": "ratio",
+                 "value": ci["hits"] / max(1, ci["hits"] + ci["misses"])})
+    return rows
+
+
 def bench_train_throughput():
     """Tiny-model CPU train-step wall time (framework overhead check)."""
     import jax
@@ -101,7 +143,7 @@ def main(argv=None):
                 if isinstance(v, (int, float)) and not isinstance(v, bool):
                     csv_rows.append((f"{name}.{tag}", k, v))
     if args.only is None:
-        for bench in (bench_kernels, bench_dispatch_sim,
+        for bench in (bench_planner, bench_kernels, bench_dispatch_sim,
                       bench_train_throughput):
             for r in bench():
                 csv_rows.append((r["name"], r["metric"], r["value"]))

@@ -25,7 +25,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import collectives as cl  # noqa: E402
+from repro.core import collectives as cl
+from repro.parallel.compat import shard_map  # noqa: E402
 from repro.launch.hlo_analysis import MeshLayout  # noqa: E402
 from repro.launch.hlo_module import analyze_module  # noqa: E402
 
@@ -49,7 +50,7 @@ def build(scheme, mesh):
         et, eg, st = cl.baseline_dispatch(tok, ids, gates, cfg, epmesh)
         return cl.baseline_combine(et * local, eg, st)
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         step, mesh=mesh, in_specs=(P(("pod", "ep")),) * 3,
         out_specs=P(("pod", "ep")), check_vma=False))
 

@@ -49,6 +49,16 @@ sch.ALLGATHER_SCHEMES["multiwrite_paired"](sim3, domains, payloads)
 sch.check_allgather(sim3, domains, payloads)
 print("  schedule delivers every fragment bit-exactly: OK")
 
+# --- 2b. the planner: scheme choice is dynamic (§5.2) ------------------------
+print("\n== planner: baseline below the Fig 7 crossover, MultiWrite above ==")
+from repro.core import planner as pl  # noqa: E402
+
+for frag in (256 * 2**10, 16 * 2**20):
+    d = pl.default_planner().choose("allgather", frag, topo8)
+    print(f"  {frag/2**20:6.2f} MB -> {d.plan} "
+          f"(predicted {d.predicted_s*1e6:.0f} us, "
+          f"{d.speedup_pct:+.0f}% vs baseline)")
+
 # --- 3. the JAX collective ----------------------------------------------------
 print("\n== shard_map MultiWrite AllGather (local devices) ==")
 import jax  # noqa: E402
@@ -56,16 +66,17 @@ import jax.numpy as jnp  # noqa: E402
 import functools  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.core import collectives as cl  # noqa: E402
+from repro.parallel.compat import shard_map  # noqa: E402
 
 n = len(jax.devices())
 if n >= 2 and n % 2 == 0:
     mesh = jax.make_mesh((n,), ("x",))
     x = jnp.arange(n * 8.0).reshape(n * 4, 2)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         functools.partial(cl.multiwrite_allgather, axis_name="x",
                           split=0.5),
         mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
-    ref = jax.jit(jax.shard_map(
+    ref = jax.jit(shard_map(
         functools.partial(cl.allgather_reference, axis_name="x"),
         mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
     same = bool(jnp.array_equal(fn(x), ref(x)))

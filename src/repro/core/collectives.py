@@ -16,6 +16,9 @@ schedule* (DESIGN.md §2):
 Contents:
 
 AllGather (paper §3.1 / §5.2):
+  * :func:`planned_allgather`    — planner-selected scheme + split (the
+    §5.2 dynamic workflow: baseline below the Fig 7 crossover, MultiWrite
+    above it — no hard-coded ``mode=``/``split=`` at call sites).
   * :func:`multiwrite_allgather` — split-TP AllGather using idle
     cross-domain links, paired or full relaying, one cross copy per chunk.
   * :func:`allgather_reference`  — plain subgroup all_gather (baseline).
@@ -47,6 +50,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.parallel.compat import axis_size
+
 
 # ===========================================================================
 # AllGather over split TP domains (§3.1, §5.2)
@@ -61,7 +66,7 @@ def allgather_reference(x: jax.Array, axis_name: str,
                         num_domains: int = 2) -> jax.Array:
     """Baseline: all_gather over the local TP domain only (paper §5.2
     traditional workflow).  Returns [domain_size, *x.shape]."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     groups = _domain_groups(n, num_domains)
     return lax.all_gather(x, axis_name, axis_index_groups=groups)
 
@@ -94,7 +99,7 @@ def multiwrite_allgather(x: jax.Array, axis_name: str, *,
     """
     if num_domains != 2:
         raise NotImplementedError("paired relaying is defined for 2 domains")
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     half = n // 2
     rows = x.shape[0]
     cut = int(round(rows * split))
@@ -114,6 +119,36 @@ def multiwrite_allgather(x: jax.Array, axis_name: str, *,
     else:
         raise ValueError(f"unknown mode {mode!r}")
     return jnp.concatenate([gd, gc], axis=1)
+
+
+def planned_allgather(x: jax.Array, axis_name: str, *,
+                      num_domains: int = 2,
+                      planner=None, hw=None) -> jax.Array:
+    """AllGather whose scheme and split come from the planner (§5.2
+    dynamic workflow) instead of hard-coded ``mode=``/``split=`` kwargs.
+
+    At trace time the fragment size and split-TP topology are static, so
+    the planner's (LRU-cached) decision selects among the registered
+    executable plans: baseline below the Fig 7 crossover,
+    multiwrite paired/full above it, at the split the latency model
+    scored best.  Must be called inside ``shard_map``.
+    """
+    import math as _math
+
+    from repro.core import planner as _planner_mod
+    from repro.core.topology import split_tp_full_mesh
+
+    n = axis_size(axis_name)
+    frag_bytes = _math.prod(x.shape) * x.dtype.itemsize
+    topo, _ = split_tp_full_mesh(n, tp=max(1, n // num_domains))
+    pl = planner or _planner_mod.default_planner()
+    decision = pl.choose("allgather", frag_bytes, topo, hw,
+                         executable_only=True, num_domains=num_domains)
+    kw = decision.shard_map_kwargs
+    if kw["mode"] is None:
+        return allgather_reference(x, axis_name, num_domains)
+    return multiwrite_allgather(x, axis_name, num_domains=num_domains,
+                                split=kw["split"], mode=kw["mode"])
 
 
 def _paired_relay_gather(xc: jax.Array, axis_name: str, n: int,

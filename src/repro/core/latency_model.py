@@ -54,6 +54,7 @@ import dataclasses
 import math
 
 from .multiwrite import MultiWriteSimulator
+from .plan import Ledger
 from .topology import HCCS_LINK_BW, ROCE_LINK_BW
 
 
@@ -78,31 +79,47 @@ DEFAULT = HardwareModel()
 
 
 # ---------------------------------------------------------------------------
-# Ledger-driven latency (works for ANY schedule run on the simulator)
+# Ledger-driven latency (works for ANY plan / schedule run on the simulator)
 # ---------------------------------------------------------------------------
 
-def ledger_latency(sim: MultiWriteSimulator,
-                   hw: HardwareModel = DEFAULT) -> float:
-    """End-to-end latency of the schedule recorded in ``sim``'s ledger."""
-    if not sim.link_bytes:
+def score_ledger(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
+    """End-to-end latency of any plan's :class:`~repro.core.plan.Ledger`.
+
+    This is THE scoring function of the planner: every registered
+    CollectivePlan's simulated ledger runs through the same alpha-beta
+    bottleneck model, so plan choice is an emergent property of the
+    calibration (Fig 7's ~2 MB crossover falls out of ``alpha_hop`` and
+    ``copy_bw`` — nothing scheme-specific is hard-coded here).
+    """
+    if not ledger.link_bytes:
         return 0.0
-    # distinct concurrent flows per link (for the interference derate):
-    flows: dict[tuple[int, int], set[int]] = {}
-    for rec in sim.trace:
-        flows.setdefault((rec.src, rec.dst), set()).add(rec.dest_bitmap)
     link_time = 0.0
-    for key, nbytes in sim.link_bytes.items():
-        bw = sim.topo.link(*key).bw
-        if len(flows.get(key, ())) >= 3:
+    for key, nbytes in ledger.link_bytes.items():
+        bw = ledger.topo.link(*key).bw
+        if ledger.flow_counts.get(key, 0) >= 3:
             bw *= hw.flow_interference
         link_time = max(link_time, nbytes / bw)
     relay_time = 0.0
-    relayed = False
-    if sim.relay_bytes:
-        relayed = True
-        relay_time = max(sim.relay_bytes.values()) / hw.copy_bw
-    return (hw.alpha_base + link_time + relay_time
-            + (hw.alpha_hop if relayed else 0.0))
+    if ledger.relay_bytes:
+        relay_time = max(ledger.relay_bytes.values()) / hw.copy_bw
+    engine_time = 0.0
+    for node, nbytes in ledger.engine_serial.items():
+        # software forwarding engine (§6.4 AICPU): per-copy egress
+        # serializes at the node's fastest egress link
+        bw = max((ln.bw for ln in ledger.topo.links.values()
+                  if ln.src == node), default=math.inf)
+        engine_time = max(engine_time, nbytes / bw)
+    return (hw.alpha_base * max(1, ledger.stages) + ledger.alpha_extra_s
+            + link_time + relay_time + engine_time
+            + (hw.alpha_hop if ledger.relayed else 0.0))
+
+
+def ledger_latency(sim: MultiWriteSimulator | Ledger,
+                   hw: HardwareModel = DEFAULT) -> float:
+    """Latency of a simulator run (or a pre-built Ledger)."""
+    if isinstance(sim, Ledger):
+        return score_ledger(sim, hw)
+    return score_ledger(Ledger.from_sim(sim), hw)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +171,11 @@ def allgather_crossover_bytes(link_bw: float = HCCS_LINK_BW,
 TOKEN_BYTES = 7168            # DeepSeek-V3 hidden size, fp8 dispatch payload
 DISPATCH_ALPHA_UNICAST = 40e-6   # fitted once to Table 1 'w/ redundant'
 DISPATCH_ALPHA_MW = 25e-6        # fitted once to Table 1 'w/o redundant'
+RELAY_SETUP_S = 55e-6         # relay pipeline establishment (fitted to the
+#                               Fig 8 parity point at decode batch 128);
+#                               also charged to the multiwrite dispatch
+#                               plan's ledger so the planner reproduces
+#                               Fig 8's small-batch unicast preference.
 
 
 def expected_remote_copies(num_experts: int = 64, top_k: int = 8,
@@ -227,9 +249,7 @@ def dispatch_e2e_time(batch: int, scheme: str,
     # relay forwards each copy over a distinct HCCS link; its egress engine
     # serializes the per-token copies (AICPU data plane, §6.4):
     relay_fwd = batch * deliveries * token_bytes / hccs_bw
-    relay_setup = 55e-6  # relay pipeline establishment (fitted to Fig 8
-    #                      parity point at batch 128)
-    return (DISPATCH_ALPHA_UNICAST + relay_setup + rail_mw
+    return (DISPATCH_ALPHA_UNICAST + RELAY_SETUP_S + rail_mw
             + relay_copy + relay_fwd)
 
 

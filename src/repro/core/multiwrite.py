@@ -72,6 +72,10 @@ class MultiWriteSimulator:
         # node -> bytes moved through it as a relay (rx + tx of forwarded
         # traffic) — drives the AICPU-style relay processing cost (§6.4).
         self.relay_bytes: dict[int, int] = defaultdict(int)
+        # tx-only component of relay_bytes: what the relay's forwarding
+        # engine serializes onto egress links (§6.4 data plane) — plans
+        # whose relays forward in software charge this separately.
+        self.relay_tx_bytes: dict[int, int] = defaultdict(int)
         self.max_hops = 0
 
     # -- the standard write (baseline primitive) ----------------------------
@@ -93,6 +97,7 @@ class MultiWriteSimulator:
             self._account(a, b, data, nbytes, meta, step, _mw)
         for mid in path[1:-1]:  # store-and-forward relays on multi-hop routes
             self.relay_bytes[mid] += 2 * nbytes
+            self.relay_tx_bytes[mid] += nbytes
         self._deliver(dst, buf_name, data)
 
     # -- MultiWrite (§4.3) ---------------------------------------------------
@@ -138,6 +143,7 @@ class MultiWriteSimulator:
             else:
                 if node != origin:
                     self.relay_bytes[node] += nbytes  # tx of forwarded data
+                    self.relay_tx_bytes[node] += nbytes
                 self.write(node, dst, buf, data, step,
                            _meta=bm.encode([dst], self.topo.num_nodes),
                            _mw=False)
@@ -158,6 +164,7 @@ class MultiWriteSimulator:
                           len(sub) > 1)
             if node != origin:
                 self.relay_bytes[node] += nbytes  # tx of forwarded data
+                self.relay_tx_bytes[node] += nbytes
             if len(sub) == 1 and hop in sub:
                 self._deliver(hop, sub[hop], data)
             else:

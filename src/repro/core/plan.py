@@ -1,0 +1,240 @@
+"""Collective-plan IR: one uniform description of a collective scheme.
+
+Before this module the repo had three disconnected descriptions of the
+same collective — free-function simulator schedules (schedules.py),
+closed-form latency entries (latency_model.ALLGATHER_LINK_LOAD) and
+hard-coded shard_map kwargs at every JAX call site.  A
+:class:`CollectivePlan` unifies them:
+
+  * ``name`` / ``op``      — identity in the plan registry;
+  * ``knobs``              — the declared tunables (``split``, ``mode``,
+                             ``microbatch``) with candidate grids, seeded
+                             by the §5.2 analytic optimum
+                             (:func:`repro.core.schedules.optimal_split`);
+  * ``simulate(scenario, payload_bytes, **knobs) -> Ledger``
+                           — drives the :class:`MultiWriteSimulator`
+                             packet oracle at a small probe size and
+                             scales the per-link byte ledger to the real
+                             payload (the ledger is linear in payload
+                             bytes for every scheme in the paper);
+  * ``shard_map_kwargs(**knobs)``
+                           — what the JAX layer needs to execute the
+                             winning plan (``mode=``/``split=`` for the
+                             §3.1 AllGather, ``moe_scheme`` for §3.2
+                             dispatch).
+
+The registry is the extension point: a new topology or scheme in a later
+PR is ONE ``register_plan`` call — the planner, the benchmarks and the
+JAX layer pick it up without edits (the TACCL-style "synthesis from a
+cost model" architecture, arXiv 2305.13479).
+
+:class:`~repro.core.planner.Planner` sweeps registered plans x knob
+grids and scores each ledger with the calibrated latency model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Iterator, Mapping, Sequence
+
+from .multiwrite import MultiWriteSimulator
+from .topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# Ledger: the scored artifact of a simulated plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ledger:
+    """Per-link / per-relay byte accounting for one executed plan.
+
+    ``link_bytes``   (src, dst) -> bytes carried (incl. §4.1 metadata).
+    ``relay_bytes``  node -> rx+tx bytes moved as a relay (§6.4 AICPU
+                     copy/forward cost).
+    ``flow_counts``  (src, dst) -> distinct concurrent flows (drives the
+                     unicast-multipath interference derate).
+    ``stages``       serialized schedule stages, each paying the operator
+                     startup alpha (microbatching = ``stages`` chunks).
+    ``relayed``      whether any relay stage exists (pays ``alpha_hop``).
+    ``alpha_extra_s``  schedule-specific fixed setup beyond the generic
+                     alphas (the Fig 8 relay pipeline establishment).
+    ``engine_serial``  node -> egress bytes that serialize through ONE
+                     forwarding engine (§6.4 AICPU software relay).
+                     Populated only by plans whose relays forward in
+                     software (MoE dispatch); hardware-parallel relays
+                     (§3.1 paired relaying over distinct links) leave it
+                     empty.  Scored at the node's fastest egress link.
+    """
+
+    topo: Topology
+    link_bytes: Mapping[tuple[int, int], float]
+    relay_bytes: Mapping[int, float]
+    flow_counts: Mapping[tuple[int, int], int]
+    stages: int = 1
+    relayed: bool = False
+    alpha_extra_s: float = 0.0
+    engine_serial: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
+
+    @classmethod
+    def from_sim(cls, sim: MultiWriteSimulator, stages: int = 1,
+                 alpha_extra_s: float = 0.0) -> "Ledger":
+        flows: dict[tuple[int, int], set[int]] = {}
+        for rec in sim.trace:
+            flows.setdefault((rec.src, rec.dst), set()).add(rec.dest_bitmap)
+        return cls(topo=sim.topo,
+                   link_bytes=dict(sim.link_bytes),
+                   relay_bytes=dict(sim.relay_bytes),
+                   flow_counts={k: len(v) for k, v in flows.items()},
+                   stages=stages,
+                   relayed=bool(sim.relay_bytes),
+                   alpha_extra_s=alpha_extra_s)
+
+    def scaled(self, factor: float) -> "Ledger":
+        """Ledger for a payload ``factor`` x larger (bytes are linear in
+        payload size; flow structure is size-independent)."""
+        if factor == 1.0:
+            return self
+        return dataclasses.replace(
+            self,
+            link_bytes={k: v * factor for k, v in self.link_bytes.items()},
+            relay_bytes={k: v * factor for k, v in self.relay_bytes.items()},
+            engine_serial={k: v * factor
+                           for k, v in self.engine_serial.items()})
+
+    @property
+    def bottleneck_link(self) -> tuple[tuple[int, int], float]:
+        key = max(self.link_bytes,
+                  key=lambda k: self.link_bytes[k] / self.topo.link(*k).bw)
+        return key, self.link_bytes[key]
+
+    def total_bytes(self) -> float:
+        return float(sum(self.link_bytes.values()))
+
+
+# ---------------------------------------------------------------------------
+# Scenarios: the static context a plan runs against
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AllGatherScenario:
+    """§3.1 split-TP AllGather: ``domains`` partition ``topo``'s nodes."""
+
+    topo: Topology
+    domains: tuple[tuple[int, ...], ...]
+
+    @classmethod
+    def split_tp(cls, topo: Topology,
+                 num_domains: int = 2) -> "AllGatherScenario":
+        n = topo.num_nodes
+        tp = n // num_domains
+        doms = tuple(tuple(range(i, i + tp)) for i in range(0, n, tp))
+        return cls(topo=topo, domains=doms)
+
+    def cache_key(self):
+        return ("allgather", self.domains)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchScenario:
+    """§3.2 MoE AlltoAll dispatch over an oversubscribed cluster."""
+
+    topo: Topology
+    num_experts: int = 64
+    top_k: int = 8
+    token_bytes: int = 7168
+    seed: int = 0
+
+    def cache_key(self):
+        return ("dispatch", self.num_experts, self.top_k, self.token_bytes)
+
+
+# ---------------------------------------------------------------------------
+# The plan IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePlan:
+    """One registered collective scheme with declared knobs.
+
+    ``simulate_fn(scenario, payload_bytes, **knobs) -> Ledger`` is the
+    semantic oracle; ``kwargs_fn(**knobs)`` produces the JAX-layer kwargs
+    of the winning configuration.  ``executable`` marks plans that have a
+    shard_map lowering (unicast multipath exists only as a paper
+    comparison point, so the planner excludes it when asked for an
+    executable choice).
+    """
+
+    name: str
+    op: str                                   # "allgather" | "dispatch"
+    knobs: Mapping[str, tuple]                # knob -> candidate grid
+    simulate_fn: Callable[..., Ledger]
+    kwargs_fn: Callable[..., dict] = lambda **kw: dict(kw)
+    executable: bool = True
+
+    def knob_grid(self) -> Iterator[dict]:
+        if not self.knobs:
+            yield {}
+            return
+        names = sorted(self.knobs)
+        for combo in itertools.product(*(self.knobs[k] for k in names)):
+            yield dict(zip(names, combo))
+
+    def default_knobs(self) -> dict:
+        return {k: v[0] for k, v in self.knobs.items()}
+
+    def simulate(self, scenario, payload_bytes: float, **knobs) -> Ledger:
+        kn = {**self.default_knobs(), **knobs}
+        return self.simulate_fn(scenario, float(payload_bytes), **kn)
+
+    def shard_map_kwargs(self, **knobs) -> dict:
+        kn = {**self.default_knobs(), **knobs}
+        return self.kwargs_fn(**kn)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+PLAN_REGISTRY: dict[tuple[str, str], CollectivePlan] = {}
+BASELINE_PLAN = {"allgather": "baseline", "dispatch": "unicast"}
+
+
+def register_plan(plan: CollectivePlan) -> CollectivePlan:
+    key = (plan.op, plan.name)
+    PLAN_REGISTRY[key] = plan
+    return plan
+
+
+def get_plan(op: str, name: str) -> CollectivePlan:
+    try:
+        return PLAN_REGISTRY[(op, name)]
+    except KeyError:
+        raise KeyError(
+            f"no plan {name!r} registered for op {op!r}; have "
+            f"{sorted(n for o, n in PLAN_REGISTRY if o == op)}") from None
+
+
+def plans_for(op: str, executable_only: bool = False
+              ) -> list[CollectivePlan]:
+    """Registered plans for ``op`` in registration order."""
+    out = [p for (o, _), p in PLAN_REGISTRY.items() if o == op]
+    if executable_only:
+        out = [p for p in out if p.executable]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# probe-size helpers shared by plan implementations
+# ---------------------------------------------------------------------------
+
+PROBE_FRAG_BYTES = 1 << 14        # AllGather probe fragment (16 KiB)
+PROBE_TOKEN_BYTES = 128           # dispatch probe token payload
+PROBE_BATCH = 32                  # dispatch probe tokens per NPU
+
+
+def probe_scale(payload_bytes: float, probe_bytes: float) -> float:
+    return float(payload_bytes) / float(probe_bytes) if probe_bytes else 1.0

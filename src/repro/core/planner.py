@@ -1,0 +1,251 @@
+"""Latency-model-driven plan selection (paper §5.2 dynamic workflow).
+
+The paper makes scheme choice *dynamic*: "the split ratio is dynamically
+calculated based on the measured bandwidth of both link types", and Fig 7
+shows MultiWrite only wins past a ~2 MB crossover.  :class:`Planner`
+reproduces that behaviour for any registered
+:class:`~repro.core.plan.CollectivePlan`:
+
+    decision = Planner().choose("allgather", payload_bytes, topo)
+    decision.plan               # "baseline" below ~2 MB, "multiwrite_*" above
+    decision.shard_map_kwargs   # mode=/split= for the JAX layer
+
+``choose`` sweeps every registered plan x its knob grid (grids are seeded
+on :func:`repro.core.schedules.optimal_split`), simulates each candidate
+on the packet oracle, scores the ledger with the calibrated
+:class:`~repro.core.latency_model.HardwareModel`, and memoizes the
+decision in an LRU cache keyed on
+``(op, topology fingerprint, bucketed payload size, hw)`` — so the JAX
+layer can consult the planner at every trace without re-simulating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Optional
+
+from . import plan as plan_ir
+from . import schedules as _schedules  # noqa: F401  (registers the plans)
+from .latency_model import DEFAULT, HardwareModel, score_ledger
+from .topology import TPU_ICI_LINK_BW, Topology, full_mesh, tpu_pods
+
+
+# ---------------------------------------------------------------------------
+# cache keys
+# ---------------------------------------------------------------------------
+
+def topology_fingerprint(topo: Topology) -> tuple:
+    """Hashable identity of a topology: name, size and the sorted multiset
+    of link bandwidths (what the latency model can distinguish)."""
+    bws = sorted(set(ln.bw for ln in topo.links.values()))
+    return (topo.name, topo.num_nodes, len(topo.links), tuple(bws))
+
+
+def bucket_payload(payload_bytes: float) -> int:
+    """Power-of-two payload bucket: plan choice is scored at the bucket
+    size, so nearby payloads share one cache entry."""
+    if payload_bytes <= 1:
+        return 1
+    return 1 << int(math.ceil(math.log2(float(payload_bytes))))
+
+
+# ---------------------------------------------------------------------------
+# decisions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    """The planner's verdict for one (op, topology, payload bucket)."""
+
+    op: str
+    plan: str                       # winning plan name
+    knobs: tuple                    # sorted (knob, value) pairs
+    predicted_s: float              # winner's modeled latency
+    baseline_s: float               # the op's baseline plan latency
+    payload_bytes: int              # bucketed payload the scores used
+    shard_map_kwargs: dict          # what the JAX layer executes
+    candidates: tuple               # ((plan, knobs, predicted_s), ...) sorted
+
+    @property
+    def delta_vs_baseline(self) -> float:
+        """Predicted latency saved vs the baseline plan (seconds; >0 means
+        the chosen plan is faster)."""
+        return self.baseline_s - self.predicted_s
+
+    @property
+    def speedup_pct(self) -> float:
+        if self.baseline_s <= 0:
+            return 0.0
+        return 100.0 * (1.0 - self.predicted_s / self.baseline_s)
+
+    def knob(self, name: str, default=None):
+        return dict(self.knobs).get(name, default)
+
+    def summary(self) -> str:
+        kn = ", ".join(f"{k}={v}" for k, v in self.knobs)
+        return (f"{self.op}: plan={self.plan}({kn}) "
+                f"predicted={self.predicted_s * 1e6:.1f}us "
+                f"baseline={self.baseline_s * 1e6:.1f}us "
+                f"({self.speedup_pct:+.1f}%)")
+
+    def report(self) -> dict:
+        """JSON-serializable view for dry-run cells / serve stats."""
+        return {"plan": self.plan, "knobs": dict(self.knobs),
+                "predicted_us": self.predicted_s * 1e6,
+                "baseline_us": self.baseline_s * 1e6,
+                "delta_vs_baseline_us": self.delta_vs_baseline * 1e6,
+                "speedup_pct": self.speedup_pct}
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+class Planner:
+    """Sweeps registered plans + knob grids; scores with the latency model.
+
+    One process-wide instance (:func:`default_planner`) backs the JAX
+    layer; tests construct their own to control the cache.
+    """
+
+    def __init__(self, hw: HardwareModel = DEFAULT,
+                 cache_size: int = 256) -> None:
+        self.hw = hw
+        self.cache_size = int(cache_size)
+        self._cache: OrderedDict[tuple, PlanDecision] = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- cache ---------------------------------------------------------------
+    def cache_info(self) -> dict:
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "size": len(self._cache), "maxsize": self.cache_size}
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self.cache_hits = self.cache_misses = 0
+
+    # -- scenario construction ----------------------------------------------
+    @staticmethod
+    def _scenario(op: str, topo: Topology, scenario_kw: dict):
+        if op == "allgather":
+            num_domains = scenario_kw.get("num_domains", 2)
+            return plan_ir.AllGatherScenario.split_tp(topo, num_domains)
+        if op == "dispatch":
+            return plan_ir.DispatchScenario(
+                topo=topo,
+                num_experts=scenario_kw.get("num_experts", 64),
+                top_k=scenario_kw.get("top_k", 8),
+                token_bytes=scenario_kw.get("token_bytes", 7168))
+        raise ValueError(f"unknown collective op {op!r}")
+
+    # -- the decision --------------------------------------------------------
+    def choose(self, op: str, payload_bytes: float, topo: Topology,
+               hw: Optional[HardwareModel] = None, *,
+               executable_only: bool = False, **scenario_kw) -> PlanDecision:
+        """Pick the fastest registered plan for ``op`` at ``payload_bytes``.
+
+        ``payload_bytes`` is the per-participant payload: the AllGather
+        fragment size, or ``tokens_per_rank * token_bytes`` for dispatch.
+        """
+        hw = hw or self.hw
+        bucket = bucket_payload(payload_bytes)
+        scenario = self._scenario(op, topo, scenario_kw)
+        key = (op, topology_fingerprint(topo), bucket, hw,
+               executable_only, scenario.cache_key())
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+            self._cache.move_to_end(key)
+            return hit
+        self.cache_misses += 1
+        decision = self._sweep(op, scenario, bucket, hw, executable_only)
+        self._cache[key] = decision
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        return decision
+
+    def _sweep(self, op: str, scenario, bucket: int, hw: HardwareModel,
+               executable_only: bool) -> PlanDecision:
+        plans = plan_ir.plans_for(op, executable_only=executable_only)
+        if not plans:
+            raise ValueError(f"no plans registered for op {op!r}")
+        scored: list[tuple[float, int, plan_ir.CollectivePlan, dict]] = []
+        for order, p in enumerate(plans):
+            for knobs in p.knob_grid():
+                ledger = p.simulate(scenario, bucket, **knobs)
+                t = score_ledger(ledger, hw)
+                scored.append((t, order, p, knobs))
+        scored.sort(key=lambda s: (s[0], s[1]))
+        best_t, _, best, best_knobs = scored[0]
+        base_name = plan_ir.BASELINE_PLAN[op]
+        base_t = min((t for t, _, p, _ in scored if p.name == base_name),
+                     default=best_t)
+        return PlanDecision(
+            op=op, plan=best.name,
+            knobs=tuple(sorted(best_knobs.items())),
+            predicted_s=best_t, baseline_s=base_t, payload_bytes=bucket,
+            shard_map_kwargs=best.shard_map_kwargs(**best_knobs),
+            candidates=tuple((p.name, tuple(sorted(kn.items())), t)
+                             for t, _, p, kn in scored))
+
+
+_DEFAULT: Optional[Planner] = None
+
+
+def default_planner() -> Planner:
+    """Process-wide planner the JAX layer consults at trace time."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Planner()
+    return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# high-level helpers consumed by the JAX / launch / benchmark layers
+# ---------------------------------------------------------------------------
+
+def moe_dispatch_decision(*, num_pods: int, ep_per_pod: int,
+                          num_experts: int, top_k: int,
+                          tokens_per_rank: int, token_bytes: int,
+                          hw: Optional[HardwareModel] = None,
+                          planner: Optional[Planner] = None) -> PlanDecision:
+    """Plan the MoE dispatch for one EP mesh slice.
+
+    The EP mesh maps onto the §3.2 cluster shape: pod == server (slow
+    DCN axis), chips-per-pod == NPUs-per-server (fast ICI axis).  The
+    payload is the per-rank token traffic of one dispatch.  A
+    single-pod mesh has no slow axis: it is planned on the all-ICI full
+    mesh it actually is (where unicast and MultiWrite ledgers coincide
+    and the tie-break keeps the relay-free unicast plan).
+    """
+    planner = planner or default_planner()
+    if num_pods > 1:
+        topo = tpu_pods(chips_per_pod=max(2, ep_per_pod),
+                        num_pods=num_pods)
+    else:
+        topo = full_mesh(max(2, ep_per_pod), link_bw=TPU_ICI_LINK_BW,
+                         name="ici_full_mesh")
+    return planner.choose(
+        "dispatch", float(tokens_per_rank) * token_bytes, topo, hw,
+        num_experts=num_experts, top_k=top_k, token_bytes=token_bytes)
+
+
+def emergent_crossover_bytes(topo: Topology,
+                              hw: Optional[HardwareModel] = None,
+                              lo: float = 64 * 2 ** 10,
+                              hi: float = 64 * 2 ** 20,
+                              planner: Optional[Planner] = None) -> float:
+    """Smallest payload bucket where the planner stops choosing baseline
+    (the emergent Fig 7 crossover).  Returns ``inf`` if baseline always
+    wins in [lo, hi]."""
+    planner = planner or default_planner()
+    size = float(lo)
+    while size <= hi:
+        d = planner.choose("allgather", size, topo, hw)
+        if d.plan != "baseline":
+            return float(d.payload_bytes)
+        size *= 2
+    return math.inf

@@ -6,6 +6,16 @@ perform one collective operation over a :class:`Topology`, producing
 - the delivered buffers (for correctness assertions), and
 - the per-link byte ledger (for the latency model).
 
+Every schedule is exposed twice:
+
+  * the low-level driver function below (the packet-level oracle the
+    correctness tests exercise directly), and
+  * a registered :class:`~repro.core.plan.CollectivePlan` (bottom of
+    this module) with declared knob grids and a
+    ``simulate(scenario, payload_bytes) -> Ledger`` method — the unit
+    the :class:`~repro.core.planner.Planner` sweeps and scores.  Adding
+    a scheme in a later PR is one driver + one ``register_plan`` call.
+
 Schedules implemented (one per paper scheme):
 
 AllGather on a full-mesh split into TP domains (§3.1 / §5.2):
@@ -42,6 +52,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from . import plan as plan_ir
 from .multiwrite import MultiWriteSimulator
 from .topology import Topology, same_index_peer
 
@@ -301,24 +312,182 @@ def optimal_split(scheme: str, num_relays: int = 1) -> float:
                           r = 6(1-r)/4                         -> r = 3/5
     multiwrite full       cross link carries p + 3p' = 4(1-r)s/4
                           r = (1-r)                            -> r = 1/2
+
+    Schemes registered by later PRs without an entry here fall back to
+    their plan's declared knob seed (head of the split grid).
     """
-    return {
+    table = {
         "baseline": 1.0,
         "unicast_paired": 0.75,
         "multiwrite_paired": 0.5,
         "unicast_full": 0.6,
         "multiwrite_full": 0.5,
-    }[scheme]
+    }
+    if scheme in table:
+        return table[scheme]
+    plan = plan_ir.PLAN_REGISTRY.get(("allgather", scheme))
+    if plan is not None and "split" in plan.knobs:
+        return plan.knobs["split"][0]
+    raise KeyError(scheme)
 
 
-ALLGATHER_SCHEMES: dict[str, Callable] = {
-    "baseline": lambda sim, dom, pay: allgather_baseline(sim, dom, pay),
-    "unicast_paired": lambda sim, dom, pay: allgather_unicast_multipath(
-        sim, dom, pay, split=optimal_split("unicast_paired")),
-    "multiwrite_paired": lambda sim, dom, pay: allgather_multiwrite(
-        sim, dom, pay, split=optimal_split("multiwrite_paired")),
-    "unicast_full": lambda sim, dom, pay: allgather_full_multipath(
-        sim, dom, pay, split=optimal_split("unicast_full"), multicast=False),
-    "multiwrite_full": lambda sim, dom, pay: allgather_full_multipath(
-        sim, dom, pay, split=optimal_split("multiwrite_full"), multicast=True),
+# ---------------------------------------------------------------------------
+# Plan registration: every scheme becomes a CollectivePlan in the registry
+# ---------------------------------------------------------------------------
+
+_AG_DRIVERS: dict[str, Callable] = {
+    # scheme -> driver(sim, domains, payloads, split)
+    "baseline": lambda sim, dom, pay, split: allgather_baseline(
+        sim, dom, pay),
+    "unicast_paired": allgather_unicast_multipath,
+    "multiwrite_paired": allgather_multiwrite,
+    "unicast_full": lambda sim, dom, pay, split: allgather_full_multipath(
+        sim, dom, pay, split, multicast=False),
+    "multiwrite_full": lambda sim, dom, pay, split: allgather_full_multipath(
+        sim, dom, pay, split, multicast=True),
 }
+
+
+def register_allgather_driver(scheme: str, driver: Callable) -> None:
+    """Legacy-driver hook for schemes registered by later PRs: makes the
+    scheme callable through ALLGATHER_SCHEMES / run_allgather_scheme in
+    addition to the plan registry."""
+    _AG_DRIVERS[scheme] = driver
+
+
+def run_allgather_scheme(scheme: str, sim: MultiWriteSimulator,
+                         domains: Sequence[Sequence[int]],
+                         payloads: Sequence[np.ndarray],
+                         split: float | None = None) -> None:
+    """Drive one AllGather scheme at its (or an explicit) split ratio."""
+    if scheme not in _AG_DRIVERS:
+        plan_ir.get_plan("allgather", scheme)   # raise if truly unknown
+        raise KeyError(
+            f"scheme {scheme!r} is registered as a plan but has no "
+            f"simulator driver; add one via register_allgather_driver()")
+    if split is None:
+        split = optimal_split(scheme)
+    _AG_DRIVERS[scheme](sim, domains, payloads, split)
+
+
+def _split_grid(scheme: str, steps=(0.0, -0.125, 0.125, -0.25, 0.25)
+                ) -> tuple[float, ...]:
+    """Knob grid seeded on the §5.2 analytic optimum (seed listed first;
+    1.0 excluded for relayed schemes — that degenerates to baseline)."""
+    seed = optimal_split(scheme)
+    grid = []
+    for d in steps:
+        v = round(min(0.96875, max(0.125, seed + d)), 5)
+        if v not in grid:
+            grid.append(v)
+    return tuple(grid)
+
+
+def _simulate_allgather(scheme: str):
+    def simulate(scenario: plan_ir.AllGatherScenario, payload_bytes: float,
+                 *, split: float) -> plan_ir.Ledger:
+        probe = plan_ir.PROBE_FRAG_BYTES
+        sim = MultiWriteSimulator(scenario.topo)
+        payloads = [np.arange(probe, dtype=np.uint8) % 251
+                    for _ in range(scenario.topo.num_nodes)]
+        _AG_DRIVERS[scheme](sim, [list(d) for d in scenario.domains],
+                            payloads, split)
+        ledger = plan_ir.Ledger.from_sim(sim)
+        return ledger.scaled(plan_ir.probe_scale(payload_bytes, probe))
+    return simulate
+
+
+def _ag_kwargs(mode):
+    def kwargs_fn(*, split: float) -> dict:
+        # what collectives.multiwrite_allgather / allgather_reference take
+        return {"mode": mode, "split": (1.0 if mode is None else split)}
+    return kwargs_fn
+
+
+for _scheme, _mode, _exec in [
+        ("baseline", None, True),
+        ("unicast_paired", None, False),     # no shard_map lowering: paper
+        ("multiwrite_paired", "paired", True),
+        ("unicast_full", None, False),       # comparison schemes only
+        ("multiwrite_full", "full", True),
+]:
+    plan_ir.register_plan(plan_ir.CollectivePlan(
+        name=_scheme, op="allgather",
+        knobs=({"split": (1.0,)} if _scheme == "baseline"
+               else {"split": _split_grid(_scheme)}),
+        simulate_fn=_simulate_allgather(_scheme),
+        kwargs_fn=_ag_kwargs(_mode),
+        executable=_exec))
+
+
+def _simulate_dispatch(multiwrite: bool):
+    def simulate(scenario: plan_ir.DispatchScenario, payload_bytes: float,
+                 *, microbatch: int = 1) -> plan_ir.Ledger:
+        n_npus = scenario.topo.num_nodes
+        batch = max(1, int(round(payload_bytes / scenario.token_bytes)))
+        probe_batch = min(batch, plan_ir.PROBE_BATCH)
+        num_experts, top_k = scenario.num_experts, scenario.top_k
+        if num_experts % n_npus:
+            per_npu = max(1, num_experts // n_npus)
+            num_experts = per_npu * n_npus
+            top_k = min(top_k, num_experts)
+        sim = MultiWriteSimulator(scenario.topo)
+        routing = make_routing(probe_batch, n_npus, num_experts, top_k,
+                               seed=scenario.seed)
+        fn = dispatch_multiwrite if multiwrite else dispatch_unicast
+        fn(sim, routing, plan_ir.PROBE_TOKEN_BYTES)
+        from .latency_model import RELAY_SETUP_S
+        ledger = plan_ir.Ledger.from_sim(
+            sim, stages=max(1, int(microbatch)),
+            alpha_extra_s=RELAY_SETUP_S if multiwrite else 0.0)
+        if multiwrite:
+            # the dispatch relay forwards in SOFTWARE (§6.4 AICPU data
+            # plane): its egress copies serialize through one engine —
+            # the term that makes Fig 8's small-batch unicast preference
+            # emerge (cf. dispatch_e2e_time's relay_fwd)
+            ledger = dataclasses.replace(
+                ledger, engine_serial=dict(sim.relay_tx_bytes))
+        probe_bytes = probe_batch * plan_ir.PROBE_TOKEN_BYTES
+        return ledger.scaled(
+            plan_ir.probe_scale(batch * scenario.token_bytes, probe_bytes))
+    return simulate
+
+
+def _dispatch_kwargs(scheme: str):
+    def kwargs_fn(*, microbatch: int = 1) -> dict:
+        # what models/moe.moe_ffn consumes (pctx-level knobs)
+        return {"moe_scheme": scheme, "microbatch": int(microbatch)}
+    return kwargs_fn
+
+
+# microbatch is declared (it maps onto pctx.moe_microbatch) but swept at
+# 1 only: the latency model has no stage-overlap term yet, so G > 1 can
+# never score better than G == 1 — widening the grid before modeling
+# pipelining would just burn sweep time (memory, not latency, is today's
+# reason to microbatch).  See the ROADMAP Planner bullet.
+plan_ir.register_plan(plan_ir.CollectivePlan(
+    name="unicast", op="dispatch",
+    knobs={"microbatch": (1,)},
+    simulate_fn=_simulate_dispatch(multiwrite=False),
+    kwargs_fn=_dispatch_kwargs("baseline")))
+plan_ir.register_plan(plan_ir.CollectivePlan(
+    name="multiwrite", op="dispatch",
+    knobs={"microbatch": (1,)},
+    simulate_fn=_simulate_dispatch(multiwrite=True),
+    kwargs_fn=_dispatch_kwargs("hierarchical")))
+
+
+class _SchemeView(dict):
+    """Back-compat view: ALLGATHER_SCHEMES[name](sim, domains, payloads)
+    runs the registered plan's driver at its analytic-seed split."""
+
+    def __missing__(self, key):
+        plan_ir.get_plan("allgather", key)   # raises with a useful message
+        return lambda sim, dom, pay: run_allgather_scheme(key, sim, dom, pay)
+
+
+ALLGATHER_SCHEMES: dict[str, Callable] = _SchemeView()
+for _scheme in _AG_DRIVERS:
+    ALLGATHER_SCHEMES[_scheme] = (
+        lambda sim, dom, pay, _s=_scheme: run_allgather_scheme(
+            _s, sim, dom, pay))

@@ -64,6 +64,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 # paper-faithful default; the rest are §Perf hillclimb levers.
 VARIANTS = {
     "mw": {},                                   # MultiWrite hierarchical EP
+    "auto": {"plan_policy": "auto"},            # planner-chosen schemes
     "baseline": {"moe_scheme": "baseline"},     # unicast EP dispatch
     "nosp": {"seq_parallel": False},            # no sequence parallelism
     "selrem": {"remat": "selective"},           # selective remat
@@ -224,6 +225,41 @@ def vmem_elem_counts(arch: str, shape: ShapeSpec, pctx) -> set:
     return out
 
 
+def planner_cell_report(arch: str, shape: ShapeSpec, pctx) -> dict:
+    """Which plan the latency-model planner picks for this cell, and the
+    predicted delta vs the baseline plan (the quantity the dry-run table
+    reports next to the roofline terms)."""
+    from repro.core import planner as pl
+    cfg = get_config(arch)
+    out = {"policy": pctx.plan_policy}
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    if cfg.is_moe:
+        n_local = max(1, tokens // (pctx.num_pods * pctx.data_size))
+        d = pctx.moe_dispatch_plan(cfg.num_experts, cfg.top_k,
+                                   tokens_per_rank=n_local,
+                                   token_bytes=cfg.d_model * 2)
+        if d is None:  # fixed policy: still report what auto would pick
+            use_pod, _ = pctx.ep_ranks(cfg.num_experts)
+            d = pl.moe_dispatch_decision(
+                num_pods=pctx.num_pods if use_pod else 1,
+                ep_per_pod=pctx.data_size,
+                num_experts=cfg.num_experts, top_k=cfg.top_k,
+                tokens_per_rank=n_local, token_bytes=cfg.d_model * 2)
+        out["moe_dispatch"] = d.report()
+    # Reference decision on the paper's §3.1 fixture (8-NPU split-TP full
+    # mesh) at this cell's per-chip activation fragment — a what-if the
+    # table carries alongside every cell, NOT a collective the traced
+    # model necessarily issues (tp_subgroups=1 emits no split-TP gather).
+    from repro.core.topology import split_tp_full_mesh
+    topo, _ = split_tp_full_mesh(8, tp=4)
+    frag = max(1, tokens // (pctx.num_pods * pctx.data_size)) * cfg.d_model * 2
+    d = pl.default_planner().choose("allgather", frag, topo)
+    out["allgather_ref_8x4"] = {"frag_bytes": frag, **d.report()}
+    return out
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              variant: str = "mw", verbose: bool = True) -> dict:
     skip = cell_is_skipped(arch, shape_name)
@@ -306,6 +342,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "by_kind": coll.bytes_by_kind,
             "num_ops": coll.num_ops,
         },
+        "planner": planner_cell_report(arch, shape, pctx),
         "roofline": {
             "compute_term_s": compute_term,
             "memory_term_s": memory_term,
@@ -335,6 +372,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
               f"memory={r['memory_term_s']*1e3:.2f}ms "
               f"collective={r['collective_term_s']*1e3:.2f}ms "
               f"-> dominant={r['dominant']}")
+        for op_name, pr in result["planner"].items():
+            if isinstance(pr, dict) and "plan" in pr:
+                print(f"  planner[{op_name}]: {pr['plan']} "
+                      f"predicted={pr['predicted_us']:.1f}us "
+                      f"vs baseline={pr['baseline_us']:.1f}us "
+                      f"({pr['speedup_pct']:+.1f}%)")
     return result
 
 

@@ -41,7 +41,11 @@ _CONSTANT_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
 
 FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
             "constant", "after-all", "iota", "while", "optimization-barrier",
-            "partition-id", "replica-id"}
+            "partition-id", "replica-id",
+            # `call` is transparent: its callee is visited as an execution
+            # computation, so counting the call site too would double-count
+            # (XLA:CPU wraps thread-parallel ops in %parallel_* calls).
+            "call"}
 
 # ops whose to_apply/calls computations are scalar lambdas or fused bodies:
 # their internals produce no standalone HBM traffic

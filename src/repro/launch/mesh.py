@@ -13,17 +13,14 @@ else (tests, benches) sees the real device count.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
+from repro.parallel.compat import make_mesh
 from repro.parallel.context import ParallelContext
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_pctx(*, multi_pod: bool = False, **kw) -> ParallelContext:
@@ -34,5 +31,4 @@ def make_pctx(*, multi_pod: bool = False, **kw) -> ParallelContext:
 
 def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for multi-device CPU tests (device count must match)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

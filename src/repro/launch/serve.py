@@ -21,6 +21,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--plan-policy", choices=["auto", "fixed"],
+                    default="auto",
+                    help="auto: MoE dispatch plan per phase from the "
+                         "latency-model planner (decode vs prefill can "
+                         "differ, Fig 8)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -29,21 +35,41 @@ def main(argv=None):
     from repro.runtime.server import ServeConfig, ServeEngine
 
     cfg = get_config(args.arch)
+    pctx = None
     if args.smoke:
         cfg = cfg.reduced(n_layers=4, d_model=128, n_heads=4, d_ff=256,
                           vocab=2048)
-    model = build_model(cfg, dtype=jnp.float32 if args.smoke
+    else:
+        # production mesh only when this host actually has it; otherwise
+        # keep the historical pctx-free single-host path
+        need = 512 if args.multi_pod else 256
+        if len(jax.devices()) == need:
+            import dataclasses
+
+            from repro.launch.mesh import make_pctx
+            pctx = make_pctx(multi_pod=args.multi_pod, fsdp=False)
+            pctx = dataclasses.replace(pctx, plan_policy=args.plan_policy)
+        else:
+            print(f"({len(jax.devices())} device(s), production mesh "
+                  f"needs {need}: serving without a ParallelContext)")
+    model = build_model(cfg, pctx, dtype=jnp.float32 if args.smoke
                         else jnp.bfloat16)
     params = model.init(jax.random.key(args.seed))
     engine = ServeEngine(model, params,
                          ServeConfig(max_new_tokens=args.max_new,
-                                     temperature=args.temperature))
+                                     temperature=args.temperature),
+                         pctx=pctx)
     prompts = np.random.default_rng(args.seed).integers(
         0, cfg.vocab, size=(args.prompts, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, seed=args.seed)
     print(f"generated {out.shape}; "
           f"prefill {engine.stats['prefill_s']*1e3:.0f}ms, "
           f"decode {engine.stats['decode_s']*1e3:.0f}ms")
+    for phase, rep in engine.stats.get("plans", {}).items():
+        print(f"planner[{phase}]: {rep['plan']} "
+              f"predicted={rep['predicted_us']:.1f}us "
+              f"vs baseline={rep['baseline_us']:.1f}us "
+              f"({rep['speedup_pct']:+.1f}%)")
     print(out[:, :16])
     return 0
 

@@ -32,6 +32,14 @@ def main(argv=None):
                     help="reduced config + tiny batch on local devices")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--variant", default="mw")
+    ap.add_argument("--plan-policy", choices=["auto", "fixed"],
+                    default=None,
+                    help="auto: collective schemes/splits chosen by the "
+                         "latency-model planner per payload (§5.2 dynamic "
+                         "workflow); fixed: use the --variant knobs "
+                         "verbatim.  Default: auto, unless the chosen "
+                         "--variant pins an explicit scheme (ablations "
+                         "like 'baseline' stay ablations)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -56,12 +64,36 @@ def main(argv=None):
         pctx = None
         batch, seq = 4, 64
     else:
+        import dataclasses
+
         from repro.launch.dryrun import VARIANTS
         from repro.launch.mesh import make_pctx
-        pctx = make_pctx(multi_pod=args.multi_pod,
-                         **VARIANTS[args.variant])
+        variant_kw = VARIANTS[args.variant]
+        pctx = make_pctx(multi_pod=args.multi_pod, **variant_kw)
+        plan_policy = args.plan_policy
+        if plan_policy is None:
+            # planner by default, but a variant that pins a scheme or a
+            # policy is an explicit ablation — don't override it
+            pins = {"moe_scheme", "plan_policy"} & set(variant_kw)
+            plan_policy = pctx.plan_policy if pins else "auto"
+        pctx = dataclasses.replace(pctx, plan_policy=plan_policy)
         shape = SHAPES[args.shape]
         batch, seq = shape.global_batch, shape.seq_len
+        if cfg.is_moe:
+            # Planner-selected dispatch plan for this workload (the same
+            # decision moe_ffn consumes at trace time under "auto").
+            n_local = (batch * seq) // (pctx.num_pods * pctx.data_size)
+            # token_bytes matches the bf16 activations built below; the
+            # authoritative decision is the one moe_ffn re-derives from
+            # the live dtype at trace time (same LRU cache entry here).
+            decision = pctx.moe_dispatch_plan(
+                cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
+                token_bytes=cfg.d_model * 2)
+            if decision is not None:
+                logging.info("planner %s", decision.summary())
+            else:
+                logging.info("planner fixed: moe_scheme=%s",
+                             pctx.moe_scheme)
 
     model = build_model(cfg, pctx,
                         dtype=jnp.float32 if args.smoke else jnp.bfloat16)

@@ -7,9 +7,13 @@ Token path per layer (DeepSeek-style EP):
   -> per-expert gated FFN (TP over the model axis inside each expert)
   -> hierarchical_combine (relay-side partial reduction on the way back)
 
-``pctx.moe_scheme`` selects hierarchical (MultiWrite) vs baseline
-(unicast: one copy per (token, destination chip)) — the paper's comparison
-pair, selectable per run for the §Perf ablation.
+Scheme selection: under ``pctx.plan_policy == "auto"`` the dispatch plan
+comes from :mod:`repro.core.planner` at trace time (payload size +
+topology decide — the §5.2 dynamic workflow, Fig 8's batch-dependent
+winner); under "fixed", ``pctx.moe_scheme`` selects hierarchical
+(MultiWrite) vs baseline (unicast: one copy per (token, destination
+chip)) — the paper's comparison pair, selectable per run for the §Perf
+ablation.
 
 EP placement: EP spans (pod, data) when the arch has enough experts
 (kimi-k2: 384 experts over 32 EP ranks — the paper's large-EP regime);
@@ -30,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as cl
 from repro.models import layers as L
+from repro.parallel.compat import shard_map
 from repro.parallel.context import ParallelContext
 
 
@@ -130,7 +135,14 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
     n_local = (b * s) // (pctx.num_pods * pctx.data_size)
     dcfg = balanced_capacities(n_local, cfg.top_k, p, dd, per_rank,
                                capacity_factor)
-    if pctx.moe_scheme == "baseline":
+    # Dispatch scheme: planner-chosen from (payload, topology) under
+    # plan_policy="auto" (§5.2 dynamic workflow — decode traces pick the
+    # unicast plan at small batch, prefill/train pick MultiWrite past the
+    # crossover), or the declared moe_scheme knob under "fixed".
+    scheme = pctx.resolve_moe_scheme(
+        cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
+        token_bytes=d * x.dtype.itemsize)
+    if scheme == "baseline":
         # unicast packs per destination RANK: fair capacity is the
         # balanced per-rank expectation (k/R), not the per-pod one
         rank_cap = min(1.0, cfg.top_k / (p * dd)) * capacity_factor
@@ -148,7 +160,7 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
         gates, ids = cl.route_topk(logits, cfg.top_k)
         aux = load_balance_loss(logits, ids, cfg.num_experts)
         aux = jax.lax.pmean(aux, dp_spec)
-        if pctx.moe_scheme == "hierarchical":
+        if scheme == "hierarchical":
             exp_tok, exp_gate, st = cl.hierarchical_dispatch(
                 tok, ids, gates, dcfg, epmesh)
             exp_out = _expert_ffn(w1, w3, w2, exp_tok, cfg.act, expert_axis)
@@ -173,7 +185,7 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
             lambda c: one_chunk(c, router, w1, w3, w2), chunks)
         return out.reshape(n_loc, h), jnp.mean(aux)
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         inner, mesh=pctx.mesh,
         in_specs=(P(dp_spec, None),            # tokens split over DP ranks
                   P(None, None),               # router replicated

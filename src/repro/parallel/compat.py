@@ -1,0 +1,49 @@
+"""JAX version compatibility shims.
+
+The repo targets the current JAX API (``jax.shard_map``, ``jax.make_mesh``
+with ``axis_types``); the pinned container ships an older release where
+``shard_map`` still lives in ``jax.experimental`` (with ``check_rep``
+instead of ``check_vma``) and ``make_mesh`` takes no ``axis_types``.
+Everything that builds meshes or shard_map programs goes through this
+module so the rest of the codebase is version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX; ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the old API's ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis from inside shard_map.
+
+    ``jax.lax.axis_size`` on new JAX; the ``psum(1, axis)`` constant-fold
+    idiom (returns a python int) on old JAX.
+    """
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+        kinds = AxisType.Explicit if explicit else AxisType.Auto
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(kinds,) * len(axis_names))
+    except (ImportError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)

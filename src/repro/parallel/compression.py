@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .compat import axis_size
+
 
 def _quantize_int8(x: jax.Array):
     """Symmetric per-tensor int8 quant.  Returns (q, scale)."""
@@ -51,7 +53,7 @@ def compressed_psum(g: jax.Array, axis: str,
 
     Must run inside shard_map with ``axis`` present.
     """
-    r = lax.axis_size(axis)
+    r = axis_size(axis)
     n = g.shape[0]
     pad = (-n) % r
     gf = g.astype(jnp.float32)
@@ -95,7 +97,7 @@ def hierarchical_psum(g: jax.Array, pod_axis: str, data_axis: str):
     D times per chip-position) — the §3.3 bottleneck-link principle applied
     to the reduction direction.
     """
-    d = lax.axis_size(data_axis)
+    d = axis_size(data_axis)
     n = g.shape[0]
     pad = (-n) % d
     gp = jnp.pad(g.astype(jnp.float32), (0, pad))
@@ -106,7 +108,7 @@ def hierarchical_psum(g: jax.Array, pod_axis: str, data_axis: str):
     mine = lax.psum(mine, pod_axis)
     # all-gather intra-pod
     full = lax.all_gather(mine, data_axis).reshape(-1)[:n]
-    return full / (d * lax.axis_size(pod_axis))
+    return full / (d * axis_size(pod_axis))
 
 
 def tree_compressed_psum(grads, axis: str, err_tree=None):

@@ -30,7 +30,12 @@ class ParallelContext:
     data_axis: str = "data"
     model_axis: str = "model"
     fsdp: bool = True                 # shard weights over data (ZeRO-3-ish)
+    plan_policy: str = "fixed"        # "auto": collective schemes/knobs come
+    #   from core.planner.Planner at trace time (the §5.2 dynamic workflow —
+    #   scheme choice emerges from payload size + topology + calibration);
+    #   "fixed": the explicit knobs below are used verbatim.
     moe_scheme: str = "hierarchical"  # hierarchical (MultiWrite) | baseline
+    #                                   (plan_policy="fixed" only)
     tp_subgroups: int = 1             # §3.1 split-TP domains on model axis
     remat: str = "full"               # none | selective | full
     seq_shard_decode: bool = True     # shard decode KV length over model
@@ -68,6 +73,33 @@ class ParallelContext:
         if self.pod_axis and num_experts >= self.num_pods * self.data_size:
             return True, self.num_pods * self.data_size
         return False, self.data_size
+
+    # -- planner consumption -------------------------------------------------
+    def moe_dispatch_plan(self, num_experts: int, top_k: int,
+                          tokens_per_rank: int, token_bytes: int):
+        """Planner decision for an MoE dispatch on this mesh, or ``None``
+        when ``plan_policy`` is "fixed" (the explicit ``moe_scheme`` knob
+        applies).  Called at trace time; decisions are LRU-cached on
+        (topology, payload bucket)."""
+        if self.plan_policy != "auto":
+            return None
+        from repro.core.planner import moe_dispatch_decision
+        use_pod, _ = self.ep_ranks(num_experts)
+        return moe_dispatch_decision(
+            num_pods=self.num_pods if use_pod else 1,
+            ep_per_pod=self.data_size,
+            num_experts=num_experts, top_k=top_k,
+            tokens_per_rank=tokens_per_rank, token_bytes=token_bytes)
+
+    def resolve_moe_scheme(self, num_experts: int, top_k: int,
+                           tokens_per_rank: int, token_bytes: int) -> str:
+        """The dispatch scheme moe_ffn executes: planner-chosen under
+        ``plan_policy="auto"``, the declared knob otherwise."""
+        decision = self.moe_dispatch_plan(num_experts, top_k,
+                                          tokens_per_rank, token_bytes)
+        if decision is None:
+            return self.moe_scheme
+        return decision.shard_map_kwargs["moe_scheme"]
 
 
 def shard(x, pctx: Optional[ParallelContext], *spec):

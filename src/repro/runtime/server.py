@@ -27,13 +27,37 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, model, params, cfg: ServeConfig = ServeConfig()):
+    def __init__(self, model, params, cfg: ServeConfig = ServeConfig(),
+                 pctx=None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.pctx = pctx
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+
+    def plan_report(self, batch: int, prompt_len: int) -> dict:
+        """Planner decisions for this serving shape: the prefill dispatch
+        (batch*prompt_len tokens) and the decode dispatch (batch tokens).
+        These are the decisions the jitted MoE layers consume at trace
+        time under ``plan_policy="auto"`` — decode typically stays on the
+        unicast plan (small payload, Fig 8) while prefill crosses to
+        MultiWrite."""
+        mcfg = self.model.cfg
+        if self.pctx is None or not getattr(mcfg, "is_moe", False):
+            return {}
+        dp = self.pctx.num_pods * self.pctx.data_size
+        out = {}
+        for phase, n_tokens in (("prefill", batch * prompt_len),
+                                ("decode", batch)):
+            decision = self.pctx.moe_dispatch_plan(
+                mcfg.num_experts, mcfg.top_k,
+                tokens_per_rank=max(1, n_tokens // dp),
+                token_bytes=mcfg.d_model * 2)
+            if decision is not None:
+                out[phase] = decision.report()
+        return out
 
     def generate(self, prompts: np.ndarray, max_new: Optional[int] = None,
                  seed: int = 0) -> np.ndarray:
@@ -41,6 +65,9 @@ class ServeEngine:
         cfg = self.model.cfg
         b, s = prompts.shape
         max_new = max_new or self.cfg.max_new_tokens
+        plans = self.plan_report(b, s)
+        if plans:
+            self.stats["plans"] = plans
         cache = self.model.init_cache(b, s + max_new, self.cfg.cache_dtype)
         t0 = time.monotonic()
         from repro.data.pipeline import batch_for_model

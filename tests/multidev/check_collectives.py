@@ -21,6 +21,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.parallel.compat import shard_map  # noqa: E402
 from repro.core import collectives as cl  # noqa: E402
 
 
@@ -41,11 +42,11 @@ def run_allgather_checks():
         x = jnp.asarray(rng.normal(size=(8 * rows, feat)).astype(np.float32))
         for mode, split in [("paired", 0.5), ("paired", 0.25),
                             ("paired", 0.75), ("full", 0.5), ("full", 0.375)]:
-            ref_fn = jax.jit(jax.shard_map(
+            ref_fn = jax.jit(shard_map(
                 functools.partial(cl.allgather_reference, axis_name="x"),
                 mesh=mesh, in_specs=P("x"), out_specs=P("x"),
                 check_vma=False))
-            mw_fn = jax.jit(jax.shard_map(
+            mw_fn = jax.jit(shard_map(
                 functools.partial(cl.multiwrite_allgather, axis_name="x",
                                   split=split, mode=mode),
                 mesh=mesh, in_specs=P("x"), out_specs=P("x"),
@@ -55,6 +56,28 @@ def run_allgather_checks():
             ok = np.array_equal(ref, got)
             check(f"allgather mode={mode} split={split} shape=({rows},{feat})",
                   ok)
+    # planner-driven path: scheme + split come from Planner.choose at
+    # trace time (no hard-coded mode=/split=), result must stay bit-exact.
+    # DEFAULT hw + tiny fragment -> the baseline branch; IDEAL hw -> the
+    # planner picks multiwrite at ANY size, exercising the mw branch too.
+    from repro.core import latency_model as lm
+    from repro.core.planner import default_planner
+    from repro.core.topology import split_tp_full_mesh
+    x = jnp.asarray(rng.normal(size=(8 * 16, 32)).astype(np.float32))
+    ref_fn = jax.jit(shard_map(
+        functools.partial(cl.allgather_reference, axis_name="x"),
+        mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
+    topo, _ = split_tp_full_mesh(8, tp=4)
+    for hw, want_mw in ((None, False), (lm.IDEAL, True)):
+        planned_fn = jax.jit(shard_map(
+            functools.partial(cl.planned_allgather, axis_name="x", hw=hw),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
+        ok = np.array_equal(np.asarray(ref_fn(x)), np.asarray(planned_fn(x)))
+        d = default_planner().choose("allgather", x.nbytes // 8, topo, hw,
+                                     executable_only=True)
+        branch_ok = d.plan.startswith("multiwrite") == want_mw
+        check(f"planned_allgather hw={'IDEAL' if hw else 'DEFAULT'} "
+              f"(plan={d.plan}) == reference", ok and branch_ok)
 
 
 # ===========================================================================
@@ -110,7 +133,7 @@ def run_dispatch_checks(scheme):
             out = cl.baseline_combine(exp_tok * local_scale, exp_gate, state)
         return out
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step, mesh=mesh,
         in_specs=(P(("pod", "ep")), P(("pod", "ep")), P(("pod", "ep"))),
         out_specs=P(("pod", "ep")), check_vma=False))
@@ -146,7 +169,7 @@ def run_capacity_checks():
             tok, ids_, gates_, cfg, epmesh)
         return cl.hierarchical_combine(exp_tok, exp_gate, state)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step, mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec(("pod", "ep")),) * 3,
         out_specs=jax.sharding.PartitionSpec(("pod", "ep")),

@@ -14,6 +14,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.parallel.compat import shard_map  # noqa: E402
 from repro.parallel.compression import (  # noqa: E402
     compressed_psum, hierarchical_psum)
 
@@ -36,7 +37,7 @@ def run_compressed_psum():
         out, err = compressed_psum(g, "data")
         return out, err
 
-    fn = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P("data"),
+    fn = jax.jit(shard_map(inner, mesh=mesh, in_specs=P("data"),
                                out_specs=(P("data"), P("data")),
                                check_vma=False))
     out, err = fn(jnp.asarray(gs.reshape(-1)))
@@ -70,7 +71,7 @@ def run_error_feedback_convergence():
     def inner(g, err):
         return compressed_psum(g, "data", err)
 
-    fn = jax.jit(jax.shard_map(inner, mesh=mesh,
+    fn = jax.jit(shard_map(inner, mesh=mesh,
                                in_specs=(P("data"), P("data")),
                                out_specs=(P("data"), P("data")),
                                check_vma=False))
@@ -97,7 +98,7 @@ def run_hierarchical_psum():
     def inner(g):
         return hierarchical_psum(g, "pod", "data")
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         inner, mesh=mesh, in_specs=P(("pod", "data")),
         out_specs=P(("pod", "data")), check_vma=False))
     out = np.asarray(fn(jnp.asarray(gs.reshape(-1)))).reshape(8, n)

@@ -122,8 +122,9 @@ class TestMeshClassify:
 class TestCollectiveBytes:
     def test_allreduce_in_scan_multiplied(self):
         """Collective inside a scan body gets the trip multiplier."""
-        import functools
         from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.compat import shard_map
         if len(jax.devices()) < 1:
             pytest.skip("no devices")
         mesh = jax.make_mesh((1,), ("model",))
@@ -134,8 +135,8 @@ class TestCollectiveBytes:
             y, _ = jax.lax.scan(body, x, None, length=7)
             return y
 
-        fn = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P(),
-                                   out_specs=P(), check_vma=False))
+        fn = jax.jit(shard_map(inner, mesh=mesh, in_specs=P(),
+                               out_specs=P(), check_vma=False))
         text = fn.lower(
             jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile().as_text()
         # single-device mesh: psum may lower to no collective; just check

@@ -12,7 +12,9 @@ Invariants covered:
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import latency_model as lm
 from repro.core.multiwrite import MultiWriteSimulator
