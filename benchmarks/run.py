@@ -98,6 +98,90 @@ def bench_planner():
     return rows
 
 
+def bench_fabrics(smoke: bool = False):
+    """Topology-general planner sweep over the registered fabric family.
+
+    Two parts:
+
+    1. SMOKE (always, and the only part under ``--smoke`` — CI runs it):
+       every registered plan must ``simulate`` + score on every registered
+       fabric's default scenario, tiny payloads.  Any raise fails the run.
+    2. Crossover table: how the Fig 7-style AllGather crossover and the
+       Fig 8-style dispatch/combine flip batches move as inter-server
+       bandwidth, server count, rail count and asymmetry vary.
+    """
+    from repro.core import latency_model as lm
+    from repro.core import plan as plan_ir
+    from repro.core import planner as pl
+    from repro.core.topology import FABRICS, get_fabric
+    rows = []
+
+    failures = []
+    pairs = 0
+    for fname in sorted(FABRICS):
+        topo = get_fabric(fname)
+        scenarios = plan_ir.default_scenarios(topo)
+        for (op, pname), plan in sorted(plan_ir.PLAN_REGISTRY.items()):
+            pairs += 1
+            try:
+                ledger = plan.simulate(scenarios[op], 1 << 16)
+                t = lm.score_ledger(ledger)
+                assert t >= 0.0, t
+            except Exception as e:  # noqa: BLE001 — the smoke's whole point
+                failures.append(
+                    f"{op}/{pname} on {fname}: {type(e).__name__}: {e}")
+    if failures:
+        for f in failures:
+            print(f"FABRIC SMOKE FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"fabric smoke: {pairs} (plan x fabric) pairs simulate OK "
+          f"({len(FABRICS)} fabrics: {', '.join(sorted(FABRICS))})")
+    rows.append({"name": "fabric_smoke_pairs", "metric": "count",
+                 "value": pairs})
+    if smoke:
+        return rows
+
+    from repro.core.topology import split_tp_full_mesh
+    planner = pl.Planner()
+    sweep = [
+        # Fig 7 fixture with the (cross-domain) link bandwidth swept: the
+        # AllGather crossover moves as the §3.1 links slow down
+        "mesh8@56", "mesh8@25", "mesh8@12.5",
+        # inter-server bandwidth sweep on the paper's 2x8 shape: the
+        # Fig 8 dispatch/combine flip points move with where the
+        # bottleneck sits.  (The §3.1 paired-relay AllGather correctly
+        # never pays here: a rail fabric has no idle cross links to
+        # relay through — crossover column reads 'never'.)
+        "2x8@6.25", "2x8@12.5", "2x8", "2x8@50",
+        # server count, rail count, asymmetry
+        "4x8", "4x8@12.5", "2x8r2", "2x8r2@12.5", "2x8asym", "tpu_2x16",
+    ]
+    print("\n== bench_fabrics: crossover table (planner decisions) ==")
+    print(f"{'fabric':<12} {'ag xover MB':>12} {'disp flip':>10} "
+          f"{'comb flip':>10}")
+    for spec in sweep:
+        if spec.startswith("mesh8@"):
+            bw = float(spec.split("@")[1]) * 1e9
+            topo, _ = split_tp_full_mesh(8, tp=4, link_bw=bw)
+            topo.name = spec
+        else:
+            topo = get_fabric(spec)
+        xover = pl.emergent_crossover_bytes(topo, planner=planner)
+        dflip = pl.emergent_flip_batch("dispatch", topo, planner=planner)
+        cflip = pl.emergent_flip_batch("combine", topo, planner=planner)
+        xs = f"{xover/2**20:.2f}" if xover != float("inf") else "never"
+        ds = f"{dflip:.0f}" if dflip != float("inf") else "never"
+        cs = f"{cflip:.0f}" if cflip != float("inf") else "never"
+        print(f"{spec:<12} {xs:>12} {ds:>10} {cs:>10}")
+        rows.append({"name": f"fabrics_{spec}_ag_crossover",
+                     "metric": "bytes", "value": xover})
+        rows.append({"name": f"fabrics_{spec}_dispatch_flip",
+                     "metric": "batch", "value": dflip})
+        rows.append({"name": f"fabrics_{spec}_combine_flip",
+                     "metric": "batch", "value": cflip})
+    return rows
+
+
 def bench_train_throughput():
     """Tiny-model CPU train-step wall time (framework overhead check)."""
     import jax
@@ -126,12 +210,28 @@ def bench_train_throughput():
              "value": (time.monotonic() - t0) / 5}]
 
 
+MICRO_BENCHES = {
+    "bench_planner": lambda smoke: bench_planner(),
+    "bench_fabrics": bench_fabrics,
+    "bench_kernels": lambda smoke: bench_kernels(),
+    "bench_dispatch_sim": lambda smoke: bench_dispatch_sim(),
+    "bench_train_throughput": lambda smoke: bench_train_throughput(),
+}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="bench_fabrics: only the (plan x fabric) simulate "
+                         "smoke (tiny payloads) — the CI gate")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_figures
+    known = set(paper_figures.ALL) | set(MICRO_BENCHES)
+    if args.only is not None and args.only not in known:
+        ap.error(f"--only {args.only!r}: unknown bench "
+                 f"(have {', '.join(sorted(known))})")
     csv_rows = []
     for name, fn in paper_figures.ALL.items():
         if args.only and args.only != name:
@@ -142,10 +242,9 @@ def main(argv=None):
             for k, v in r.items():
                 if isinstance(v, (int, float)) and not isinstance(v, bool):
                     csv_rows.append((f"{name}.{tag}", k, v))
-    if args.only is None:
-        for bench in (bench_planner, bench_kernels, bench_dispatch_sim,
-                      bench_train_throughput):
-            for r in bench():
+    for name, bench in MICRO_BENCHES.items():
+        if args.only is None or args.only == name:
+            for r in bench(args.smoke):
                 csv_rows.append((r["name"], r["metric"], r["value"]))
 
     print("\nname,metric,value")

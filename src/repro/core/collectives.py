@@ -34,6 +34,10 @@ MoE dispatch/combine (paper §3.2 / §6.3):
   * :func:`hierarchical_combine` / :func:`baseline_combine` — return path;
     hierarchical combine adds *relay-side partial reduction* (beyond-paper:
     the dual of dispatch dedup — one partial per (token, pod) crosses back).
+  * :func:`hierarchical_combine_unicast` — unicast return path for the
+    hierarchical dispatch (no relay reduction): the executable lowering of
+    the combine planner's "unicast" plan, selected at trace time by
+    ``ParallelContext.resolve_combine_scheme`` independently of dispatch.
 
 All functions are pure and must be called inside ``shard_map`` (they use
 named axes).  Shapes are static; capacity semantics follow standard MoE
@@ -384,7 +388,7 @@ def hierarchical_dispatch(tokens: jax.Array, expert_ids: jax.Array,
     ep_bits = jnp.sum(
         ep_any.astype(jnp.int32) << jnp.arange(d), axis=-1).astype(jnp.int32)
 
-    cp = int(round(n * cfg.pod_capacity))
+    cp = max(1, int(round(n * cfg.pod_capacity)))
     valid = jnp.ones((n,), bool)
     send_tok, map_pod = pack_by_bitmap(tokens, pod_bits, valid, p, cp)
     # metadata rides along (the §4.1 in-packet metadata): ep bitmap for the
@@ -413,7 +417,7 @@ def hierarchical_dispatch(tokens: jax.Array, expert_ids: jax.Array,
     flat_tok = recv_tok.reshape(p * cp, h)
     flat_ep = recv_ep.reshape(p * cp)
     flat_valid = (recv_src.reshape(p * cp) >= 0)
-    cd = int(round(p * cp * cfg.ep_capacity))
+    cd = max(1, int(round(p * cp * cfg.ep_capacity)))
     relay_tok, map_ep = pack_by_bitmap(flat_tok, flat_ep, flat_valid, d, cd)
     relay_ids = gather_rows(recv_ids.reshape(p * cp, k), map_ep.reshape(-1)
                             ).reshape(d, cd, k)
@@ -445,7 +449,7 @@ def hierarchical_dispatch(tokens: jax.Array, expert_ids: jax.Array,
     ).astype(jnp.int32)
     # OR-safety: top-k ids are distinct -> a token hits each local expert at
     # most once -> sum == OR.  (Routers guarantee distinct ids.)
-    ce = int(round(d * cd * cfg.expert_capacity))
+    ce = max(1, int(round(d * cd * cfg.expert_capacity)))
     exp_tok, map_exp = pack_by_bitmap(flat2_tok, exp_bits, flat2_valid,
                                       per_rank, ce)
     exp_gate = _gate_for_expert(flat2_ids, flat2_gates, map_exp,
@@ -538,6 +542,64 @@ def hierarchical_combine(expert_out: jax.Array, exp_gate: jax.Array,
     return out[:state.n_tokens]
 
 
+def hierarchical_combine_unicast(expert_out: jax.Array, exp_gate: jax.Array,
+                                 state: DispatchState) -> jax.Array:
+    """Unicast return path for the hierarchical dispatch: NO relay-side
+    reduction — every (token, ep-rank) partial crosses the pod axis
+    individually and reduces at the home chip.
+
+    This is the redundant-return baseline the combine planner scores
+    against :func:`hierarchical_combine` (one pre-reduced partial per
+    (token, pod)): up to ``ep_per_pod`` x more bytes on the slow axis,
+    but no relay reduce stage — the Fig 8 trade-off on the return path.
+    Numerically equivalent to :func:`hierarchical_combine` (same fp32
+    additions, different order).
+    """
+    mesh = state.mesh
+    p, d = mesh.num_pods, mesh.ep_per_pod
+    e_local, ce, h = expert_out.shape
+    cd = state.map_ep.shape[1]
+    cp = state.map_pod.shape[1]
+
+    # ---- apply gates, scatter-add expert slots back to stage-2 slots ------
+    weighted = expert_out * exp_gate[..., None]
+    flat2 = jnp.zeros((d * cd + 1, h), jnp.float32)
+    idx = jnp.where(state.map_exp >= 0, state.map_exp, d * cd)
+    flat2 = flat2.at[idx.reshape(-1)].add(
+        weighted.reshape(-1, h).astype(jnp.float32))
+    flat2 = flat2[:d * cd].reshape(d, cd, h)
+
+    # ---- reverse ep a2a: partials back to the relay ------------------------
+    if d > 1:
+        back = lax.all_to_all(flat2.reshape(d * cd, h), mesh.ep_axis,
+                              split_axis=0, concat_axis=0,
+                              tiled=True).reshape(d, cd, h)
+    else:
+        back = flat2
+    # ---- NO relay reduction: one slot per (stage-1 slot, ep rank) ----------
+    sl = state.map_ep                                             # [d, cd]
+    idx2 = jnp.where(sl >= 0,
+                     sl * d + jnp.arange(d, dtype=jnp.int32)[:, None],
+                     p * cp * d)
+    unred = jnp.zeros((p * cp * d + 1, h), jnp.float32)
+    unred = unred.at[idx2.reshape(-1)].add(back.reshape(-1, h))
+    unred = unred[:p * cp * d].reshape(p, cp * d, h)
+
+    # ---- reverse pod a2a: d unreduced partials per stage-1 slot ------------
+    if mesh.pod_axis is not None and p > 1:
+        home = lax.all_to_all(unred.reshape(p * cp * d, h), mesh.pod_axis,
+                              split_axis=0, concat_axis=0,
+                              tiled=True).reshape(p, cp * d, h)
+    else:
+        home = unred
+    # ---- reduce AFTER crossing, scatter-add into source rows ---------------
+    home = home.reshape(p, cp, d, h).sum(axis=2)
+    out = jnp.zeros((state.n_tokens + 1, h), jnp.float32)
+    idxp = jnp.where(state.map_pod >= 0, state.map_pod, state.n_tokens)
+    out = out.at[idxp.reshape(-1)].add(home.reshape(-1, h))
+    return out[:state.n_tokens]
+
+
 # ===========================================================================
 # Baseline (unicast) dispatch / combine — one copy per (token, dest chip)
 # ===========================================================================
@@ -557,7 +619,7 @@ def baseline_dispatch(tokens: jax.Array, expert_ids: jax.Array,
     rank_bits32 = [jnp.sum(rank_any[:, w * 31:(w + 1) * 31].astype(jnp.int32)
                            << jnp.arange(min(31, r - w * 31)), axis=-1)
                    for w in range((r + 30) // 31)]
-    cr = int(round(n * cfg.pod_capacity))
+    cr = max(1, int(round(n * cfg.pod_capacity)))
     # pack per rank using multi-word bitmaps
     outs, maps = [], []
     for w, bits in enumerate(rank_bits32):
@@ -597,7 +659,7 @@ def baseline_dispatch(tokens: jax.Array, expert_ids: jax.Array,
     mine = (local_e >= 0) & (local_e < per_rank)
     exp_bits = jnp.sum(jnp.where(mine, 1 << jnp.clip(local_e, 0, 30), 0),
                        axis=-1).astype(jnp.int32)
-    ce = int(round(r * cr * cfg.expert_capacity))
+    ce = max(1, int(round(r * cr * cfg.expert_capacity)))
     exp_tok, map_exp = pack_by_bitmap(flat_tok, exp_bits,
                                       got_valid.reshape(r * cr), per_rank, ce)
     exp_gate = _gate_for_expert(flat_ids, flat_gates, map_exp,

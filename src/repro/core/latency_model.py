@@ -68,10 +68,46 @@ class HardwareModel:
     flow_interference: float = 1.0  # <1 derates a link shared by >=3
     # distinct concurrent unicast flows (paper: unicast multipath "more
     # susceptible to mutual interference"); 1.0 = mean behaviour.
+    link_bw: tuple = ()           # MEASURED per-link bandwidth overrides
+    # (((src, dst), bytes/s), ...) from recalibrated(); scoring prefers a
+    # measured value over the topology's nominal one.  Stored as a sorted
+    # tuple so the model stays hashable (it keys the planner's LRU cache).
 
     def ideal(self) -> "HardwareModel":
         return HardwareModel(alpha_base=0.0, alpha_hop=0.0,
                              copy_bw=math.inf, flow_interference=1.0)
+
+    def recalibrated(self, measurements, topo=None) -> "HardwareModel":
+        """Fold measured numbers back into the model (ROADMAP: online
+        re-calibration).  ``measurements`` is a mapping — typically a
+        parsed benchmark JSON — with any of the scalar constants
+        (``alpha_base``, ``alpha_hop``, ``copy_bw``,
+        ``flow_interference``) and/or ``"links"``: measured per-link
+        bandwidths keyed by ``(src, dst)`` tuples or ``"src->dst"``
+        strings.  Pass ``topo`` to reject measurements for links the
+        fabric doesn't have (typo'd keys would otherwise be stored but
+        never match a ledger — a silent no-op).  Returns a NEW model;
+        since the model is part of the planner cache key, recalibrating
+        invalidates stale decisions automatically."""
+        measurements = dict(measurements)
+        scalars = {k: float(measurements[k])
+                   for k in ("alpha_base", "alpha_hop", "copy_bw",
+                             "flow_interference") if k in measurements}
+        links = dict(self.link_bw)
+        for key, bw in dict(measurements.get("links", {})).items():
+            if isinstance(key, str):
+                a, b = key.split("->")
+                key = (int(a), int(b))
+            key = tuple(key)
+            if topo is not None and not topo.has_link(*key):
+                raise KeyError(f"measured link {key} not in {topo.name}")
+            links[key] = float(bw)
+        return dataclasses.replace(
+            self, link_bw=tuple(sorted(links.items())), **scalars)
+
+    def measured_link_bw(self) -> dict:
+        """The per-link overrides as a plain dict."""
+        return dict(self.link_bw)
 
 
 IDEAL = HardwareModel(alpha_base=0.0, alpha_hop=0.0, copy_bw=math.inf)
@@ -93,9 +129,12 @@ def score_ledger(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
     """
     if not ledger.link_bytes:
         return 0.0
+    measured = dict(hw.link_bw) if hw.link_bw else None
     link_time = 0.0
     for key, nbytes in ledger.link_bytes.items():
         bw = ledger.topo.link(*key).bw
+        if measured is not None:
+            bw = measured.get(key, bw)
         if ledger.flow_counts.get(key, 0) >= 3:
             bw *= hw.flow_interference
         link_time = max(link_time, nbytes / bw)

@@ -123,11 +123,20 @@ class MultiWriteSimulator:
             return
         if relay is not None and relay != src:
             meta = bm.encode(m.keys(), self.topo.num_nodes)
-            if not self.topo.has_link(src, relay):
-                raise ValueError(f"no direct link {src}->{relay} for relay hint")
-            self._account(src, relay, data, int(data.nbytes), meta, step, len(m) > 1)
+            nbytes = int(data.nbytes)
+            # The hint names the relay, not the route: on fabrics without a
+            # direct src->relay link (e.g. cross-server non-rail peers) the
+            # packet follows the unicast forwarding table to the relay,
+            # paying store-and-forward at every intermediate node.
+            hop_path = self.topo.path(src, relay)
+            self.max_hops = max(self.max_hops, len(hop_path) - 1)
+            for a, b in zip(hop_path[:-1], hop_path[1:]):
+                self._account(a, b, data, nbytes, meta, step, len(m) > 1)
+            for mid in hop_path[1:-1]:
+                self.relay_bytes[mid] += 2 * nbytes
+                self.relay_tx_bytes[mid] += nbytes
             if set(m) != {relay}:
-                self.relay_bytes[relay] += int(data.nbytes)  # rx at relay
+                self.relay_bytes[relay] += nbytes  # rx at relay
             self._recurse(relay, m, data, step, origin=src)
         else:
             self._recurse(src, m, data, step, origin=src)

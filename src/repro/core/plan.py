@@ -152,6 +152,33 @@ class DispatchScenario:
         return ("dispatch", self.num_experts, self.top_k, self.token_bytes)
 
 
+@dataclasses.dataclass(frozen=True)
+class CombineScenario:
+    """Return path of the MoE AlltoAll: expert partials travel back to the
+    token owners (the dual of :class:`DispatchScenario`).  The paper plans
+    only the dispatch half; combine is a first-class op here because the
+    return path hits the same physical bottleneck — or, on asymmetric
+    fabrics, a *different* one."""
+
+    topo: Topology
+    num_experts: int = 64
+    top_k: int = 8
+    token_bytes: int = 7168
+    seed: int = 0
+
+    def cache_key(self):
+        return ("combine", self.num_experts, self.top_k, self.token_bytes)
+
+
+def default_scenarios(topo: Topology) -> dict:
+    """One representative scenario per op for ``topo`` — the grid the CI
+    fabric smoke iterates (every registered plan must simulate on every
+    registered fabric without raising)."""
+    return {"allgather": AllGatherScenario.split_tp(topo, 2),
+            "dispatch": DispatchScenario(topo=topo),
+            "combine": CombineScenario(topo=topo)}
+
+
 # ---------------------------------------------------------------------------
 # The plan IR
 # ---------------------------------------------------------------------------
@@ -169,7 +196,7 @@ class CollectivePlan:
     """
 
     name: str
-    op: str                                   # "allgather" | "dispatch"
+    op: str                            # "allgather" | "dispatch" | "combine"
     knobs: Mapping[str, tuple]                # knob -> candidate grid
     simulate_fn: Callable[..., Ledger]
     kwargs_fn: Callable[..., dict] = lambda **kw: dict(kw)
@@ -200,7 +227,8 @@ class CollectivePlan:
 # ---------------------------------------------------------------------------
 
 PLAN_REGISTRY: dict[tuple[str, str], CollectivePlan] = {}
-BASELINE_PLAN = {"allgather": "baseline", "dispatch": "unicast"}
+BASELINE_PLAN = {"allgather": "baseline", "dispatch": "unicast",
+                 "combine": "unicast"}
 
 
 def register_plan(plan: CollectivePlan) -> CollectivePlan:

@@ -37,10 +37,11 @@ from .topology import TPU_ICI_LINK_BW, Topology, full_mesh, tpu_pods
 # ---------------------------------------------------------------------------
 
 def topology_fingerprint(topo: Topology) -> tuple:
-    """Hashable identity of a topology: name, size and the sorted multiset
-    of link bandwidths (what the latency model can distinguish)."""
-    bws = sorted(set(ln.bw for ln in topo.links.values()))
-    return (topo.name, topo.num_nodes, len(topo.links), tuple(bws))
+    """Hashable identity of a topology (delegates to
+    :meth:`Topology.fingerprint`: name, shape, fabric meta and the exact
+    per-link bandwidth assignment — asymmetric fabrics with identical
+    bandwidth multisets stay distinct)."""
+    return topo.fingerprint()
 
 
 def bucket_payload(payload_bytes: float) -> int:
@@ -133,8 +134,10 @@ class Planner:
         if op == "allgather":
             num_domains = scenario_kw.get("num_domains", 2)
             return plan_ir.AllGatherScenario.split_tp(topo, num_domains)
-        if op == "dispatch":
-            return plan_ir.DispatchScenario(
+        if op in ("dispatch", "combine"):
+            cls = (plan_ir.DispatchScenario if op == "dispatch"
+                   else plan_ir.CombineScenario)
+            return cls(
                 topo=topo,
                 num_experts=scenario_kw.get("num_experts", 64),
                 top_k=scenario_kw.get("top_k", 8),
@@ -207,29 +210,53 @@ def default_planner() -> Planner:
 # high-level helpers consumed by the JAX / launch / benchmark layers
 # ---------------------------------------------------------------------------
 
+def _ep_topology(num_pods: int, ep_per_pod: int,
+                 topo: Optional[Topology] = None) -> Topology:
+    """Topology an EP mesh slice is planned on: an explicit fabric when
+    given (``--fabric`` / ``ParallelContext.fabric``), else the
+    mesh-derived §3.2 shape — pod == server (slow DCN axis),
+    chips-per-pod == NPUs-per-server (fast ICI axis).  A single-pod mesh
+    has no slow axis: it is planned on the all-ICI full mesh it actually
+    is (where unicast and MultiWrite ledgers coincide and the tie-break
+    keeps the relay-free unicast plan)."""
+    if topo is not None:
+        return topo
+    if num_pods > 1:
+        return tpu_pods(chips_per_pod=max(2, ep_per_pod), num_pods=num_pods)
+    return full_mesh(max(2, ep_per_pod), link_bw=TPU_ICI_LINK_BW,
+                     name="ici_full_mesh")
+
+
 def moe_dispatch_decision(*, num_pods: int, ep_per_pod: int,
                           num_experts: int, top_k: int,
                           tokens_per_rank: int, token_bytes: int,
                           hw: Optional[HardwareModel] = None,
-                          planner: Optional[Planner] = None) -> PlanDecision:
-    """Plan the MoE dispatch for one EP mesh slice.
-
-    The EP mesh maps onto the §3.2 cluster shape: pod == server (slow
-    DCN axis), chips-per-pod == NPUs-per-server (fast ICI axis).  The
-    payload is the per-rank token traffic of one dispatch.  A
-    single-pod mesh has no slow axis: it is planned on the all-ICI full
-    mesh it actually is (where unicast and MultiWrite ledgers coincide
-    and the tie-break keeps the relay-free unicast plan).
-    """
+                          planner: Optional[Planner] = None,
+                          topo: Optional[Topology] = None) -> PlanDecision:
+    """Plan the MoE dispatch for one EP mesh slice (see
+    :func:`_ep_topology` for the fabric the payload is scored on).
+    The payload is the per-rank token traffic of one dispatch."""
     planner = planner or default_planner()
-    if num_pods > 1:
-        topo = tpu_pods(chips_per_pod=max(2, ep_per_pod),
-                        num_pods=num_pods)
-    else:
-        topo = full_mesh(max(2, ep_per_pod), link_bw=TPU_ICI_LINK_BW,
-                         name="ici_full_mesh")
+    topo = _ep_topology(num_pods, ep_per_pod, topo)
     return planner.choose(
         "dispatch", float(tokens_per_rank) * token_bytes, topo, hw,
+        num_experts=num_experts, top_k=top_k, token_bytes=token_bytes)
+
+
+def moe_combine_decision(*, num_pods: int, ep_per_pod: int,
+                         num_experts: int, top_k: int,
+                         tokens_per_rank: int, token_bytes: int,
+                         hw: Optional[HardwareModel] = None,
+                         planner: Optional[Planner] = None,
+                         topo: Optional[Topology] = None) -> PlanDecision:
+    """Plan the MoE *combine* (return path) for one EP mesh slice —
+    independent of the dispatch decision: the return path's redundancy is
+    spread over the holders' rails (and may face asymmetric return
+    bandwidth), so its crossover sits elsewhere."""
+    planner = planner or default_planner()
+    topo = _ep_topology(num_pods, ep_per_pod, topo)
+    return planner.choose(
+        "combine", float(tokens_per_rank) * token_bytes, topo, hw,
         num_experts=num_experts, top_k=top_k, token_bytes=token_bytes)
 
 
@@ -248,4 +275,25 @@ def emergent_crossover_bytes(topo: Topology,
         if d.plan != "baseline":
             return float(d.payload_bytes)
         size *= 2
+    return math.inf
+
+
+def emergent_flip_batch(op: str, topo: Topology,
+                        token_bytes: int = 7168,
+                        batches: tuple = (16, 32, 64, 128, 256, 512,
+                                          1024, 2048, 4096),
+                        hw: Optional[HardwareModel] = None,
+                        planner: Optional[Planner] = None,
+                        **scenario_kw) -> float:
+    """Smallest per-rank token batch where the planner stops choosing the
+    baseline plan for ``op`` ("dispatch"/"combine") — the Fig 8 flip
+    point as an emergent quantity.  ``inf`` if the baseline always wins
+    over ``batches`` (e.g. on a full mesh with no slow axis)."""
+    planner = planner or default_planner()
+    base = plan_ir.BASELINE_PLAN[op]
+    for batch in batches:
+        d = planner.choose(op, float(batch) * token_bytes, topo, hw,
+                           token_bytes=token_bytes, **scenario_kw)
+        if d.plan != base:
+            return float(batch)
     return math.inf

@@ -28,14 +28,23 @@ AllGather on a full-mesh split into TP domains (§3.1 / §5.2):
   * :func:`allgather_full_multipath`      — full multi-path relaying in both
                                             unicast and multiwrite modes
 
-AlltoAll dispatch on the 2-server oversubscribed cluster (§3.2 / §6.3):
+AlltoAll dispatch on the oversubscribed cluster fabrics (§3.2 / §6.3):
   * :func:`dispatch_unicast`              — one unicast write per
                                             (token, destination NPU): k_remote
                                             redundant copies cross the rail
   * :func:`dispatch_multiwrite`           — one MultiWrite per token: a single
-                                            copy per remote server crosses the
-                                            rail, replication at the
-                                            same-index relay (§3.2)
+                                            copy per remote server (and rail
+                                            stripe) crosses, replication at
+                                            the rail relay (§3.2)
+
+AlltoAll combine — the return path, planned as a first-class op:
+  * :func:`combine_unicast`               — every expert partial returns
+                                            individually (redundant dual)
+  * :func:`combine_multiwrite`            — relay-side partial reduction:
+                                            ONE reduced partial per (token,
+                                            remote server, rail stripe)
+                                            crosses back — the mirror of
+                                            dispatch_multiwrite
 
 Every AllGather schedule takes a ``split`` — the fraction of each fragment
 sent over direct intra-domain links (paper §5.2 step (1): "split ratio is
@@ -54,7 +63,7 @@ import numpy as np
 
 from . import plan as plan_ir
 from .multiwrite import MultiWriteSimulator
-from .topology import Topology, same_index_peer
+from .topology import Topology
 
 # Buffer naming convention: AllGather output slot for source ``i`` is
 # ``ag/<i>``; segment suffixes ``/d`` (direct part) and ``/x`` (cross part)
@@ -277,6 +286,88 @@ def _token_payload(token_id: int, token_bytes: int) -> np.ndarray:
     return rng.integers(0, 256, size=token_bytes, dtype=np.uint8)
 
 
+# ---------------------------------------------------------------------------
+# AlltoAll combine schedules (the return path — dual of dispatch)
+# ---------------------------------------------------------------------------
+
+def combine_unicast(sim: MultiWriteSimulator, routing: DispatchRouting,
+                    token_bytes: int) -> None:
+    """Baseline combine: every expert NPU returns its weighted partial to
+    the token owner individually — one rail crossing per (token, remote
+    holder), the redundant-return dual of :func:`dispatch_unicast`.
+
+    Unlike unicast dispatch (whose k copies all leave on the SOURCE's
+    rail), unicast-combine crossings leave on each *holder's* rail, so
+    the redundancy is spread across rails — which is exactly why the
+    combine crossover sits at a different payload than dispatch and must
+    be planned independently.
+    """
+    for t, (src, dests) in enumerate(zip(routing.token_owner,
+                                         routing.token_dests)):
+        src = int(src)
+        payload = _token_payload(t, token_bytes)
+        for d in dests:
+            if d == src:
+                sim.memory[src][f"par/{t}/{d}"] = payload
+            else:
+                sim.write(d, src, f"par/{t}/{d}", payload, step=0)
+
+
+def combine_multiwrite(sim: MultiWriteSimulator, routing: DispatchRouting,
+                       token_bytes: int) -> None:
+    """Relay-reduced combine (mirror of :func:`dispatch_multiwrite`).
+
+    Per (token, dispatch relay group): the holders forward their partials
+    intra-server to the rail relay the dispatch replicated from; the
+    relay REDUCES them (AICPU software data plane, like the dispatch
+    relay's replication) and sends ONE reduced partial back across the
+    rail.  The relay groups come from ``partition_by_next_hop`` on the
+    OWNER's forwarding table — the same lookup the dispatch MultiWrite
+    performs, so the two directions stripe identically by construction.
+    Under a symmetric fabric the resulting link ledger is the exact
+    reverse of the dispatch-multiwrite ledger.
+    """
+    topo = sim.topo
+    for t, (src, dests) in enumerate(zip(routing.token_owner,
+                                         routing.token_dests)):
+        src = int(src)
+        payload = _token_payload(t, token_bytes)
+        nbytes = int(payload.nbytes)
+        local = [d for d in dests if topo.server_of(d) == topo.server_of(src)]
+        remote = [d for d in dests if topo.server_of(d) != topo.server_of(src)]
+        for d in local:
+            if d == src:
+                sim.memory[src][f"par/{t}/{d}"] = payload
+            else:
+                sim.write(d, src, f"par/{t}/{d}", payload, step=0)
+        for relay, ds in sorted(topo.partition_by_next_hop(src,
+                                                           remote).items()):
+            for d in ds:
+                if d != relay:
+                    sim.write(d, relay, f"red/{t}/{relay}/{d}", payload,
+                              step=0)
+                sim.relay_bytes[relay] += nbytes     # reduce: rx processing
+            sim.relay_tx_bytes[relay] += nbytes      # reduced-partial egress
+            sim.write(relay, src, f"par/{t}/{relay}", payload, step=0)
+
+
+def check_combine(sim: MultiWriteSimulator, routing: DispatchRouting,
+                  token_bytes: int) -> None:
+    """Every owner received at least one partial per remote server holding
+    its token, and one per local holder, all bit-exact."""
+    topo = sim.topo
+    for t, (src, dests) in enumerate(zip(routing.token_owner,
+                                         routing.token_dests)):
+        src = int(src)
+        expect = _token_payload(t, token_bytes)
+        got = [v for k, v in sim.memory[src].items()
+               if k.startswith(f"par/{t}/")]
+        servers = {topo.server_of(d) for d in dests}
+        assert len(got) >= len(servers), (t, len(got), servers)
+        for v in got:
+            np.testing.assert_array_equal(v, expect)
+
+
 def check_dispatch(sim: MultiWriteSimulator, routing: DispatchRouting,
                    token_bytes: int) -> None:
     """Every destination received exactly its tokens, bit-exact, once."""
@@ -475,6 +566,57 @@ plan_ir.register_plan(plan_ir.CollectivePlan(
     knobs={"microbatch": (1,)},
     simulate_fn=_simulate_dispatch(multiwrite=True),
     kwargs_fn=_dispatch_kwargs("hierarchical")))
+
+
+def _simulate_combine(multiwrite: bool):
+    def simulate(scenario: plan_ir.CombineScenario, payload_bytes: float,
+                 *, microbatch: int = 1) -> plan_ir.Ledger:
+        n_npus = scenario.topo.num_nodes
+        batch = max(1, int(round(payload_bytes / scenario.token_bytes)))
+        probe_batch = min(batch, plan_ir.PROBE_BATCH)
+        num_experts, top_k = scenario.num_experts, scenario.top_k
+        if num_experts % n_npus:
+            per_npu = max(1, num_experts // n_npus)
+            num_experts = per_npu * n_npus
+            top_k = min(top_k, num_experts)
+        sim = MultiWriteSimulator(scenario.topo)
+        routing = make_routing(probe_batch, n_npus, num_experts, top_k,
+                               seed=scenario.seed)
+        fn = combine_multiwrite if multiwrite else combine_unicast
+        fn(sim, routing, plan_ir.PROBE_TOKEN_BYTES)
+        from .latency_model import RELAY_SETUP_S
+        ledger = plan_ir.Ledger.from_sim(
+            sim, stages=max(1, int(microbatch)),
+            alpha_extra_s=RELAY_SETUP_S if multiwrite else 0.0)
+        if multiwrite:
+            # the combine relay reduces + forwards in SOFTWARE, same AICPU
+            # data plane as the dispatch relay (§6.4): its reduced-partial
+            # egress serializes through one engine
+            ledger = dataclasses.replace(
+                ledger, engine_serial=dict(sim.relay_tx_bytes))
+        probe_bytes = probe_batch * plan_ir.PROBE_TOKEN_BYTES
+        return ledger.scaled(
+            plan_ir.probe_scale(batch * scenario.token_bytes, probe_bytes))
+    return simulate
+
+
+def _combine_kwargs(scheme: str):
+    def kwargs_fn(*, microbatch: int = 1) -> dict:
+        # what models/moe.moe_ffn consumes (return-path lowering selector)
+        return {"moe_combine": scheme, "microbatch": int(microbatch)}
+    return kwargs_fn
+
+
+plan_ir.register_plan(plan_ir.CollectivePlan(
+    name="unicast", op="combine",
+    knobs={"microbatch": (1,)},
+    simulate_fn=_simulate_combine(multiwrite=False),
+    kwargs_fn=_combine_kwargs("baseline")))
+plan_ir.register_plan(plan_ir.CollectivePlan(
+    name="multiwrite", op="combine",
+    knobs={"microbatch": (1,)},
+    simulate_fn=_simulate_combine(multiwrite=True),
+    kwargs_fn=_combine_kwargs("hierarchical")))
 
 
 class _SchemeView(dict):

@@ -225,55 +225,90 @@ def vmem_elem_counts(arch: str, shape: ShapeSpec, pctx) -> set:
     return out
 
 
-def planner_cell_report(arch: str, shape: ShapeSpec, pctx) -> dict:
+# Fabric axis of the planner report grid: every cell additionally carries
+# the dispatch+combine decision on each of these registered fabrics
+# (--fabric overrides; see core.topology.FABRICS / parse_fabric).
+DEFAULT_REPORT_FABRICS = ("2x8", "4x8", "2x8r2")
+
+
+def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
+                        fabrics=DEFAULT_REPORT_FABRICS) -> dict:
     """Which plan the latency-model planner picks for this cell, and the
     predicted delta vs the baseline plan (the quantity the dry-run table
-    reports next to the roofline terms)."""
+    reports next to the roofline terms).  ``fabrics`` adds a what-if axis:
+    the same cell's dispatch+combine decisions on each named fabric."""
     from repro.core import planner as pl
     cfg = get_config(arch)
     out = {"policy": pctx.plan_policy}
     tokens = shape.global_batch * (shape.seq_len
                                    if shape.kind in ("train", "prefill")
                                    else 1)
+    n_local = max(1, tokens // (pctx.num_pods * pctx.data_size))
     if cfg.is_moe:
-        n_local = max(1, tokens // (pctx.num_pods * pctx.data_size))
+        use_pod, _ = pctx.ep_ranks(cfg.num_experts)
+        ep_kw = dict(num_pods=pctx.num_pods if use_pod else 1,
+                     ep_per_pod=pctx.data_size,
+                     num_experts=cfg.num_experts, top_k=cfg.top_k,
+                     tokens_per_rank=n_local, token_bytes=cfg.d_model * 2)
         d = pctx.moe_dispatch_plan(cfg.num_experts, cfg.top_k,
                                    tokens_per_rank=n_local,
                                    token_bytes=cfg.d_model * 2)
         if d is None:  # fixed policy: still report what auto would pick
-            use_pod, _ = pctx.ep_ranks(cfg.num_experts)
-            d = pl.moe_dispatch_decision(
-                num_pods=pctx.num_pods if use_pod else 1,
-                ep_per_pod=pctx.data_size,
-                num_experts=cfg.num_experts, top_k=cfg.top_k,
-                tokens_per_rank=n_local, token_bytes=cfg.d_model * 2)
+            d = pl.moe_dispatch_decision(**ep_kw, topo=pctx.fabric)
         out["moe_dispatch"] = d.report()
+        dc = pctx.moe_combine_plan(cfg.num_experts, cfg.top_k,
+                                   tokens_per_rank=n_local,
+                                   token_bytes=cfg.d_model * 2)
+        if dc is None:
+            dc = pl.moe_combine_decision(**ep_kw, topo=pctx.fabric)
+        out["moe_combine"] = dc.report()
     # Reference decision on the paper's §3.1 fixture (8-NPU split-TP full
     # mesh) at this cell's per-chip activation fragment — a what-if the
     # table carries alongside every cell, NOT a collective the traced
     # model necessarily issues (tp_subgroups=1 emits no split-TP gather).
-    from repro.core.topology import split_tp_full_mesh
+    from repro.core.topology import get_fabric, split_tp_full_mesh
     topo, _ = split_tp_full_mesh(8, tp=4)
-    frag = max(1, tokens // (pctx.num_pods * pctx.data_size)) * cfg.d_model * 2
+    frag = n_local * cfg.d_model * 2
     d = pl.default_planner().choose("allgather", frag, topo)
     out["allgather_ref_8x4"] = {"frag_bytes": frag, **d.report()}
+    # Fabric axis: how the decisions move with the physical bottleneck.
+    out["fabrics"] = {}
+    for fname in fabrics or ():
+        ftopo = get_fabric(fname)
+        cell = {"allgather": pl.default_planner().choose(
+            "allgather", frag, ftopo).report()}
+        if cfg.is_moe:
+            cell["dispatch"] = pl.default_planner().choose(
+                "dispatch", n_local * cfg.d_model * 2, ftopo,
+                num_experts=cfg.num_experts, top_k=cfg.top_k,
+                token_bytes=cfg.d_model * 2).report()
+            cell["combine"] = pl.default_planner().choose(
+                "combine", n_local * cfg.d_model * 2, ftopo,
+                num_experts=cfg.num_experts, top_k=cfg.top_k,
+                token_bytes=cfg.d_model * 2).report()
+        out["fabrics"][fname] = cell
     return out
 
 
+def _cell_pctx(shape: ShapeSpec, multi_pod: bool, variant: str):
+    pctx_kw = dict(VARIANTS[variant])
+    if shape.kind != "train":
+        # serving: replicate dense params over data (classic TP serving);
+        # MoE experts stay EP-sharded via moe_specs regardless.
+        pctx_kw.setdefault("fsdp", False)
+    return make_pctx(multi_pod=multi_pod, **pctx_kw)
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
-             variant: str = "mw", verbose: bool = True) -> dict:
+             variant: str = "mw", verbose: bool = True,
+             fabrics=DEFAULT_REPORT_FABRICS) -> dict:
     skip = cell_is_skipped(arch, shape_name)
     if skip:
         return {"arch": arch, "shape": shape_name,
                 "mesh": "multi" if multi_pod else "single",
                 "variant": variant, "skipped": skip}
-    pctx_kw = dict(VARIANTS[variant])
     shape = SHAPES[shape_name]
-    if shape.kind != "train":
-        # serving: replicate dense params over data (classic TP serving);
-        # MoE experts stay EP-sharded via moe_specs regardless.
-        pctx_kw.setdefault("fsdp", False)
-    pctx = make_pctx(multi_pod=multi_pod, **pctx_kw)
+    pctx = _cell_pctx(shape, multi_pod, variant)
     t0 = time.monotonic()
     kind, fn, args = input_specs(arch, shape_name, pctx,
                                  opt_dtype=VARIANT_OPT_DTYPE.get(variant))
@@ -342,7 +377,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "by_kind": coll.bytes_by_kind,
             "num_ops": coll.num_ops,
         },
-        "planner": planner_cell_report(arch, shape, pctx),
+        "planner": planner_cell_report(arch, shape, pctx, fabrics=fabrics),
         "roofline": {
             "compute_term_s": compute_term,
             "memory_term_s": memory_term,
@@ -395,14 +430,25 @@ def cell_path(arch, shape_name, multi_pod, variant):
 
 
 def run_and_save(arch, shape_name, multi_pod, variant="mw",
-                 force=False) -> dict:
+                 force=False, fabrics=DEFAULT_REPORT_FABRICS) -> dict:
     path = cell_path(arch, shape_name, multi_pod, variant)
     if os.path.exists(path) and not force:
         with open(path) as f:
-            return json.load(f)
+            result = json.load(f)
+        # the compiled cell is fabric-independent, but the planner
+        # what-if axis is not: refresh it (cheap — no recompile) when the
+        # cached cell was computed with a different fabric set
+        cached = set(result.get("planner", {}).get("fabrics", {}))
+        if ("planner" in result and cached != set(fabrics or ())):
+            pctx = _cell_pctx(SHAPES[shape_name], multi_pod, variant)
+            result["planner"] = planner_cell_report(
+                arch, SHAPES[shape_name], pctx, fabrics=fabrics)
+            with open(path, "w") as f:
+                json.dump(result, f, indent=1)
+        return result
     try:
         result = run_cell(arch, shape_name, multi_pod=multi_pod,
-                          variant=variant)
+                          variant=variant, fabrics=fabrics)
     except Exception as e:  # record failures — they are bugs to fix
         result = {"arch": arch, "shape": shape_name,
                   "mesh": "multi" if multi_pod else "single",
@@ -421,10 +467,15 @@ def main(argv=None):
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--variant", default="mw", choices=list(VARIANTS))
+    ap.add_argument("--fabric", default=",".join(DEFAULT_REPORT_FABRICS),
+                    help="comma list of fabrics (registered names or "
+                         "parseable specs like 4x8, 2x8r2@12.5) for the "
+                         "per-cell planner what-if axis; '' disables")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape x mesh) cell")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args(argv)
+    fabrics = tuple(f for f in args.fabric.split(",") if f)
 
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
@@ -441,7 +492,8 @@ def main(argv=None):
 
     failures = 0
     for arch, shape, mp, variant in cells:
-        r = run_and_save(arch, shape, mp, variant, force=args.force)
+        r = run_and_save(arch, shape, mp, variant, force=args.force,
+                         fabrics=fabrics)
         if "error" in r:
             failures += 1
     print(f"\n{len(cells) - failures}/{len(cells)} cells OK")

@@ -24,9 +24,13 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--plan-policy", choices=["auto", "fixed"],
                     default="auto",
-                    help="auto: MoE dispatch plan per phase from the "
-                         "latency-model planner (decode vs prefill can "
-                         "differ, Fig 8)")
+                    help="auto: MoE dispatch+combine plans per phase from "
+                         "the latency-model planner (decode vs prefill "
+                         "can differ, Fig 8)")
+    ap.add_argument("--fabric", default=None,
+                    help="fabric the planner scores against: a registered "
+                         "name (2x8, 4x8, 2x8r2, 2x8asym) or an inline "
+                         "spec 'SxP[rR][@INTER[:INTRA]]' in GB/s")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -58,18 +62,21 @@ def main(argv=None):
     engine = ServeEngine(model, params,
                          ServeConfig(max_new_tokens=args.max_new,
                                      temperature=args.temperature),
-                         pctx=pctx)
+                         pctx=pctx, fabric=args.fabric)
     prompts = np.random.default_rng(args.seed).integers(
         0, cfg.vocab, size=(args.prompts, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, seed=args.seed)
     print(f"generated {out.shape}; "
           f"prefill {engine.stats['prefill_s']*1e3:.0f}ms, "
           f"decode {engine.stats['decode_s']*1e3:.0f}ms")
-    for phase, rep in engine.stats.get("plans", {}).items():
-        print(f"planner[{phase}]: {rep['plan']} "
-              f"predicted={rep['predicted_us']:.1f}us "
-              f"vs baseline={rep['baseline_us']:.1f}us "
-              f"({rep['speedup_pct']:+.1f}%)")
+    for phase, per_op in engine.stats.get("plans", {}).items():
+        for op, rep in per_op.items():
+            if not rep:
+                continue
+            print(f"planner[{phase}/{op}]: {rep['plan']} "
+                  f"predicted={rep['predicted_us']:.1f}us "
+                  f"vs baseline={rep['baseline_us']:.1f}us "
+                  f"({rep['speedup_pct']:+.1f}%)")
     print(out[:, :16])
     return 0
 

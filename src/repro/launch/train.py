@@ -40,6 +40,13 @@ def main(argv=None):
                          "verbatim.  Default: auto, unless the chosen "
                          "--variant pins an explicit scheme (ablations "
                          "like 'baseline' stay ablations)")
+    ap.add_argument("--fabric", default=None,
+                    help="fabric the planner scores against instead of the "
+                         "mesh-derived shape: a registered name (2x8, 4x8, "
+                         "2x8r2, 2x8asym, tpu_2x16) or an inline spec "
+                         "'SxP[rR][@INTER[:INTRA]]' in GB/s, e.g. "
+                         "'4x8@12.5'.  Changes WHICH dispatch/combine "
+                         "plans win; execution stays on the actual mesh")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -77,11 +84,16 @@ def main(argv=None):
             pins = {"moe_scheme", "plan_policy"} & set(variant_kw)
             plan_policy = pctx.plan_policy if pins else "auto"
         pctx = dataclasses.replace(pctx, plan_policy=plan_policy)
+        if args.fabric:
+            from repro.core.topology import get_fabric
+            pctx = dataclasses.replace(pctx, fabric=get_fabric(args.fabric))
+            logging.info("planner fabric: %s", pctx.fabric.name)
         shape = SHAPES[args.shape]
         batch, seq = shape.global_batch, shape.seq_len
         if cfg.is_moe:
-            # Planner-selected dispatch plan for this workload (the same
-            # decision moe_ffn consumes at trace time under "auto").
+            # Planner-selected dispatch AND combine plans for this
+            # workload (the same decisions moe_ffn consumes at trace time
+            # under "auto" — the two halves are planned independently).
             n_local = (batch * seq) // (pctx.num_pods * pctx.data_size)
             # token_bytes matches the bf16 activations built below; the
             # authoritative decision is the one moe_ffn re-derives from
@@ -91,9 +103,15 @@ def main(argv=None):
                 token_bytes=cfg.d_model * 2)
             if decision is not None:
                 logging.info("planner %s", decision.summary())
+                combine = pctx.moe_combine_plan(
+                    cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
+                    token_bytes=cfg.d_model * 2)
+                if combine is not None:
+                    logging.info("planner %s", combine.summary())
             else:
-                logging.info("planner fixed: moe_scheme=%s",
-                             pctx.moe_scheme)
+                logging.info("planner fixed: moe_scheme=%s moe_combine=%s",
+                             pctx.moe_scheme,
+                             pctx.moe_combine or pctx.moe_scheme)
 
     model = build_model(cfg, pctx,
                         dtype=jnp.float32 if args.smoke else jnp.bfloat16)

@@ -274,6 +274,43 @@ def decode_attention_block(p, x, cache_k, cache_v, cur_len, dims: AttnDims,
 
 
 # ---------------------------------------------------------------------------
+# split-TP AllGather (§3.1) — the tp_subgroups > 1 activation gather
+# ---------------------------------------------------------------------------
+
+def split_tp_allgather(x, pctx, *, axis_name: Optional[str] = None):
+    """AllGather a model-axis-sharded activation across its split-TP
+    domain (paper §3.1: the model axis divided into ``pctx.tp_subgroups``
+    TP domains, cross-domain links idle and available for relaying).
+
+    Must be called inside ``shard_map`` (named-axis collective).  Routing:
+
+    - ``plan_policy == "auto"``: through ``collectives.planned_allgather``
+      — scheme and split come from the latency-model planner at trace
+      time (baseline below the Fig 7 crossover, multiwrite above it); no
+      fixed ``mode=``/``split=`` at the call site.
+    - ``plan_policy == "fixed"``: the paper-faithful multiwrite paired
+      relaying at the §5.2 analytic split.
+    - ``tp_subgroups == 1``: plain all_gather over the whole axis (no
+      split-TP domains, nothing to relay through).
+
+    Returns ``[domain_size, *x.shape]`` — fragment-stacked, bit-identical
+    to ``collectives.allgather_reference`` over the same domains.
+    """
+    from repro.core import collectives as cl
+    from repro.core.schedules import optimal_split
+
+    axis = axis_name or pctx.model_axis
+    nd = pctx.tp_subgroups
+    if nd <= 1:
+        return cl.allgather_reference(x, axis, num_domains=1)
+    if pctx.plan_policy == "auto":
+        return cl.planned_allgather(x, axis, num_domains=nd)
+    return cl.multiwrite_allgather(
+        x, axis, num_domains=nd,
+        split=optimal_split("multiwrite_paired"), mode="paired")
+
+
+# ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------
 

@@ -13,7 +13,11 @@ topology decide — the §5.2 dynamic workflow, Fig 8's batch-dependent
 winner); under "fixed", ``pctx.moe_scheme`` selects hierarchical
 (MultiWrite) vs baseline (unicast: one copy per (token, destination
 chip)) — the paper's comparison pair, selectable per run for the §Perf
-ablation.
+ablation.  The COMBINE path is resolved independently through the
+planner's "combine" op (``pctx.resolve_combine_scheme``): a hierarchical
+dispatch may return via relay-reduced partials (hierarchical_combine) or
+individual partials (hierarchical_combine_unicast), whichever the return
+path's own ledger scores faster on the active fabric.
 
 EP placement: EP spans (pod, data) when the arch has enough experts
 (kimi-k2: 384 experts over 32 EP ranks — the paper's large-EP regime);
@@ -96,6 +100,25 @@ def balanced_capacities(n_tokens: int, k: int, p: int, d: int,
                              expert_capacity=exp_cap)
 
 
+def unicast_capacities(dcfg: cl.DispatchConfig, n_tokens: int, k: int,
+                       ranks: int, per_rank: int,
+                       cf: float) -> cl.DispatchConfig:
+    """Rebase a :func:`balanced_capacities` config for the UNICAST
+    (per-destination-RANK) packing of ``baseline_dispatch``: fair
+    capacity is the balanced per-rank expectation (k/R), and
+    ``expert_capacity`` — a fraction of the incoming buffer — must be
+    renormalized from the hierarchical D*Cd buffer to the unicast R*Cr
+    one, or small decode batches round the expert buffer down to zero
+    slots.  Kept next to its hierarchical twin so the two sizing rules
+    (which both anticipate the callee's ``max(1, round(...))``) evolve
+    together."""
+    rank_cap = min(1.0, k / ranks) * cf
+    cr = max(1, int(round(n_tokens * rank_cap)))
+    ce_target = max(1, int(round(n_tokens * k / per_rank * cf)))
+    return dataclasses.replace(dcfg, pod_capacity=rank_cap,
+                               expert_capacity=ce_target / (ranks * cr))
+
+
 def load_balance_loss(logits, ids, num_experts: int):
     """Switch-style aux loss: E * sum_i f_i * P_i (local estimate)."""
     probs = jax.nn.softmax(logits, axis=-1)                  # [N, E]
@@ -139,14 +162,21 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
     # plan_policy="auto" (§5.2 dynamic workflow — decode traces pick the
     # unicast plan at small batch, prefill/train pick MultiWrite past the
     # crossover), or the declared moe_scheme knob under "fixed".
+    # The COMBINE (return path) is resolved independently: its redundancy
+    # is spread over the holders' rails, so its crossover sits elsewhere
+    # (and the fabric may be asymmetric).  The baseline dispatch has no
+    # relay to reduce at, so its return path is always unicast.
     scheme = pctx.resolve_moe_scheme(
         cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
         token_bytes=d * x.dtype.itemsize)
+    combine_scheme = "baseline"
+    if scheme == "hierarchical":
+        combine_scheme = pctx.resolve_combine_scheme(
+            cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
+            token_bytes=d * x.dtype.itemsize)
     if scheme == "baseline":
-        # unicast packs per destination RANK: fair capacity is the
-        # balanced per-rank expectation (k/R), not the per-pod one
-        rank_cap = min(1.0, cfg.top_k / (p * dd)) * capacity_factor
-        dcfg = dataclasses.replace(dcfg, pod_capacity=rank_cap)
+        dcfg = unicast_capacities(dcfg, n_local, cfg.top_k, p * dd,
+                                  per_rank, capacity_factor)
 
     # deferred TP reduction: the combine tree is LINEAR in the expert
     # outputs, so the row-parallel psum commutes through it — emit partial
@@ -164,7 +194,10 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
             exp_tok, exp_gate, st = cl.hierarchical_dispatch(
                 tok, ids, gates, dcfg, epmesh)
             exp_out = _expert_ffn(w1, w3, w2, exp_tok, cfg.act, expert_axis)
-            out = cl.hierarchical_combine(exp_out, exp_gate, st)
+            combine_fn = (cl.hierarchical_combine
+                          if combine_scheme == "hierarchical"
+                          else cl.hierarchical_combine_unicast)
+            out = combine_fn(exp_out, exp_gate, st)
         else:
             exp_tok, exp_gate, st = cl.baseline_dispatch(
                 tok, ids, gates, dcfg, epmesh)

@@ -36,6 +36,14 @@ class ParallelContext:
     #   "fixed": the explicit knobs below are used verbatim.
     moe_scheme: str = "hierarchical"  # hierarchical (MultiWrite) | baseline
     #                                   (plan_policy="fixed" only)
+    moe_combine: Optional[str] = None  # return-path scheme under "fixed":
+    #   "hierarchical" (relay-reduced) | "baseline" (unicast return) |
+    #   None = follow moe_scheme.  Under "auto" the combine planner op
+    #   decides, independently of dispatch.
+    fabric: Optional[object] = None   # explicit core.topology.Topology the
+    #   planner scores against (--fabric CLI); None = derived from the mesh
+    #   shape (pod == server).  Only changes WHICH plan wins — execution
+    #   stays on the actual mesh.
     tp_subgroups: int = 1             # §3.1 split-TP domains on model axis
     remat: str = "full"               # none | selective | full
     seq_shard_decode: bool = True     # shard decode KV length over model
@@ -77,10 +85,10 @@ class ParallelContext:
     # -- planner consumption -------------------------------------------------
     def moe_dispatch_plan(self, num_experts: int, top_k: int,
                           tokens_per_rank: int, token_bytes: int):
-        """Planner decision for an MoE dispatch on this mesh, or ``None``
-        when ``plan_policy`` is "fixed" (the explicit ``moe_scheme`` knob
-        applies).  Called at trace time; decisions are LRU-cached on
-        (topology, payload bucket)."""
+        """Planner decision for an MoE dispatch on this mesh (or on the
+        explicit ``fabric``), or ``None`` when ``plan_policy`` is "fixed"
+        (the explicit ``moe_scheme`` knob applies).  Called at trace
+        time; decisions are LRU-cached on (topology, payload bucket)."""
         if self.plan_policy != "auto":
             return None
         from repro.core.planner import moe_dispatch_decision
@@ -89,7 +97,25 @@ class ParallelContext:
             num_pods=self.num_pods if use_pod else 1,
             ep_per_pod=self.data_size,
             num_experts=num_experts, top_k=top_k,
-            tokens_per_rank=tokens_per_rank, token_bytes=token_bytes)
+            tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
+            topo=self.fabric)
+
+    def moe_combine_plan(self, num_experts: int, top_k: int,
+                         tokens_per_rank: int, token_bytes: int):
+        """Planner decision for the MoE *combine* (return path), planned
+        independently of dispatch — the return redundancy is spread over
+        the holders' rails and may face asymmetric bandwidth.  ``None``
+        under "fixed"."""
+        if self.plan_policy != "auto":
+            return None
+        from repro.core.planner import moe_combine_decision
+        use_pod, _ = self.ep_ranks(num_experts)
+        return moe_combine_decision(
+            num_pods=self.num_pods if use_pod else 1,
+            ep_per_pod=self.data_size,
+            num_experts=num_experts, top_k=top_k,
+            tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
+            topo=self.fabric)
 
     def resolve_moe_scheme(self, num_experts: int, top_k: int,
                            tokens_per_rank: int, token_bytes: int) -> str:
@@ -100,6 +126,20 @@ class ParallelContext:
         if decision is None:
             return self.moe_scheme
         return decision.shard_map_kwargs["moe_scheme"]
+
+    def resolve_combine_scheme(self, num_experts: int, top_k: int,
+                               tokens_per_rank: int, token_bytes: int) -> str:
+        """The combine (return-path) scheme moe_ffn executes:
+        planner-chosen under ``plan_policy="auto"`` (the "combine" op,
+        resolved independently of dispatch), else the declared
+        ``moe_combine`` knob, defaulting to following ``moe_scheme``."""
+        decision = self.moe_combine_plan(num_experts, top_k,
+                                         tokens_per_rank, token_bytes)
+        if decision is None:
+            if self.moe_combine is not None:
+                return self.moe_combine
+            return self.moe_scheme
+        return decision.shard_map_kwargs["moe_combine"]
 
 
 def shard(x, pctx: Optional[ParallelContext], *spec):

@@ -28,22 +28,33 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, model, params, cfg: ServeConfig = ServeConfig(),
-                 pctx=None):
+                 pctx=None, fabric=None):
+        """``fabric``: optional fabric spec/name (see
+        ``core.topology.get_fabric``) the planner scores against instead
+        of the mesh-derived shape — the serving side of ``--fabric``."""
         self.model = model
         self.params = params
         self.cfg = cfg
+        if fabric is not None and pctx is not None:
+            import dataclasses as _dc
+
+            from repro.core.topology import get_fabric
+            pctx = _dc.replace(pctx, fabric=get_fabric(fabric)
+                               if isinstance(fabric, str) else fabric)
         self.pctx = pctx
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
 
     def plan_report(self, batch: int, prompt_len: int) -> dict:
-        """Planner decisions for this serving shape: the prefill dispatch
-        (batch*prompt_len tokens) and the decode dispatch (batch tokens).
-        These are the decisions the jitted MoE layers consume at trace
-        time under ``plan_policy="auto"`` — decode typically stays on the
-        unicast plan (small payload, Fig 8) while prefill crosses to
-        MultiWrite."""
+        """Planner decisions for this serving shape, per phase and per
+        direction: the prefill (batch*prompt_len tokens) and decode
+        (batch tokens) DISPATCH plus the independently-planned COMBINE
+        (return path).  These are the decisions the jitted MoE layers
+        consume at trace time under ``plan_policy="auto"`` — decode
+        typically stays on the unicast plans (small payload, Fig 8) while
+        prefill crosses to MultiWrite; on asymmetric fabrics the two
+        directions can flip at different batches."""
         mcfg = self.model.cfg
         if self.pctx is None or not getattr(mcfg, "is_moe", False):
             return {}
@@ -51,12 +62,16 @@ class ServeEngine:
         out = {}
         for phase, n_tokens in (("prefill", batch * prompt_len),
                                 ("decode", batch)):
-            decision = self.pctx.moe_dispatch_plan(
-                mcfg.num_experts, mcfg.top_k,
-                tokens_per_rank=max(1, n_tokens // dp),
-                token_bytes=mcfg.d_model * 2)
-            if decision is not None:
-                out[phase] = decision.report()
+            kw = dict(tokens_per_rank=max(1, n_tokens // dp),
+                      token_bytes=mcfg.d_model * 2)
+            dispatch = self.pctx.moe_dispatch_plan(
+                mcfg.num_experts, mcfg.top_k, **kw)
+            if dispatch is None:
+                continue
+            combine = self.pctx.moe_combine_plan(
+                mcfg.num_experts, mcfg.top_k, **kw)
+            out[phase] = {"dispatch": dispatch.report(),
+                          "combine": combine.report() if combine else None}
         return out
 
     def generate(self, prompts: np.ndarray, max_new: Optional[int] = None,

@@ -118,13 +118,15 @@ def run_dispatch_checks(scheme):
         my_pod = jax.lax.axis_index("pod")
         my_ep = jax.lax.axis_index("ep")
         my_rank = my_pod * eps + my_ep
-        if scheme == "hierarchical":
+        if scheme in ("hierarchical", "hierarchical_unicast_combine"):
             exp_tok, exp_gate, state = cl.hierarchical_dispatch(
                 tok, ids, gates, cfg, epmesh)
             local_scale = scale[my_rank * per_rank
                                 + jnp.arange(per_rank)][:, None, None]
-            out = cl.hierarchical_combine(exp_tok * local_scale, exp_gate,
-                                          state)
+            combine = (cl.hierarchical_combine_unicast
+                       if scheme == "hierarchical_unicast_combine"
+                       else cl.hierarchical_combine)
+            out = combine(exp_tok * local_scale, exp_gate, state)
         else:
             exp_tok, exp_gate, state = cl.baseline_dispatch(
                 tok, ids, gates, cfg, epmesh)
@@ -185,10 +187,45 @@ def run_capacity_checks():
     check("moe capacity drop keeps outputs a gated subset", ok)
 
 
+# ===========================================================================
+# layers.split_tp_allgather (tp_subgroups path through the planner)
+# ===========================================================================
+
+def run_split_tp_layer_checks():
+    import dataclasses
+
+    from repro.models import layers as L
+    from repro.parallel.context import ParallelContext
+
+    mesh = jax.make_mesh((8,), ("x",))
+    pctx = ParallelContext(mesh=mesh, pod_axis=None, data_axis="x",
+                           model_axis="x", tp_subgroups=2)
+    rng = np.random.default_rng(4)
+    for rows, feat in ((16, 32), (8, 5)):
+        x = jnp.asarray(rng.normal(size=(8 * rows, feat)).astype(np.float32))
+        ref_fn = jax.jit(shard_map(
+            functools.partial(cl.allgather_reference, axis_name="x",
+                              num_domains=2),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
+        ref = np.asarray(ref_fn(x))
+        for policy in ("fixed", "auto"):
+            p = dataclasses.replace(pctx, plan_policy=policy)
+            fn = jax.jit(shard_map(
+                functools.partial(L.split_tp_allgather, pctx=p),
+                mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                check_vma=False))
+            got = np.asarray(fn(x))
+            check(f"layers.split_tp_allgather policy={policy} "
+                  f"shape=({rows},{feat}) == reference",
+                  np.array_equal(ref, got))
+
+
 if __name__ == "__main__":
     assert len(jax.devices()) == 8, jax.devices()
     run_allgather_checks()
     run_dispatch_checks("hierarchical")
+    run_dispatch_checks("hierarchical_unicast_combine")
     run_dispatch_checks("baseline")
     run_capacity_checks()
+    run_split_tp_layer_checks()
     print("ALL OK")

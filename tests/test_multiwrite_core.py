@@ -32,13 +32,30 @@ class TestTopology:
     def test_two_server_rail_first_routing(self):
         topo = two_server_cluster()
         # cross-server destinations route via the same-index rail peer
+        # (peer index derived from the topology's fabric metadata, not a
+        # hard-coded npus_per_server=8)
         for i in range(8):
             for j in range(8):
-                assert topo.next_hop(i, 8 + j) == same_index_peer(i, 1)
-                assert topo.next_hop(8 + i, j) == same_index_peer(8 + i, 0)
+                assert topo.next_hop(i, 8 + j) == same_index_peer(topo, i, 1)
+                assert topo.next_hop(8 + i, j) == same_index_peer(topo,
+                                                                  8 + i, 0)
         # intra-server stays direct
         assert topo.next_hop(0, 3) == 3
         assert topo.path(0, 8 + 3) == [0, 8, 11]
+
+    def test_metadata_derived_grouping_non8_fabric(self):
+        """server_of / same_index_peer derive from ClusterMeta: a 3x4
+        fabric groups rails correctly (the old free functions silently
+        assumed npus_per_server=8)."""
+        from repro.core.topology import ClusterSpec, server_of
+        topo = ClusterSpec(num_servers=3, npus_per_server=4).build()
+        assert topo.num_nodes == 12
+        assert server_of(topo, 7) == 1
+        assert same_index_peer(topo, 7, 2) == 11
+        for i in range(4):
+            for j in range(4):
+                assert topo.next_hop(i, 8 + j) == same_index_peer(topo, i, 2)
+        assert topo.partition_by_next_hop(0, [5, 6, 7]) == {4: [5, 6, 7]}
 
     def test_partition_by_next_hop_groups_remote_server(self):
         """§4.3.3 rule 3 over the rail-first table: ALL destinations on a

@@ -4,6 +4,10 @@ Invariants covered:
   * MultiWrite delivers exactly-once to exactly the destination set, for
     ANY topology/destination combination — and never puts more bytes on
     any link than unicast does.
+  * Fabric-family forwarding tables: ``path()`` never loops, rail-first
+    grouping holds for every (server count, rail count) combo, and the
+    multiwrite combine ledger mirrors the dispatch ledger on symmetric
+    fabrics.
   * The latency model is monotone in message size and respects the
     scheme ordering at large sizes.
   * Checkpoint save/restore is identity for arbitrary pytrees.
@@ -17,8 +21,19 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import latency_model as lm
+from repro.core import schedules as sch
 from repro.core.multiwrite import MultiWriteSimulator
-from repro.core.topology import full_mesh, two_server_cluster
+from repro.core.topology import ClusterSpec, full_mesh, two_server_cluster
+
+
+@st.composite
+def cluster_specs(draw):
+    """Arbitrary small fabrics: (servers, npus, rails) with rails <= npus."""
+    servers = draw(st.integers(1, 4))
+    npus = draw(st.integers(2, 6))
+    rails = draw(st.integers(1, min(3, npus))) if servers > 1 else 1
+    return ClusterSpec(num_servers=servers, npus_per_server=npus,
+                       rails_per_npu=rails)
 
 
 class TestMultiWriteProperties:
@@ -73,6 +88,70 @@ class TestMultiWriteProperties:
         sim.multiwrite(0, {int(d): "x" for d in dests}, data)
         assert not sim.relay_bytes        # no relaying needed
         assert sum(sim.link_bytes.values()) == 64 * len(dests)
+
+
+class TestFabricForwardingProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(spec=cluster_specs(), seed=st.integers(0, 999))
+    def test_path_never_loops(self, spec, seed):
+        """path() terminates within num_nodes hops for every node pair on
+        every generated fabric (no forwarding loops)."""
+        topo = spec.build()
+        rng = np.random.default_rng(seed)
+        nodes = rng.choice(topo.num_nodes, size=min(6, topo.num_nodes),
+                           replace=False)
+        for src in nodes:
+            for dst in nodes:
+                if src == dst:
+                    continue
+                p = topo.path(int(src), int(dst),
+                              max_hops=topo.num_nodes)
+                assert p[0] == src and p[-1] == dst
+                assert len(set(p)) == len(p)               # no revisits
+
+    @settings(max_examples=40, deadline=None)
+    @given(spec=cluster_specs(), src=st.integers(0, 23))
+    def test_rail_first_grouping(self, spec, src):
+        """For every (server count, rail count): a remote server's whole
+        destination set groups under that server's rail peers of the
+        source — at most ``rails`` copies cross per MultiWrite."""
+        if spec.num_servers < 2:
+            return
+        topo = spec.build()
+        src = src % topo.num_nodes
+        for sv in range(spec.num_servers):
+            if sv == topo.server_of(src):
+                continue
+            groups = topo.partition_by_next_hop(src, topo.server_nodes(sv))
+            assert set(groups) <= set(topo.rail_peers(src, sv))
+            assert 1 <= len(groups) <= spec.rails_per_npu
+            # every destination lands in exactly one group
+            got = sorted(d for g in groups.values() for d in g)
+            assert got == topo.server_nodes(sv)
+
+    @settings(max_examples=25, deadline=None)
+    @given(spec=cluster_specs(), seed=st.integers(0, 999))
+    def test_combine_mirrors_dispatch_on_symmetric_fabrics(self, spec, seed):
+        """Multiwrite combine == link-reverse of multiwrite dispatch:
+        exact per-link mirror on single-rail fabrics, equal total rail
+        crossings on multi-rail ones."""
+        topo = spec.build()
+        n = topo.num_nodes
+        experts = max(1, 32 // n) * n
+        routing = sch.make_routing(4, n, experts, min(4, experts),
+                                   seed=seed)
+        disp, comb = MultiWriteSimulator(topo), MultiWriteSimulator(topo)
+        sch.dispatch_multiwrite(disp, routing, 128)
+        sch.combine_multiwrite(comb, routing, 128)
+        sch.check_combine(comb, routing, 128)
+        if spec.rails_per_npu <= 1:
+            assert dict(comb.link_bytes) == \
+                {(b, a): v for (a, b), v in disp.link_bytes.items()}
+        else:
+            def rail_total(sim):
+                return sum(v for (a, b), v in sim.link_bytes.items()
+                           if topo.server_of(a) != topo.server_of(b))
+            assert rail_total(comb) == rail_total(disp)
 
 
 class TestLatencyModelProperties:
