@@ -182,6 +182,139 @@ def bench_fabrics(smoke: bool = False):
     return rows
 
 
+def bench_calibration(smoke: bool = False):
+    """End-to-end telemetry loop demo (probe -> store -> fit -> re-plan).
+
+    Story: a healthy 2x8 cluster is probed and fitted (the fitted
+    per-class bandwidths must reproduce the nominal 56/25 GB/s); then
+    the inter-server rails silently degrade 4x (simulated ground truth —
+    the planner never sees it, only measured times).  The drift monitor
+    detects predicted-vs-measured divergence, re-fits, recalibrates the
+    planner — and the dispatch flip batch moves, flipping the decision
+    at the probe batch WITHOUT process restart.
+
+    Under ``--smoke`` this is the CI gate: any broken stage of the loop
+    (fit confidence, drift trip, cache invalidation, decision flip)
+    exits nonzero.  Full mode also emits results/BENCH_calibration.json.
+    """
+    import json
+    import os
+
+    from repro.core import latency_model as lm
+    from repro.core import planner as pl
+    from repro.core.topology import two_server_cluster
+    from repro.telemetry import (CalibrationStore, DriftMonitor,
+                                 GroundTruth, SimProbe)
+
+    topo = two_server_cluster()
+    planner = pl.Planner()
+    store = CalibrationStore(":memory:")
+    monitor = DriftMonitor(planner, store, topo, threshold=0.25)
+    probe_batch = 64                      # unicast pre, multiwrite post
+
+    def flips():
+        return (pl.emergent_flip_batch("dispatch", topo, planner=planner),
+                pl.emergent_flip_batch("combine", topo, planner=planner))
+
+    def fitted_bws(event):
+        return {c: f["bw_gbps"] for c, f in (event or {}).get(
+            "fits", {}).items() if f["trusted"]}
+
+    # ---- phase 1: healthy fabric -------------------------------------------
+    healthy = SimProbe(GroundTruth(noise=0.01))
+    ev1 = monitor.run_cycle(healthy) or monitor.recalibrate(force=True)
+    bw1 = fitted_bws(ev1)
+    d_pre = planner.choose("dispatch", probe_batch * lm.TOKEN_BYTES, topo,
+                           token_bytes=lm.TOKEN_BYTES)
+    dflip1, cflip1 = flips()
+    print("== bench_calibration: telemetry loop ==")
+    print(f"healthy fit: intra {bw1.get('intra', 0):.1f} GB/s "
+          f"(nominal 56), inter {bw1.get('inter', 0):.1f} GB/s "
+          f"(nominal 25); dispatch@{probe_batch} -> {d_pre.plan}, "
+          f"flip batch {dflip1:.0f}")
+
+    # ---- phase 2: rails silently degrade 4x --------------------------------
+    degraded = SimProbe(GroundTruth(noise=0.01, seed=1).degraded(topo, 4.0))
+    ev2 = None
+    cycles = 0
+    for cycles in range(1, 4):
+        ev2 = monitor.run_cycle(degraded)
+        if ev2:
+            break
+    bw2 = fitted_bws(ev2)
+    d_post = planner.choose("dispatch", probe_batch * lm.TOKEN_BYTES, topo,
+                            token_bytes=lm.TOKEN_BYTES)
+    dflip2, cflip2 = flips()
+    print(f"4x rail degradation: drift {100 * (ev2 or {}).get('drift', 0):.0f}% "
+          f"tripped after {cycles} cycle(s); refit inter "
+          f"{bw2.get('inter', 0):.2f} GB/s (true 6.25); "
+          f"dispatch@{probe_batch} -> {d_post.plan}, "
+          f"flip batch {dflip2:.0f}")
+
+    # ---- the loop must actually close --------------------------------------
+    failures = []
+    if not (0.9 * 25 <= bw1.get("inter", 0) <= 1.1 * 25):
+        failures.append(f"healthy inter fit off: {bw1}")
+    if not (0.9 * 56 <= bw1.get("intra", 0) <= 1.1 * 56):
+        failures.append(f"healthy intra fit off: {bw1}")
+    if ev2 is None:
+        failures.append("monitor never tripped on 4x degradation")
+    if not (0.8 * 6.25 <= bw2.get("inter", 0) <= 1.2 * 6.25):
+        failures.append(f"degraded inter fit off: {bw2}")
+    if not (d_pre.plan == "unicast" and d_post.plan == "multiwrite"):
+        failures.append(
+            f"decision did not flip: {d_pre.plan} -> {d_post.plan}")
+    if not dflip2 < dflip1:
+        failures.append(f"flip batch did not move: {dflip1} -> {dflip2}")
+    if planner.recalibrations < 1:
+        failures.append("planner cache never invalidated")
+    for f in failures:
+        print(f"CALIBRATION LOOP FAIL: {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+    print(f"loop closed: {planner.recalibrations} recalibration(s), "
+          f"{len(store)} probe records, decision flipped in-process")
+
+    rows = [
+        {"name": "calib_healthy_inter_gbps", "metric": "GB/s",
+         "value": bw1.get("inter", 0.0)},
+        {"name": "calib_healthy_intra_gbps", "metric": "GB/s",
+         "value": bw1.get("intra", 0.0)},
+        {"name": "calib_degraded_inter_gbps", "metric": "GB/s",
+         "value": bw2.get("inter", 0.0)},
+        {"name": "calib_drift_at_trip", "metric": "ratio",
+         "value": (ev2 or {}).get("drift", 0.0)},
+        {"name": "calib_dispatch_flip_pre", "metric": "batch",
+         "value": dflip1},
+        {"name": "calib_dispatch_flip_post", "metric": "batch",
+         "value": dflip2},
+        {"name": "calib_combine_flip_pre", "metric": "batch",
+         "value": cflip1},
+        {"name": "calib_combine_flip_post", "metric": "batch",
+         "value": cflip2},
+    ]
+    if not smoke:
+        out = {
+            "fabric": topo.name,
+            "probe_batch": probe_batch,
+            "healthy": {"fits_gbps": bw1, "dispatch_plan": d_pre.plan,
+                        "dispatch_flip": dflip1, "combine_flip": cflip1},
+            "degraded_4x": {"fits_gbps": bw2, "dispatch_plan": d_post.plan,
+                            "dispatch_flip": dflip2, "combine_flip": cflip2,
+                            "drift_at_trip": (ev2 or {}).get("drift"),
+                            "cycles_to_trip": cycles},
+            "recalibrations": planner.recalibrations,
+            "store_records": len(store),
+        }
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_calibration.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
+    return rows
+
+
 def bench_train_throughput():
     """Tiny-model CPU train-step wall time (framework overhead check)."""
     import jax
@@ -213,6 +346,7 @@ def bench_train_throughput():
 MICRO_BENCHES = {
     "bench_planner": lambda smoke: bench_planner(),
     "bench_fabrics": bench_fabrics,
+    "bench_calibration": bench_calibration,
     "bench_kernels": lambda smoke: bench_kernels(),
     "bench_dispatch_sim": lambda smoke: bench_dispatch_sim(),
     "bench_train_throughput": lambda smoke: bench_train_throughput(),

@@ -109,6 +109,15 @@ class HardwareModel:
         """The per-link overrides as a plain dict."""
         return dict(self.link_bw)
 
+    def fingerprint(self) -> tuple:
+        """Hashable identity of the calibration state.  The planner keys
+        its LRU cache on this (not on the object), so an in-place
+        ``planner.hw`` swap after :meth:`recalibrated` can never serve a
+        decision scored under the old constants — and two value-equal
+        models share cache entries."""
+        return ("hw", self.alpha_base, self.alpha_hop, self.copy_bw,
+                self.flow_interference, self.link_bw)
+
 
 IDEAL = HardwareModel(alpha_base=0.0, alpha_hop=0.0, copy_bw=math.inf)
 DEFAULT = HardwareModel()

@@ -140,16 +140,24 @@ class AllGatherScenario:
 
 @dataclasses.dataclass(frozen=True)
 class DispatchScenario:
-    """§3.2 MoE AlltoAll dispatch over an oversubscribed cluster."""
+    """§3.2 MoE AlltoAll dispatch over an oversubscribed cluster.
+
+    ``skew`` prices non-uniform (hot-expert) routing: 0 = balanced
+    (paper §6.1 "expert load balancing is enabled"); larger values draw
+    expert choices from a Zipf-like popularity law, concentrating
+    traffic on the hot experts' owners — the imbalanced-MoE regime the
+    planner must price for production routers."""
 
     topo: Topology
     num_experts: int = 64
     top_k: int = 8
     token_bytes: int = 7168
     seed: int = 0
+    skew: float = 0.0
 
     def cache_key(self):
-        return ("dispatch", self.num_experts, self.top_k, self.token_bytes)
+        return ("dispatch", self.num_experts, self.top_k, self.token_bytes,
+                self.skew)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,9 +173,11 @@ class CombineScenario:
     top_k: int = 8
     token_bytes: int = 7168
     seed: int = 0
+    skew: float = 0.0          # hot-expert routing skew (see DispatchScenario)
 
     def cache_key(self):
-        return ("combine", self.num_experts, self.top_k, self.token_bytes)
+        return ("combine", self.num_experts, self.top_k, self.token_bytes,
+                self.skew)
 
 
 def default_scenarios(topo: Topology) -> dict:

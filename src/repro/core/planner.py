@@ -111,6 +111,8 @@ class Planner:
     layer; tests construct their own to control the cache.
     """
 
+    DECISION_LOG_MAX = 1024
+
     def __init__(self, hw: HardwareModel = DEFAULT,
                  cache_size: int = 256) -> None:
         self.hw = hw
@@ -118,6 +120,11 @@ class Planner:
         self._cache: OrderedDict[tuple, PlanDecision] = OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
+        self.recalibrations = 0
+        # (plan, predicted, measured) rows: one per fresh sweep (measured
+        # None until telemetry fills it via note_measurement) — the audit
+        # trail the drift monitor and serve reports read.
+        self.decision_log: list[dict] = []
 
     # -- cache ---------------------------------------------------------------
     def cache_info(self) -> dict:
@@ -127,6 +134,45 @@ class Planner:
     def cache_clear(self) -> None:
         self._cache.clear()
         self.cache_hits = self.cache_misses = 0
+
+    # -- online re-calibration ----------------------------------------------
+    def refresh_hardware(self, hw: HardwareModel) -> None:
+        """Swap the hardware model (telemetry re-calibration) and drop
+        every cached decision.  The cache key already carries
+        ``hw.fingerprint()``, so stale entries could never be *served*
+        under the new model — clearing just stops them squatting in the
+        LRU."""
+        self.hw = hw
+        self._cache.clear()
+        self.recalibrations += 1
+
+    def _log_decision(self, decision: PlanDecision, topo_name: str) -> None:
+        self.decision_log.append(
+            {"op": decision.op, "plan": decision.plan,
+             "knobs": dict(decision.knobs), "topo": topo_name,
+             "payload_bytes": decision.payload_bytes,
+             "predicted_s": decision.predicted_s, "measured_s": None})
+        if len(self.decision_log) > self.DECISION_LOG_MAX:
+            del self.decision_log[:-self.DECISION_LOG_MAX]
+
+    def note_measurement(self, decision: PlanDecision,
+                         measured_s: float) -> dict:
+        """Attach a measured execution time to the most recent logged row
+        for this decision (telemetry closes the loop here); appends a
+        fresh row if the decision was served from cache."""
+        for row in reversed(self.decision_log):
+            if (row["op"] == decision.op and row["plan"] == decision.plan
+                    and row["payload_bytes"] == decision.payload_bytes
+                    and row["measured_s"] is None):
+                row["measured_s"] = float(measured_s)
+                return row
+        row = {"op": decision.op, "plan": decision.plan,
+               "knobs": dict(decision.knobs), "topo": None,
+               "payload_bytes": decision.payload_bytes,
+               "predicted_s": decision.predicted_s,
+               "measured_s": float(measured_s)}
+        self.decision_log.append(row)
+        return row
 
     # -- scenario construction ----------------------------------------------
     @staticmethod
@@ -141,7 +187,8 @@ class Planner:
                 topo=topo,
                 num_experts=scenario_kw.get("num_experts", 64),
                 top_k=scenario_kw.get("top_k", 8),
-                token_bytes=scenario_kw.get("token_bytes", 7168))
+                token_bytes=scenario_kw.get("token_bytes", 7168),
+                skew=scenario_kw.get("skew", 0.0))
         raise ValueError(f"unknown collective op {op!r}")
 
     # -- the decision --------------------------------------------------------
@@ -156,7 +203,11 @@ class Planner:
         hw = hw or self.hw
         bucket = bucket_payload(payload_bytes)
         scenario = self._scenario(op, topo, scenario_kw)
-        key = (op, topology_fingerprint(topo), bucket, hw,
+        # the hw FINGERPRINT (not the object) is part of the key: an
+        # in-place ``planner.hw`` swap after recalibration can never
+        # serve a decision scored under the old calibration, and two
+        # value-equal models share entries.
+        key = (op, topology_fingerprint(topo), bucket, hw.fingerprint(),
                executable_only, scenario.cache_key())
         hit = self._cache.get(key)
         if hit is not None:
@@ -166,6 +217,7 @@ class Planner:
         self.cache_misses += 1
         decision = self._sweep(op, scenario, bucket, hw, executable_only)
         self._cache[key] = decision
+        self._log_decision(decision, topo.name)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
         return decision
@@ -232,15 +284,18 @@ def moe_dispatch_decision(*, num_pods: int, ep_per_pod: int,
                           tokens_per_rank: int, token_bytes: int,
                           hw: Optional[HardwareModel] = None,
                           planner: Optional[Planner] = None,
-                          topo: Optional[Topology] = None) -> PlanDecision:
+                          topo: Optional[Topology] = None,
+                          skew: float = 0.0) -> PlanDecision:
     """Plan the MoE dispatch for one EP mesh slice (see
     :func:`_ep_topology` for the fabric the payload is scored on).
-    The payload is the per-rank token traffic of one dispatch."""
+    The payload is the per-rank token traffic of one dispatch.
+    ``skew > 0`` prices hot-expert (non-uniform) routing."""
     planner = planner or default_planner()
     topo = _ep_topology(num_pods, ep_per_pod, topo)
     return planner.choose(
         "dispatch", float(tokens_per_rank) * token_bytes, topo, hw,
-        num_experts=num_experts, top_k=top_k, token_bytes=token_bytes)
+        num_experts=num_experts, top_k=top_k, token_bytes=token_bytes,
+        skew=skew)
 
 
 def moe_combine_decision(*, num_pods: int, ep_per_pod: int,
@@ -248,7 +303,8 @@ def moe_combine_decision(*, num_pods: int, ep_per_pod: int,
                          tokens_per_rank: int, token_bytes: int,
                          hw: Optional[HardwareModel] = None,
                          planner: Optional[Planner] = None,
-                         topo: Optional[Topology] = None) -> PlanDecision:
+                         topo: Optional[Topology] = None,
+                         skew: float = 0.0) -> PlanDecision:
     """Plan the MoE *combine* (return path) for one EP mesh slice —
     independent of the dispatch decision: the return path's redundancy is
     spread over the holders' rails (and may face asymmetric return
@@ -257,7 +313,8 @@ def moe_combine_decision(*, num_pods: int, ep_per_pod: int,
     topo = _ep_topology(num_pods, ep_per_pod, topo)
     return planner.choose(
         "combine", float(tokens_per_rank) * token_bytes, topo, hw,
-        num_experts=num_experts, top_k=top_k, token_bytes=token_bytes)
+        num_experts=num_experts, top_k=top_k, token_bytes=token_bytes,
+        skew=skew)
 
 
 def emergent_crossover_bytes(topo: Topology,

@@ -234,17 +234,27 @@ class DispatchRouting:
 
 def make_routing(num_tokens_per_npu: int, num_npus: int, num_experts: int,
                  top_k: int, seed: int,
-                 experts_per_npu: int | None = None) -> DispatchRouting:
-    """Random balanced top-k routing (paper §6.1: 'expert load balancing is
-    enabled'), experts round-robin across NPUs."""
+                 experts_per_npu: int | None = None,
+                 skew: float = 0.0) -> DispatchRouting:
+    """Random top-k routing, experts round-robin across NPUs.
+
+    ``skew == 0`` is balanced (paper §6.1: 'expert load balancing is
+    enabled').  ``skew > 0`` draws each token's experts from a Zipf-like
+    popularity law p_e ∝ (e+1)^-skew — hot experts concentrate traffic on
+    their owning NPUs (and rails), the imbalanced-MoE regime the planner
+    prices through the scenario's ``skew`` knob."""
     if experts_per_npu is None:
         experts_per_npu = num_experts // num_npus
     assert experts_per_npu * num_npus == num_experts
     rng = np.random.default_rng(seed)
     owners = np.repeat(np.arange(num_npus), num_tokens_per_npu)
+    probs = None
+    if skew > 0.0:
+        w = (np.arange(num_experts) + 1.0) ** -float(skew)
+        probs = w / w.sum()
     dests: list[list[int]] = []
     for _ in owners:
-        experts = rng.choice(num_experts, size=top_k, replace=False)
+        experts = rng.choice(num_experts, size=top_k, replace=False, p=probs)
         npus = sorted(set(int(e) // experts_per_npu for e in experts))
         dests.append(npus)
     return DispatchRouting(owners, dests)
@@ -524,7 +534,7 @@ def _simulate_dispatch(multiwrite: bool):
             top_k = min(top_k, num_experts)
         sim = MultiWriteSimulator(scenario.topo)
         routing = make_routing(probe_batch, n_npus, num_experts, top_k,
-                               seed=scenario.seed)
+                               seed=scenario.seed, skew=scenario.skew)
         fn = dispatch_multiwrite if multiwrite else dispatch_unicast
         fn(sim, routing, plan_ir.PROBE_TOKEN_BYTES)
         from .latency_model import RELAY_SETUP_S
@@ -581,7 +591,7 @@ def _simulate_combine(multiwrite: bool):
             top_k = min(top_k, num_experts)
         sim = MultiWriteSimulator(scenario.topo)
         routing = make_routing(probe_batch, n_npus, num_experts, top_k,
-                               seed=scenario.seed)
+                               seed=scenario.seed, skew=scenario.skew)
         fn = combine_multiwrite if multiwrite else combine_unicast
         fn(sim, routing, plan_ir.PROBE_TOKEN_BYTES)
         from .latency_model import RELAY_SETUP_S

@@ -232,12 +232,20 @@ DEFAULT_REPORT_FABRICS = ("2x8", "4x8", "2x8r2")
 
 
 def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
-                        fabrics=DEFAULT_REPORT_FABRICS) -> dict:
+                        fabrics=DEFAULT_REPORT_FABRICS,
+                        calibration=None) -> dict:
     """Which plan the latency-model planner picks for this cell, and the
     predicted delta vs the baseline plan (the quantity the dry-run table
     reports next to the roofline terms).  ``fabrics`` adds a what-if axis:
-    the same cell's dispatch+combine decisions on each named fabric."""
+    the same cell's dispatch+combine decisions on each named fabric.
+    ``calibration`` (a telemetry store or path) adds a second what-if
+    axis: the same decisions under the store's FITTED hardware model —
+    'what would the planner do on the fabric we actually measured'."""
     from repro.core import planner as pl
+    cal_store = None
+    if calibration is not None:
+        from repro.telemetry import resolve_store
+        cal_store = resolve_store(calibration)
     cfg = get_config(arch)
     out = {"policy": pctx.plan_policy}
     tokens = shape.global_batch * (shape.seq_len
@@ -286,7 +294,29 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
                 "combine", n_local * cfg.d_model * 2, ftopo,
                 num_experts=cfg.num_experts, top_k=cfg.top_k,
                 token_bytes=cfg.d_model * 2).report()
+        # calibration what-if: the same fabric cell under the measured
+        # (fitted) hardware model from the --calibration store
+        if cal_store is not None:
+            from repro.telemetry import calibrated_hw
+            hw_cal = calibrated_hw(cal_store, ftopo)
+            cal = {"fitted": bool(hw_cal.link_bw),
+                   "allgather": pl.default_planner().choose(
+                       "allgather", frag, ftopo, hw_cal).report()}
+            if cfg.is_moe:
+                cal["dispatch"] = pl.default_planner().choose(
+                    "dispatch", n_local * cfg.d_model * 2, ftopo, hw_cal,
+                    num_experts=cfg.num_experts, top_k=cfg.top_k,
+                    token_bytes=cfg.d_model * 2).report()
+                cal["combine"] = pl.default_planner().choose(
+                    "combine", n_local * cfg.d_model * 2, ftopo, hw_cal,
+                    num_experts=cfg.num_experts, top_k=cfg.top_k,
+                    token_bytes=cfg.d_model * 2).report()
+            cell["calibrated"] = cal
         out["fabrics"][fname] = cell
+    if cal_store is not None:
+        out["calibration_store"] = {"path": cal_store.path,
+                                    "records": len(cal_store),
+                                    "fabrics": cal_store.fabrics()}
     return out
 
 
@@ -301,7 +331,7 @@ def _cell_pctx(shape: ShapeSpec, multi_pod: bool, variant: str):
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              variant: str = "mw", verbose: bool = True,
-             fabrics=DEFAULT_REPORT_FABRICS) -> dict:
+             fabrics=DEFAULT_REPORT_FABRICS, calibration=None) -> dict:
     skip = cell_is_skipped(arch, shape_name)
     if skip:
         return {"arch": arch, "shape": shape_name,
@@ -377,7 +407,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "by_kind": coll.bytes_by_kind,
             "num_ops": coll.num_ops,
         },
-        "planner": planner_cell_report(arch, shape, pctx, fabrics=fabrics),
+        "planner": planner_cell_report(arch, shape, pctx, fabrics=fabrics,
+                                       calibration=calibration),
         "roofline": {
             "compute_term_s": compute_term,
             "memory_term_s": memory_term,
@@ -430,25 +461,31 @@ def cell_path(arch, shape_name, multi_pod, variant):
 
 
 def run_and_save(arch, shape_name, multi_pod, variant="mw",
-                 force=False, fabrics=DEFAULT_REPORT_FABRICS) -> dict:
+                 force=False, fabrics=DEFAULT_REPORT_FABRICS,
+                 calibration=None) -> dict:
     path = cell_path(arch, shape_name, multi_pod, variant)
     if os.path.exists(path) and not force:
         with open(path) as f:
             result = json.load(f)
         # the compiled cell is fabric-independent, but the planner
-        # what-if axis is not: refresh it (cheap — no recompile) when the
-        # cached cell was computed with a different fabric set
+        # what-if axes are not: refresh them (cheap — no recompile) when
+        # the cached cell was computed with a different fabric set, or
+        # when a calibration store is in play (its fits move with every
+        # probe run)
         cached = set(result.get("planner", {}).get("fabrics", {}))
-        if ("planner" in result and cached != set(fabrics or ())):
+        if "planner" in result and (cached != set(fabrics or ())
+                                    or calibration is not None):
             pctx = _cell_pctx(SHAPES[shape_name], multi_pod, variant)
             result["planner"] = planner_cell_report(
-                arch, SHAPES[shape_name], pctx, fabrics=fabrics)
+                arch, SHAPES[shape_name], pctx, fabrics=fabrics,
+                calibration=calibration)
             with open(path, "w") as f:
                 json.dump(result, f, indent=1)
         return result
     try:
         result = run_cell(arch, shape_name, multi_pod=multi_pod,
-                          variant=variant, fabrics=fabrics)
+                          variant=variant, fabrics=fabrics,
+                          calibration=calibration)
     except Exception as e:  # record failures — they are bugs to fix
         result = {"arch": arch, "shape": shape_name,
                   "mesh": "multi" if multi_pod else "single",
@@ -471,6 +508,11 @@ def main(argv=None):
                     help="comma list of fabrics (registered names or "
                          "parseable specs like 4x8, 2x8r2@12.5) for the "
                          "per-cell planner what-if axis; '' disables")
+    ap.add_argument("--calibration", default=None,
+                    help="telemetry calibration store (JSONL path): every "
+                         "cell's planner section additionally reports the "
+                         "decisions under the store's FITTED hardware "
+                         "model — the measured-fabric what-if axis")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape x mesh) cell")
     ap.add_argument("--force", action="store_true")
@@ -493,7 +535,7 @@ def main(argv=None):
     failures = 0
     for arch, shape, mp, variant in cells:
         r = run_and_save(arch, shape, mp, variant, force=args.force,
-                         fabrics=fabrics)
+                         fabrics=fabrics, calibration=args.calibration)
         if "error" in r:
             failures += 1
     print(f"\n{len(cells) - failures}/{len(cells)} cells OK")

@@ -31,6 +31,16 @@ def main(argv=None):
                     help="fabric the planner scores against: a registered "
                          "name (2x8, 4x8, 2x8r2, 2x8asym) or an inline "
                          "spec 'SxP[rR][@INTER[:INTRA]]' in GB/s")
+    ap.add_argument("--calibrate", choices=["off", "startup"],
+                    default="off",
+                    help="telemetry: probe sweep + fit before serving so "
+                         "planner decisions are scored under measured "
+                         "link bandwidths; plan_report then carries the "
+                         "predicted-vs-measured drift and the last "
+                         "re-calibration")
+    ap.add_argument("--calibration-store", default=None,
+                    help="calibration JSONL path (default "
+                         "results/calibration/calibration.jsonl)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -56,13 +66,40 @@ def main(argv=None):
         else:
             print(f"({len(jax.devices())} device(s), production mesh "
                   f"needs {need}: serving without a ParallelContext)")
+    # resolve --fabric into the context BEFORE telemetry: probe records
+    # and trace-time planner lookups must share ONE fabric fingerprint
+    # (a monitor keyed to the mesh-derived topology would store records
+    # the --fabric decisions never find)
+    if pctx is not None and args.fabric:
+        import dataclasses
+
+        from repro.core.topology import get_fabric
+        pctx = dataclasses.replace(pctx, fabric=get_fabric(args.fabric))
+    monitor = None
+    store = None
+    if args.calibrate != "off":
+        from repro.core.planner import _ep_topology
+        from repro.core.topology import get_fabric
+        from repro.telemetry import startup_calibration
+        if pctx is not None:
+            topo = _ep_topology(pctx.num_pods, pctx.data_size, pctx.fabric)
+        else:
+            topo = get_fabric(args.fabric or "2x8")
+        # simulated probe (the default) stands in when there is no
+        # fabric to time (CPU smoke); live deployments pass a LiveProbe
+        store, monitor, event = startup_calibration(
+            topo, args.calibration_store)
+        print(f"calibration: {len(store)} records, "
+              f"recalibrated={bool(event)}"
+              + (f", drift at fit {100 * event['drift']:.1f}%"
+                 if event else ""))
     model = build_model(cfg, pctx, dtype=jnp.float32 if args.smoke
                         else jnp.bfloat16)
     params = model.init(jax.random.key(args.seed))
     engine = ServeEngine(model, params,
                          ServeConfig(max_new_tokens=args.max_new,
                                      temperature=args.temperature),
-                         pctx=pctx, fabric=args.fabric)
+                         pctx=pctx, calibration=store, monitor=monitor)
     prompts = np.random.default_rng(args.seed).integers(
         0, cfg.vocab, size=(args.prompts, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, seed=args.seed)
@@ -70,6 +107,14 @@ def main(argv=None):
           f"prefill {engine.stats['prefill_s']*1e3:.0f}ms, "
           f"decode {engine.stats['decode_s']*1e3:.0f}ms")
     for phase, per_op in engine.stats.get("plans", {}).items():
+        if phase == "calibration":
+            last = per_op.get("last_recalibration")
+            print(f"calibration: drift {per_op['drift_pct']:.1f}% over "
+                  f"{per_op['observations']} probe(s), "
+                  f"{per_op['recalibrations']} recalibration(s)"
+                  + (f", last refit {last['measured_links']} links"
+                     if last else ""))
+            continue
         for op, rep in per_op.items():
             if not rep:
                 continue

@@ -47,6 +47,22 @@ def main(argv=None):
                          "'SxP[rR][@INTER[:INTRA]]' in GB/s, e.g. "
                          "'4x8@12.5'.  Changes WHICH dispatch/combine "
                          "plans win; execution stays on the actual mesh")
+    ap.add_argument("--calibrate", choices=["off", "startup", "online"],
+                    default="off",
+                    help="telemetry loop: 'startup' runs a probe sweep + "
+                         "fit before step 0 so planner decisions are "
+                         "scored under MEASURED link bandwidths; 'online' "
+                         "additionally re-probes every --calibrate-every "
+                         "steps and re-fits when predicted-vs-measured "
+                         "drift exceeds the monitor threshold (decisions "
+                         "flip at runtime, no restart)")
+    ap.add_argument("--calibrate-every", type=int, default=25,
+                    help="online probe cadence in steps")
+    ap.add_argument("--calibration-store", default=None,
+                    help="calibration JSONL path (default "
+                         "results/calibration/calibration.jsonl); "
+                         "measurements persist across runs per fabric "
+                         "fingerprint")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -113,6 +129,31 @@ def main(argv=None):
                              pctx.moe_scheme,
                              pctx.moe_combine or pctx.moe_scheme)
 
+    monitor = None
+    probe = None
+    if args.calibrate != "off":
+        import dataclasses
+
+        from repro.core.planner import _ep_topology
+        from repro.core.topology import get_fabric
+        from repro.telemetry import (GroundTruth, SimProbe,
+                                     startup_calibration)
+        if pctx is not None:
+            topo = _ep_topology(pctx.num_pods, pctx.data_size, pctx.fabric)
+        else:
+            topo = get_fabric(args.fabric or "2x8")
+        # Execution backend: the simulated probe (injectable ground
+        # truth) stands in wherever there is no real fabric to time —
+        # deployments on a live mesh swap in telemetry.LiveProbe.
+        probe = SimProbe(GroundTruth())
+        store, monitor, event = startup_calibration(
+            topo, args.calibration_store, probe=probe)
+        logging.info("calibration startup: %d store records, drift at fit "
+                     "%.1f%%, recalibrated=%s", len(store),
+                     100 * (event["drift"] if event else 0.0), bool(event))
+        if pctx is not None:
+            pctx = dataclasses.replace(pctx, calibration=store)
+
     model = build_model(cfg, pctx,
                         dtype=jnp.float32 if args.smoke else jnp.bfloat16)
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
@@ -123,13 +164,33 @@ def main(argv=None):
     tcfg = TrainerConfig(total_steps=args.steps,
                          checkpoint_every=args.ckpt_every,
                          checkpoint_dir=args.ckpt_dir, log_every=10)
+
+    step_hook = None
+    if args.calibrate == "online":
+        def step_hook(step, row, _every=max(1, args.calibrate_every)):
+            if step == 0 or step % _every:
+                return
+            event = monitor.run_cycle(probe)
+            if event:
+                logging.info(
+                    "step %d: drift %.1f%% exceeded %.0f%% — recalibrated "
+                    "(%d links refit); planner cache invalidated",
+                    step, 100 * event["drift"],
+                    100 * monitor.threshold, event["measured_links"])
+
     trainer = Trainer(model, opt,
                       lambda s: batch_for_model(cfg, data.batch(s)),
-                      tcfg, init_rng=jax.random.key(args.seed))
+                      tcfg, init_rng=jax.random.key(args.seed),
+                      step_hook=step_hook)
     hist = trainer.run()
     if hist:
         print(f"final loss {hist[-1]['loss']:.4f} over {len(hist)} steps; "
               f"straggler events: {len(trainer.ledger.events)}")
+    if monitor is not None:
+        rep = monitor.report()
+        print(f"calibration: {rep['recalibrations']} recalibration(s), "
+              f"drift {rep['drift_pct']:.1f}%, "
+              f"{rep['store_records']} store records")
     return 0
 
 

@@ -303,6 +303,10 @@ def split_tp_allgather(x, pctx, *, axis_name: Optional[str] = None):
     nd = pctx.tp_subgroups
     if nd <= 1:
         return cl.allgather_reference(x, axis, num_domains=1)
+    if nd != 2:
+        # paired relaying (and the registered §3.1 plans) are defined on
+        # 2 domains; more domains gather plainly within each domain
+        return cl.allgather_reference(x, axis, num_domains=nd)
     if pctx.plan_policy == "auto":
         return cl.planned_allgather(x, axis, num_domains=nd)
     return cl.multiwrite_allgather(

@@ -166,7 +166,57 @@ def _ffn_part(lp, x, cfg, pctx):
     return out, aux
 
 
+def _split_tp_seq_gather(x, pctx: Optional[ParallelContext]):
+    """SP -> TP boundary gather through the §3.1 split-TP AllGather.
+
+    With sequence parallelism the residual enters the block S-sharded
+    over the model axis; attention needs the full sequence back.  When
+    the model axis is divided into ``tp_subgroups`` domains, that gather
+    decomposes hierarchically: each domain reassembles its own sequence
+    span via :func:`repro.models.layers.split_tp_allgather` — the
+    planner-routed lowering whose multiwrite plans exploit the
+    otherwise-idle cross-domain links — then ONE cross-domain gather of
+    the domain-assembled chunks completes the sequence.  Bit-identical
+    to the implicit single-stage GSPMD gather it replaces (the multidev
+    suite pins transformer forward equality against ``tp_subgroups=1``).
+
+    No-op (GSPMD keeps gathering implicitly) when there are no split-TP
+    domains or the shapes don't tile the mesh.
+    """
+    if pctx is None or pctx.tp_subgroups <= 1 or not pctx.seq_parallel:
+        return x
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import layers as L
+    from repro.parallel.compat import shard_map
+
+    m = pctx.model_size
+    nd = pctx.tp_subgroups
+    b, s, d = x.shape
+    dp = pctx.num_pods * pctx.data_size
+    if m % nd or s % m or b % dp:
+        return x
+    h = m // nd                      # chips per TP domain
+    axis = pctx.model_axis
+
+    def gather(xl):                  # xl: [B/dp, S/m, D]
+        frag = L.split_tp_allgather(xl, pctx)          # [h, B/dp, S/m, D]
+        dom = jnp.moveaxis(frag, 0, 1).reshape(
+            xl.shape[0], h * xl.shape[1], d)           # this domain's span
+        groups = [[dd * h + i for dd in range(nd)] for i in range(h)]
+        allg = lax.all_gather(dom, axis, axis_index_groups=groups)
+        return jnp.moveaxis(allg, 0, 1).reshape(xl.shape[0], s, d)
+
+    return shard_map(
+        gather, mesh=pctx.mesh,
+        in_specs=P(pctx.dp_axes, pctx.model_axis, None),
+        out_specs=P(pctx.dp_axes, None, None),
+        check_vma=False)(x)
+
+
 def _dense_block(lp, x, positions, cfg, pctx, *, window):
+    x = _split_tp_seq_gather(x, pctx)
     a = _attn_part(lp, x, positions, cfg, pctx, window=window)
     x = x + a
     f, aux = _ffn_part(lp, x, cfg, pctx)

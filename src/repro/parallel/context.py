@@ -44,6 +44,12 @@ class ParallelContext:
     #   planner scores against (--fabric CLI); None = derived from the mesh
     #   shape (pod == server).  Only changes WHICH plan wins — execution
     #   stays on the actual mesh.
+    calibration: Optional[object] = None  # telemetry CalibrationStore (or
+    #   path) of measured collective timings: planner decisions are scored
+    #   under the store's FITTED hardware model for the active fabric
+    #   instead of datasheet constants (--calibrate CLI surface).
+    moe_skew: float = 0.0             # hot-expert routing skew the planner
+    #   prices dispatch/combine under (0 = balanced routing, paper §6.1)
     tp_subgroups: int = 1             # §3.1 split-TP domains on model axis
     remat: str = "full"               # none | selective | full
     seq_shard_decode: bool = True     # shard decode KV length over model
@@ -83,6 +89,21 @@ class ParallelContext:
         return False, self.data_size
 
     # -- planner consumption -------------------------------------------------
+    def _plan_topo_hw(self, num_experts: int):
+        """(topology, hardware model) the EP planner ops score against:
+        the explicit ``fabric`` (or the mesh-derived shape), and — when a
+        ``calibration`` store is wired — the store's fitted model for
+        that fabric instead of the datasheet DEFAULT."""
+        from repro.core.planner import _ep_topology
+        use_pod, _ = self.ep_ranks(num_experts)
+        topo = _ep_topology(self.num_pods if use_pod else 1,
+                            self.data_size, self.fabric)
+        hw = None
+        if self.calibration is not None:
+            from repro.telemetry import calibrated_hw, resolve_store
+            hw = calibrated_hw(resolve_store(self.calibration), topo)
+        return topo, hw
+
     def moe_dispatch_plan(self, num_experts: int, top_k: int,
                           tokens_per_rank: int, token_bytes: int):
         """Planner decision for an MoE dispatch on this mesh (or on the
@@ -93,12 +114,13 @@ class ParallelContext:
             return None
         from repro.core.planner import moe_dispatch_decision
         use_pod, _ = self.ep_ranks(num_experts)
+        topo, hw = self._plan_topo_hw(num_experts)
         return moe_dispatch_decision(
             num_pods=self.num_pods if use_pod else 1,
             ep_per_pod=self.data_size,
             num_experts=num_experts, top_k=top_k,
             tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
-            topo=self.fabric)
+            topo=topo, hw=hw, skew=self.moe_skew)
 
     def moe_combine_plan(self, num_experts: int, top_k: int,
                          tokens_per_rank: int, token_bytes: int):
@@ -110,12 +132,13 @@ class ParallelContext:
             return None
         from repro.core.planner import moe_combine_decision
         use_pod, _ = self.ep_ranks(num_experts)
+        topo, hw = self._plan_topo_hw(num_experts)
         return moe_combine_decision(
             num_pods=self.num_pods if use_pod else 1,
             ep_per_pod=self.data_size,
             num_experts=num_experts, top_k=top_k,
             tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
-            topo=self.fabric)
+            topo=topo, hw=hw, skew=self.moe_skew)
 
     def resolve_moe_scheme(self, num_experts: int, top_k: int,
                            tokens_per_rank: int, token_bytes: int) -> str:

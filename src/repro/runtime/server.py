@@ -28,20 +28,31 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, model, params, cfg: ServeConfig = ServeConfig(),
-                 pctx=None, fabric=None):
+                 pctx=None, fabric=None, calibration=None, monitor=None):
         """``fabric``: optional fabric spec/name (see
         ``core.topology.get_fabric``) the planner scores against instead
-        of the mesh-derived shape — the serving side of ``--fabric``."""
+        of the mesh-derived shape — the serving side of ``--fabric``.
+        ``calibration``: optional telemetry CalibrationStore (or path):
+        planner decisions are scored under the store's fitted hardware
+        model.  ``monitor``: optional telemetry DriftMonitor whose
+        predicted-vs-measured state ``plan_report`` surfaces."""
         self.model = model
         self.params = params
         self.cfg = cfg
-        if fabric is not None and pctx is not None:
+        if pctx is not None and (fabric is not None
+                                 or calibration is not None):
             import dataclasses as _dc
 
             from repro.core.topology import get_fabric
-            pctx = _dc.replace(pctx, fabric=get_fabric(fabric)
-                               if isinstance(fabric, str) else fabric)
+            repl = {}
+            if fabric is not None:
+                repl["fabric"] = (get_fabric(fabric)
+                                  if isinstance(fabric, str) else fabric)
+            if calibration is not None:
+                repl["calibration"] = calibration
+            pctx = _dc.replace(pctx, **repl)
         self.pctx = pctx
+        self.monitor = monitor
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
@@ -56,10 +67,14 @@ class ServeEngine:
         prefill crosses to MultiWrite; on asymmetric fabrics the two
         directions can flip at different batches."""
         mcfg = self.model.cfg
-        if self.pctx is None or not getattr(mcfg, "is_moe", False):
-            return {}
-        dp = self.pctx.num_pods * self.pctx.data_size
         out = {}
+        if self.monitor is not None:
+            # predicted-vs-measured error + last re-calibration, from the
+            # telemetry drift monitor (the serving face of the loop)
+            out["calibration"] = self.monitor.report()
+        if self.pctx is None or not getattr(mcfg, "is_moe", False):
+            return out
+        dp = self.pctx.num_pods * self.pctx.data_size
         for phase, n_tokens in (("prefill", batch * prompt_len),
                                 ("decode", batch)):
             kw = dict(tokens_per_rank=max(1, n_tokens // dp),

@@ -155,6 +155,7 @@ class Trainer:
                  cfg: TrainerConfig, *, init_rng=None,
                  fault_hook: Optional[Callable[[int], None]] = None,
                  straggler_hook: Optional[Callable[[int, float], None]] = None,
+                 step_hook: Optional[Callable[[int, dict], None]] = None,
                  train_step=None):
         self.model = model
         self.optimizer = optimizer
@@ -162,6 +163,10 @@ class Trainer:
         self.cfg = cfg
         self.fault_hook = fault_hook
         self.straggler_hook = straggler_hook
+        # called after every completed step with (step, metrics row) —
+        # the online-calibration monitor rides here (launch/train.py
+        # --calibrate online)
+        self.step_hook = step_hook
         self.ledger = StragglerLedger()
         self.ckpt = (CheckpointManager(cfg.checkpoint_dir,
                                        keep_last_k=cfg.keep_last_k)
@@ -229,6 +234,8 @@ class Trainer:
             row = {"step": step, "wall": dt,
                    **{k: float(v) for k, v in metrics.items()}}
             self.metrics_history.append(row)
+            if self.step_hook:
+                self.step_hook(step, row)
             if step % self.cfg.log_every == 0:
                 log.info("step %d loss %.4f (%.0f ms)", step,
                          row.get("loss", float("nan")), dt * 1e3)

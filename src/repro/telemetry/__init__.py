@@ -1,0 +1,35 @@
+"""Telemetry & online calibration: measured collectives close the
+planner's feedback loop.
+
+    probe.py    timed execution of registered plans — live mesh or a
+                pure-simulation backend with injectable ground truth
+    store.py    append-only JSONL CalibrationStore (schema-versioned,
+                keyed by fabric fingerprint / op / payload bucket)
+    fit.py      per-link-class alpha/beta regression -> the measurements
+                dict HardwareModel.recalibrated accepts
+    monitor.py  drift watchdog: predicted-vs-measured divergence
+                triggers re-fit + planner.refresh_hardware (LRU cache
+                invalidated — decisions flip at runtime)
+
+Consumed by: ParallelContext(calibration=...), train.py/serve.py
+--calibrate, dryrun --calibration, ServeEngine.plan_report and
+benchmarks bench_calibration.
+"""
+
+from .fit import (FitResult, calibrated_hw, fit_link_class,
+                  fit_link_classes, fit_measurements)
+from .monitor import DriftMonitor, startup_calibration
+from .probe import (GroundTruth, LiveProbe, SimProbe, default_payloads,
+                    ledger_class_bytes, link_class, probe_record,
+                    probe_sweep)
+from .store import (SCHEMA_VERSION, CalibrationStore, resolve_store,
+                    topo_key)
+
+__all__ = [
+    "CalibrationStore", "DriftMonitor", "FitResult", "GroundTruth",
+    "LiveProbe", "SCHEMA_VERSION", "SimProbe", "calibrated_hw",
+    "default_payloads", "fit_link_class", "fit_link_classes",
+    "fit_measurements", "ledger_class_bytes", "link_class",
+    "probe_record", "probe_sweep", "resolve_store", "startup_calibration",
+    "topo_key",
+]

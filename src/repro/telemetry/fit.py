@@ -1,0 +1,222 @@
+"""Per-link-class alpha/beta regression over probe sweeps (the FIT).
+
+Each probe record carries the per-class bottleneck bytes of the plan it
+timed (``class_bytes``).  For a link class ``c`` (``intra`` = in-server
+full mesh, ``inter`` = rails) the latency model predicts
+
+    t  =  alpha  +  x_c / bw_c  (+ small relay/engine terms)
+
+for every record whose class-``c`` bytes dominate, so an ordinary
+least-squares fit of measured time against ``x_c`` over the payload
+sweep recovers ``1/bw_c`` as the slope and the startup alpha as the
+intercept — the paper's "measured bandwidth of both link types" (§5.2)
+obtained from the live system rather than a datasheet.
+
+The fit is guarded: iterative outlier rejection (relative-residual
+trim) and a confidence floor (point count, distinct payloads, R²,
+positive slope) — an untrusted class contributes nothing, so a noisy or
+short sweep degrades to "keep the nominal model" instead of poisoning
+the planner.
+
+:func:`fit_measurements` emits exactly the ``measurements`` mapping
+``HardwareModel.recalibrated`` accepts: per-link bandwidth overrides for
+every link of each trusted class, plus ``alpha_base`` when a relay-free
+sweep pinned it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.latency_model import DEFAULT, HardwareModel
+from repro.core.plan import BASELINE_PLAN
+from repro.core.topology import Topology
+
+from .probe import link_class
+from .store import CalibrationStore, topo_key
+
+LINK_CLASSES = ("intra", "inter")
+
+# confidence floor defaults: a fit below any of these is not trusted
+MIN_POINTS = 3
+MIN_DISTINCT_PAYLOADS = 3
+R2_FLOOR = 0.9
+REL_OUTLIER = 0.35          # relative residual above this is rejected
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    """One link class's fitted alpha/beta line."""
+
+    link_class: str
+    bw: float                  # bytes/s (1 / slope)
+    alpha_s: float             # intercept
+    n_used: int
+    n_total: int
+    n_rejected: int
+    r2: float
+    trusted: bool
+    reason: str = ""           # why not trusted (empty when trusted)
+    alpha_clean: bool = False  # intercept from relay-free single-stage
+    #                            records only (safe to map to alpha_base)
+
+    def report(self) -> dict:
+        return {"class": self.link_class, "bw_gbps": self.bw / 1e9,
+                "alpha_us": self.alpha_s * 1e6, "n_used": self.n_used,
+                "n_rejected": self.n_rejected, "r2": round(self.r2, 4),
+                "trusted": self.trusted, "reason": self.reason}
+
+
+def _least_squares(x: np.ndarray, y: np.ndarray) -> tuple[float, float, float]:
+    """(slope, intercept, r2) of y ~ slope*x + intercept."""
+    slope, intercept = np.polyfit(x, y, 1)
+    pred = slope * x + intercept
+    ss_res = float(np.sum((y - pred) ** 2))
+    ss_tot = float(np.sum((y - np.mean(y)) ** 2))
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 0.0
+    return float(slope), float(intercept), r2
+
+
+def _dominant_class(rec: dict) -> str:
+    """The link class whose serialization dominates this record — the
+    stored bottleneck class (computed against nominal bandwidths at
+    probe time)."""
+    return rec.get("bottleneck_class", "intra")
+
+
+def is_fit_record(rec: dict) -> bool:
+    """Only each op's BASELINE plan feeds the regression: baselines are
+    pure-serialization probes (t = alpha + bytes/bw, at most a small
+    store-and-forward term), while the multiwrite plans add their own
+    payload-linear relay/engine terms — points from different plans
+    would fall on different lines and collapse the fit.  The fitted
+    bandwidths then score EVERY plan through the shared latency model."""
+    return rec.get("plan") == BASELINE_PLAN.get(rec.get("op"))
+
+
+def fit_link_class(records: Sequence[dict], cls: str, *,
+                   min_points: int = MIN_POINTS,
+                   min_payloads: int = MIN_DISTINCT_PAYLOADS,
+                   r2_floor: float = R2_FLOOR,
+                   rel_outlier: float = REL_OUTLIER) -> Optional[FitResult]:
+    """LS fit of one link class over the records that bottleneck on it.
+    Returns None when no record regresses against this class at all."""
+    xs, ys, clean = [], [], []
+    for r in records:
+        if _dominant_class(r) != cls:
+            continue
+        x = float(r.get("class_bytes", {}).get(cls, 0.0))
+        if x <= 0:
+            continue
+        xs.append(x)
+        ys.append(float(r["measured_s"]))
+        clean.append(not r.get("relayed", True)
+                     and int(r.get("stages", 1)) == 1)
+    if not xs:
+        return None
+    x = np.asarray(xs)
+    y = np.asarray(ys)
+    n_total = len(xs)
+
+    def untrusted(reason, slope=0.0, intercept=0.0, r2=0.0, used=0, rej=0):
+        bw = 1.0 / slope if slope > 0 else 0.0
+        return FitResult(cls, bw, intercept, used, n_total, rej, r2,
+                         trusted=False, reason=reason)
+
+    if n_total < 2:
+        return untrusted(f"{n_total} point(s): cannot regress", used=n_total)
+    slope, intercept, r2 = _least_squares(x, y)
+    keep = np.ones(n_total, bool)
+    if slope > 0:
+        rel = np.abs(y - (slope * x + intercept)) / np.maximum(y, 1e-12)
+        keep = rel <= rel_outlier
+        if keep.sum() >= 2 and keep.sum() < n_total:
+            slope, intercept, r2 = _least_squares(x[keep], y[keep])
+    n_used = int(keep.sum())
+    n_rej = n_total - n_used
+    if slope <= 0:
+        return untrusted("non-positive slope (bw unidentifiable)",
+                         slope, intercept, r2, n_used, n_rej)
+    if n_used < min_points:
+        return untrusted(f"{n_used} < {min_points} points after rejection",
+                         slope, intercept, r2, n_used, n_rej)
+    if len(np.unique(x[keep])) < min_payloads:
+        return untrusted("payload sweep too narrow",
+                         slope, intercept, r2, n_used, n_rej)
+    if r2 < r2_floor:
+        return untrusted(f"r2 {r2:.3f} < floor {r2_floor}",
+                         slope, intercept, r2, n_used, n_rej)
+    alpha_clean = all(c for c, k in zip(clean, keep) if k)
+    return FitResult(cls, 1.0 / slope, max(0.0, intercept), n_used, n_total,
+                     n_rej, r2, trusted=True, alpha_clean=alpha_clean)
+
+
+def fit_link_classes(records: Sequence[dict], *,
+                     classes: Sequence[str] = LINK_CLASSES,
+                     baseline_only: bool = True,
+                     **floor_kw) -> dict[str, FitResult]:
+    if baseline_only:
+        records = [r for r in records if is_fit_record(r)]
+    out = {}
+    for cls in classes:
+        fit = fit_link_class(records, cls, **floor_kw)
+        if fit is not None:
+            out[cls] = fit
+    return out
+
+
+def fit_measurements(records: Sequence[dict], topo: Topology,
+                     **floor_kw) -> tuple[dict, dict[str, FitResult]]:
+    """(measurements, fits): the ``measurements`` dict feeds
+    ``HardwareModel.recalibrated`` directly — per-link bandwidths for
+    every link of each TRUSTED class, plus ``alpha_base`` when a
+    relay-free sweep pinned the intercept.  Empty dict = nothing
+    trustworthy, keep the current model."""
+    fits = fit_link_classes(records, **floor_kw)
+    links = {}
+    measurements: dict = {}
+    for cls, fit in fits.items():
+        if not fit.trusted:
+            continue
+        for key in topo.links:
+            if link_class(topo, *key) == cls:
+                links[key] = fit.bw
+        if cls == "intra" and fit.alpha_clean and fit.alpha_s > 0:
+            measurements["alpha_base"] = fit.alpha_s
+    if links:
+        measurements["links"] = links
+    elif "alpha_base" not in measurements:
+        measurements = {}
+    return measurements, fits
+
+
+# ---------------------------------------------------------------------------
+# store -> HardwareModel (memoized — the ParallelContext / dryrun surface)
+# ---------------------------------------------------------------------------
+
+_HW_CACHE: dict[tuple, HardwareModel] = {}
+
+
+def calibrated_hw(store: CalibrationStore, topo: Topology,
+                  base: HardwareModel = DEFAULT) -> HardwareModel:
+    """The hardware model the store's measurements imply for ``topo``:
+    ``base`` recalibrated with the fitted per-class bandwidths, or
+    ``base`` unchanged when the store has nothing trustworthy for this
+    fabric.  Fits use the LATEST record per (op, plan, payload bucket),
+    so re-probed buckets supersede stale history.  Memoized on (store
+    instance + revision, fabric, base) — distinct ':memory:' stores
+    never alias."""
+    key = (store.version(), topo.fingerprint(), base.fingerprint())
+    hit = _HW_CACHE.get(key)
+    if hit is not None:
+        return hit
+    records = list(store.latest_by_key(fabric=topo_key(topo)).values())
+    measurements, _ = fit_measurements(records, topo)
+    hw = base.recalibrated(measurements, topo) if measurements else base
+    if len(_HW_CACHE) > 64:
+        _HW_CACHE.clear()
+    _HW_CACHE[key] = hw
+    return hw

@@ -1,0 +1,207 @@
+"""Drift watchdog: predicted-vs-measured divergence drives re-fits.
+
+The MONITOR closes the telemetry loop at runtime:
+
+    probe (timed plans)  ->  store (JSONL)  ->  drift check
+                                                    │ > threshold
+                                                    ▼
+    planner.refresh_hardware(hw')  <-  HardwareModel.recalibrated
+         (LRU cache invalidated,          ▲
+          decisions genuinely flip)       └─ fit (per-class alpha/beta)
+
+Drift is the per-op MEDIAN relative error between the latency model's
+predicted ledger times and the measured times, maximized over ops — a
+degraded rail shows up even while the (unaffected) intra-server
+AllGather keeps predicting perfectly.  When the worst op's divergence
+exceeds ``threshold``, the monitor re-fits the store's latest records,
+folds the fitted bandwidths into a fresh :class:`HardwareModel`, and
+swaps it into the planner — whose cache invalidation makes the next
+``choose`` re-sweep, so dispatch/combine decisions flip WITHOUT process
+restart (the closed-loop acceptance property of tests/test_telemetry.py).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+from repro.core.latency_model import HardwareModel
+from repro.core.planner import Planner
+from repro.core.topology import Topology
+
+from .fit import fit_measurements
+from .probe import DEFAULT_OPS, probe_sweep
+from .store import CalibrationStore, topo_key
+
+
+class DriftMonitor:
+    """Watches predicted-vs-measured error; re-fits + recalibrates the
+    planner when it diverges.
+
+    ``threshold`` is the relative-error trip point (0.25 = re-fit once
+    the worst op's median divergence passes 25%); ``window`` bounds the
+    per-op observation deques; ``cooldown`` is the minimum number of
+    ``check`` calls between recalibrations (a re-fit needs fresh probes
+    to judge itself against before it may fire again).
+    """
+
+    def __init__(self, planner: Planner, store: CalibrationStore,
+                 topo: Topology, *, threshold: float = 0.25,
+                 window: int = 32, min_observations: int = 3,
+                 cooldown: int = 1,
+                 base_hw: Optional[HardwareModel] = None) -> None:
+        self.planner = planner
+        self.store = store
+        self.topo = topo
+        self.threshold = float(threshold)
+        self.window = int(window)
+        self.min_observations = int(min_observations)
+        self.cooldown = int(cooldown)
+        # fits always start from the pristine base so repeated
+        # recalibrations replace (never compound) earlier overrides
+        self.base_hw = base_hw or planner.hw
+        self._errs: dict[str, deque] = {}
+        self.events: list[dict] = []
+        self.checks = 0
+        self._last_recal_check = -10 ** 9
+
+    # -- observations --------------------------------------------------------
+    def observe(self, record: dict) -> None:
+        """Feed one probe record's (predicted, measured) pair."""
+        p = float(record["predicted_s"])
+        m = float(record["measured_s"])
+        if p <= 0:
+            return
+        dq = self._errs.setdefault(
+            record.get("op", "?"), deque(maxlen=self.window))
+        dq.append(abs(m - p) / p)
+        # close the planner's audit trail: if this probe timed the plan
+        # of a logged (still-unmeasured) decision at the same payload
+        # bucket, fill its measured side
+        for row in reversed(self.planner.decision_log):
+            if (row["op"] == record.get("op")
+                    and row["plan"] == record.get("plan")
+                    and row["payload_bytes"] == record.get("bucket")
+                    and row["measured_s"] is None):
+                row["measured_s"] = m
+                break
+
+    @staticmethod
+    def _median(vals: Sequence[float]) -> float:
+        s = sorted(vals)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def drift(self) -> float:
+        """Worst-op median relative error over the observation window."""
+        per_op = [self._median(dq) for dq in self._errs.values() if dq]
+        return max(per_op, default=0.0)
+
+    def drift_by_op(self) -> dict:
+        return {op: self._median(dq)
+                for op, dq in self._errs.items() if dq}
+
+    def _n_observations(self) -> int:
+        return sum(len(dq) for dq in self._errs.values())
+
+    # -- the loop ------------------------------------------------------------
+    def recalibrate(self, *, force: bool = False) -> Optional[dict]:
+        """Fit the store's latest records for this fabric and swap the
+        fitted model into the planner.  Returns the event dict, or None
+        when no class fit cleared the confidence floor."""
+        records = list(
+            self.store.latest_by_key(fabric=topo_key(self.topo)).values())
+        measurements, fits = fit_measurements(records, self.topo)
+        if not measurements and not force:
+            return None
+        new_hw = (self.base_hw.recalibrated(measurements, self.topo)
+                  if measurements else self.base_hw)
+        drift = self.drift()
+        self.planner.refresh_hardware(new_hw)
+        event = {
+            "kind": "recalibrated",
+            "time": time.time(),
+            "check": self.checks,
+            "drift": drift,
+            "drift_by_op": self.drift_by_op(),
+            "fabric": topo_key(self.topo),
+            "n_records": len(records),
+            "fits": {cls: f.report() for cls, f in fits.items()},
+            "measured_links": len(measurements.get("links", {})),
+        }
+        self.events.append(event)
+        self._last_recal_check = self.checks
+        for dq in self._errs.values():
+            dq.clear()            # judged against the new model from here
+        return event
+
+    def check(self) -> Optional[dict]:
+        """Recalibrate iff drift exceeds the threshold (and the window
+        holds enough observations, and the cooldown elapsed)."""
+        self.checks += 1
+        if self._n_observations() < self.min_observations:
+            return None
+        if self.checks - self._last_recal_check < self.cooldown:
+            return None
+        if self.drift() <= self.threshold:
+            return None
+        return self.recalibrate()
+
+    def run_cycle(self, executor, *, ops: Sequence[str] = DEFAULT_OPS,
+                  payloads=None, **scenario_kw) -> Optional[dict]:
+        """One full telemetry cycle: probe sweep (predicted under the
+        planner's CURRENT model) -> store -> observe -> drift check.
+        Returns the recalibration event if one fired."""
+        records = probe_sweep(self.topo, executor, ops=ops,
+                              payloads=payloads, hw=self.planner.hw,
+                              **scenario_kw)
+        self.store.extend(records)
+        for r in records:
+            self.observe(r)
+        return self.check()
+
+    # -- reporting (ServeEngine.plan_report / train logs) --------------------
+    @property
+    def last_recalibration(self) -> Optional[dict]:
+        return self.events[-1] if self.events else None
+
+    def report(self) -> dict:
+        last = self.last_recalibration
+        return {
+            "drift_pct": round(100.0 * self.drift(), 2),
+            "drift_by_op_pct": {op: round(100.0 * v, 2)
+                                for op, v in self.drift_by_op().items()},
+            "observations": self._n_observations(),
+            "checks": self.checks,
+            "threshold_pct": 100.0 * self.threshold,
+            "recalibrations": len(self.events),
+            "last_recalibration": (
+                None if last is None else
+                {k: last[k] for k in ("check", "drift", "fits",
+                                      "measured_links", "n_records")}),
+            "store_records": len(self.store),
+        }
+
+
+def startup_calibration(topo: Topology, store_path=None, *,
+                        planner: Optional[Planner] = None, probe=None,
+                        threshold: float = 0.25):
+    """Launcher-side startup (shared by train.py --calibrate and
+    serve.py --calibrate): probe sweep + fit + recalibrate before step 0
+    so planner decisions are scored under measured bandwidths from the
+    first trace.  ``probe`` defaults to the simulated executor (no
+    fabric to time on CPU hosts); live deployments pass a LiveProbe.
+    Returns (store, monitor, event) — event carries the drift AT fit
+    time (the monitor's window is cleared by the re-fit)."""
+    from repro.core.planner import default_planner
+
+    from .probe import GroundTruth, SimProbe
+    from .store import CalibrationStore
+
+    planner = planner or default_planner()
+    store = CalibrationStore(store_path)
+    monitor = DriftMonitor(planner, store, topo, threshold=threshold)
+    probe = probe or SimProbe(GroundTruth())
+    event = monitor.run_cycle(probe) or monitor.recalibrate(force=True)
+    return store, monitor, event

@@ -1,0 +1,343 @@
+"""Timed execution of registered collective plans (the telemetry PROBE).
+
+Two executors behind one ``measure`` protocol:
+
+* :class:`LiveProbe` — times the real shard_map lowerings of every
+  executable plan (allgather / dispatch / combine) on the live mesh with
+  ``block_until_ready`` wall clocks.  This is what a deployment points
+  the monitor at.
+* :class:`SimProbe` — a pure-simulation fallback: "executes" a plan by
+  scoring its ledger under a hidden :class:`GroundTruth` (true per-link
+  bandwidths + true overhead constants, optionally noisy).  The truth is
+  injectable and degradable, which makes the whole
+  probe -> store -> fit -> re-plan loop testable on CPU: degrade the
+  truth's inter-server links 4x and the fitted model must move.
+
+:func:`probe_sweep` runs every registered plan for an op over a payload
+sweep and emits schema-versioned records for the
+:class:`~repro.telemetry.store.CalibrationStore` — each record carries
+the predicted time under the CURRENT planner calibration next to the
+measured time, plus the per-link-class bottleneck bytes the fitter
+regresses against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core import plan as plan_ir
+from repro.core.latency_model import DEFAULT, HardwareModel, score_ledger
+from repro.core.planner import Planner, bucket_payload
+from repro.core.topology import Topology
+
+from .store import SCHEMA_VERSION, topo_key
+
+# default payload sweeps: wide enough to pin both the alpha intercept
+# (small payloads) and the 1/bw slope (large payloads)
+ALLGATHER_SWEEP = (256 << 10, 1 << 20, 4 << 20, 16 << 20, 64 << 20)
+DISPATCH_BATCH_SWEEP = (32, 128, 512, 2048)
+DEFAULT_OPS = ("allgather", "dispatch", "combine")
+
+
+def default_payloads(op: str, token_bytes: int = 7168) -> tuple:
+    if op == "allgather":
+        return ALLGATHER_SWEEP
+    return tuple(b * token_bytes for b in DISPATCH_BATCH_SWEEP)
+
+
+def link_class(topo: Topology, src: int, dst: int) -> str:
+    """Fit class of one link: ``intra`` (same server / all of a full
+    mesh) or ``inter`` (rail)."""
+    return ("intra" if topo.server_of(src) == topo.server_of(dst)
+            else "inter")
+
+
+def ledger_class_bytes(ledger: plan_ir.Ledger) -> dict:
+    """Max per-link bytes per link class — the regressors the fitter
+    uses (the bottleneck-link term of the latency model is a max, so the
+    heaviest link of each class is the right x value)."""
+    out = {"intra": 0.0, "inter": 0.0}
+    for (a, b), v in ledger.link_bytes.items():
+        c = link_class(ledger.topo, a, b)
+        out[c] = max(out[c], float(v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# simulated execution backend (injectable ground truth)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroundTruth:
+    """What the fabric ACTUALLY delivers, hidden from the planner.
+
+    ``link_bw`` overrides true per-link bandwidths (sorted tuple, like
+    ``HardwareModel.link_bw``); ``noise`` is a lognormal sigma applied to
+    every measurement (run-to-run jitter).  The planner never sees this
+    object — only the probe's measured times.
+    """
+
+    hw: HardwareModel = DEFAULT
+    link_bw: tuple = ()
+    noise: float = 0.0
+    seed: int = 0
+
+    def true_hw(self) -> HardwareModel:
+        if not self.link_bw:
+            return self.hw
+        return self.hw.recalibrated({"links": dict(self.link_bw)})
+
+    def with_links(self, links: Mapping) -> "GroundTruth":
+        merged = dict(self.link_bw)
+        merged.update({tuple(k): float(v) for k, v in dict(links).items()})
+        return dataclasses.replace(self,
+                                   link_bw=tuple(sorted(merged.items())))
+
+    def degraded(self, topo: Topology, factor: float,
+                 which: str = "inter") -> "GroundTruth":
+        """Truth with every ``which``-class link of ``topo`` delivering
+        ``factor``x less bandwidth than it currently does — the long-term
+        stress-test scenario (§6: deployed links drift off datasheet)."""
+        cur = dict(self.link_bw)
+        links = {}
+        for key, ln in topo.links.items():
+            if link_class(topo, *key) == which:
+                links[key] = cur.get(key, ln.bw) / float(factor)
+        return self.with_links(links)
+
+
+class SimProbe:
+    """Simulation executor: scores the plan's ledger under the ground
+    truth (+ lognormal noise).  Same ``measure`` protocol as LiveProbe,
+    so the monitor is executor-agnostic."""
+
+    source = "sim"
+
+    def __init__(self, truth: GroundTruth = GroundTruth()) -> None:
+        self.truth = truth
+        self._rng = np.random.default_rng(truth.seed)
+
+    def measure(self, op: str, plan_name: str, payload_bytes: float,
+                topo: Topology, *, ledger: Optional[plan_ir.Ledger] = None,
+                knobs: Optional[dict] = None, **scenario_kw) -> float:
+        if ledger is None:
+            plan = plan_ir.get_plan(op, plan_name)
+            scenario = Planner._scenario(op, topo, scenario_kw)
+            ledger = plan.simulate(scenario, payload_bytes, **(knobs or {}))
+        t = score_ledger(ledger, self.truth.true_hw())
+        if self.truth.noise:
+            t *= float(np.exp(self._rng.normal(0.0, self.truth.noise)))
+        return float(t)
+
+
+# ---------------------------------------------------------------------------
+# live execution backend (times the real lowerings on the mesh)
+# ---------------------------------------------------------------------------
+
+class LiveProbe:
+    """Times the executable lowerings of registered plans on a live mesh.
+
+    ``axis_name`` carries the AllGather; ``ep_axis`` (and the optional
+    ``pod_axis``) carry the MoE dispatch/combine.  Wall-clock = min over
+    ``repeats`` of a blocked jitted call, after ``warmup`` compile+run.
+    On CPU hosts the numbers time the collective *emulation*, not a
+    fabric — deployments run this on the real mesh; tests and CI use
+    :class:`SimProbe`.
+    """
+
+    source = "live"
+
+    def __init__(self, mesh, *, axis_name: str = "model",
+                 ep_axis: str = "data", pod_axis: Optional[str] = None,
+                 repeats: int = 3, warmup: int = 1) -> None:
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.ep_axis = ep_axis
+        self.pod_axis = pod_axis
+        self.repeats = int(repeats)
+        self.warmup = int(warmup)
+
+    def _time(self, fn, *args) -> float:
+        import jax
+        for _ in range(max(1, self.warmup)):
+            jax.block_until_ready(fn(*args))
+        best = float("inf")
+        for _ in range(max(1, self.repeats)):
+            t0 = time.monotonic()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.monotonic() - t0)
+        return best
+
+    def measure(self, op: str, plan_name: str, payload_bytes: float,
+                topo: Topology, *, ledger=None,
+                knobs: Optional[dict] = None, **scenario_kw) -> float:
+        if op == "allgather":
+            return self._measure_allgather(plan_name, payload_bytes,
+                                           knobs or {})
+        return self._measure_moe(op, plan_name, payload_bytes, scenario_kw)
+
+    def _measure_allgather(self, plan_name: str, payload_bytes: float,
+                           knobs: dict) -> float:
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core import collectives as cl
+        from repro.parallel.compat import shard_map
+
+        plan = plan_ir.get_plan("allgather", plan_name)
+        if not plan.executable:
+            raise ValueError(f"plan {plan_name!r} has no lowering to time")
+        kw = plan.shard_map_kwargs(**{**plan.default_knobs(), **knobs})
+        n = int(np.prod([self.mesh.shape[a]
+                         for a in (self.axis_name,)]))
+        feat = 64
+        rows = max(1, int(payload_bytes) // (4 * feat))
+        x = jnp.zeros((n * rows, feat), jnp.float32)
+        if kw.get("mode") is None:
+            body = functools.partial(cl.allgather_reference,
+                                     axis_name=self.axis_name)
+        else:
+            body = functools.partial(cl.multiwrite_allgather,
+                                     axis_name=self.axis_name,
+                                     mode=kw["mode"], split=kw["split"])
+        fn = jax.jit(shard_map(body, mesh=self.mesh,
+                               in_specs=P(self.axis_name),
+                               out_specs=P(self.axis_name),
+                               check_vma=False))
+        with self.mesh:
+            return self._time(fn, x)
+
+    def _measure_moe(self, op: str, plan_name: str, payload_bytes: float,
+                     scenario_kw: dict) -> float:
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core import collectives as cl
+        from repro.parallel.compat import shard_map
+
+        plan = plan_ir.get_plan(op, plan_name)
+        kw = plan.shard_map_kwargs()
+        scheme = kw.get("moe_scheme") or kw.get("moe_combine") or "baseline"
+        p = self.mesh.shape[self.pod_axis] if self.pod_axis else 1
+        d = self.mesh.shape[self.ep_axis]
+        ranks = p * d
+        top_k = int(scenario_kw.get("top_k", 8))
+        per_rank = max(1, int(scenario_kw.get("num_experts", 64)) // ranks)
+        num_experts = per_rank * ranks
+        top_k = min(top_k, num_experts)
+        token_bytes = int(scenario_kw.get("token_bytes", 7168))
+        h = max(8, min(1024, token_bytes // 4))
+        n_per_rank = max(1, int(payload_bytes) // token_bytes)
+        epmesh = cl.EPMesh(pod_axis=self.pod_axis if p > 1 else None,
+                           ep_axis=self.ep_axis, num_pods=p, ep_per_pod=d)
+        dcfg = cl.DispatchConfig(num_experts=num_experts, top_k=top_k,
+                                 pod_capacity=min(1.0, 2.0 * top_k / p),
+                                 ep_capacity=min(1.0, 2.0 * (top_k / p) / d),
+                                 expert_capacity=1.0)
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.normal(
+            size=(n_per_rank * ranks, h)).astype(np.float32))
+        logits = jnp.asarray(rng.normal(
+            size=(n_per_rank * ranks, num_experts)).astype(np.float32))
+        time_combine = op == "combine"
+
+        def body(tok, lg):
+            gates, ids = cl.route_topk(lg, top_k)
+            if scheme == "hierarchical":
+                exp_tok, exp_gate, st = cl.hierarchical_dispatch(
+                    tok, ids, gates, dcfg, epmesh)
+                if time_combine:
+                    return cl.hierarchical_combine(exp_tok, exp_gate, st)
+            else:
+                exp_tok, exp_gate, st = cl.baseline_dispatch(
+                    tok, ids, gates, dcfg, epmesh)
+                if time_combine:
+                    return cl.baseline_combine(exp_tok, exp_gate, st)
+            return jnp.sum(exp_tok, axis=(1, 2))   # force materialization
+
+        axes = ((self.pod_axis, self.ep_axis) if epmesh.pod_axis
+                else (self.ep_axis,))
+        fn = jax.jit(shard_map(body, mesh=self.mesh,
+                               in_specs=(P(axes), P(axes)),
+                               out_specs=P(axes), check_vma=False))
+        with self.mesh:
+            return self._time(fn, tokens, logits)
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+def probe_record(op: str, plan: plan_ir.CollectivePlan, payload_bytes: float,
+                 topo: Topology, measured_s: float, predicted_s: float,
+                 ledger: plan_ir.Ledger, source: str,
+                 knobs: Optional[dict] = None) -> dict:
+    """One schema-versioned store record for a timed plan execution."""
+    cls_bytes = ledger_class_bytes(ledger)
+    (bsrc, bdst), bbytes = ledger.bottleneck_link
+    return {
+        "schema": SCHEMA_VERSION,
+        "ts": time.time(),
+        "fabric": topo_key(topo),
+        "fabric_name": topo.name,
+        "op": op,
+        "plan": plan.name,
+        "knobs": dict(knobs or plan.default_knobs()),
+        "payload_bytes": float(payload_bytes),
+        "bucket": bucket_payload(payload_bytes),
+        "predicted_s": float(predicted_s),
+        "measured_s": float(measured_s),
+        "bottleneck_link": [int(bsrc), int(bdst)],
+        "bottleneck_class": link_class(topo, bsrc, bdst),
+        "class_bytes": cls_bytes,
+        "stages": int(ledger.stages),
+        "relayed": bool(ledger.relayed),
+        "source": source,
+    }
+
+
+def probe_sweep(topo: Topology, executor, *,
+                ops: Sequence[str] = DEFAULT_OPS,
+                plans: Optional[Sequence[str]] = None,
+                payloads: Optional[Mapping[str, Sequence[float]]] = None,
+                hw: HardwareModel = DEFAULT,
+                token_bytes: int = 7168,
+                **scenario_kw) -> list[dict]:
+    """Time every registered plan of every op over a payload sweep.
+
+    ``hw`` is the calibration the PREDICTED times are scored under (pass
+    the planner's current model so record drift reflects model error);
+    the executor supplies the measured side.  Returns store-ready
+    records.
+    """
+    records: list[dict] = []
+    kw = dict(scenario_kw)
+    kw.setdefault("token_bytes", token_bytes)
+    for op in ops:
+        sweep = (payloads or {}).get(op) if payloads else None
+        if sweep is None:
+            sweep = default_payloads(op, token_bytes)
+        live = getattr(executor, "source", "") == "live"
+        for plan in plan_ir.plans_for(op, executable_only=live):
+            if plans is not None and plan.name not in plans:
+                continue
+            scenario = Planner._scenario(op, topo, kw)
+            knobs = plan.default_knobs()
+            for payload in sweep:
+                ledger = plan.simulate(scenario, payload, **knobs)
+                predicted = score_ledger(ledger, hw)
+                measured = executor.measure(
+                    op, plan.name, payload, topo, ledger=ledger,
+                    knobs=knobs, **kw)
+                records.append(probe_record(
+                    op, plan, payload, topo, measured, predicted, ledger,
+                    getattr(executor, "source", "unknown"), knobs))
+    return records
