@@ -315,6 +315,130 @@ def bench_calibration(smoke: bool = False):
     return rows
 
 
+def bench_overlap(smoke: bool = False):
+    """Serial vs pipelined dispatch crossover (the overlap-aware scoring
+    mode end-to-end).
+
+    For each decode/prefill batch on the paper's 2x8 fabric, the planner
+    scores every (plan, microbatch G) cell with the expert-FFN compute
+    of the batch as overlap context.  The table shows the G == 1 serial
+    optimum next to the pipelined optimum and the full G-sweep: small
+    batches stay serial (the per-chunk launch alpha dominates), large
+    batches pick G > 1 because chunked dispatch/combine hide behind the
+    previous chunk's compute.  A second stage closes the telemetry loop:
+    synthetic measured times at a hidden true overlap efficiency are fed
+    into the planner's decision log and ``fit_overlap_eff`` must recover
+    the hidden value.
+
+    Under ``--smoke`` this is the CI gate: the crossover must exist, the
+    pipelined score must beat serial there, the smallest batch must stay
+    G == 1, and the efficiency fit must land near the injected truth.
+    Full mode also emits results/BENCH_overlap.json.
+    """
+    import json
+    import os
+
+    from repro.core import latency_model as lm
+    from repro.core import plan as plan_ir
+    from repro.core import planner as pl
+    from repro.core.topology import two_server_cluster
+    from repro.telemetry import fit_overlap_eff
+
+    topo = two_server_cluster()
+    planner = pl.Planner()
+    top_k, d_model, f_shard = 8, 7168, 2048   # DeepSeek-class expert FFN
+    batches = (16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+    g_grid = sorted({dict(kn).get("microbatch", 1)
+                     for p in plan_ir.plans_for("dispatch")
+                     for kn in p.knob_grid()})
+
+    rows, table = [], []
+    crossover = None
+    print("\n== bench_overlap: serial vs pipelined dispatch (2x8) ==")
+    print(f"{'batch':>6} {'serial us':>10} {'pipelined us':>13} {'G':>3} "
+          f"{'plan':<10} {'gain%':>6}  " +
+          " ".join(f"G={g:<2}" + " " * 6 for g in g_grid))
+    for batch in batches:
+        compute_s = lm.expert_compute_time_s(batch, top_k, d_model, f_shard)
+        d = planner.choose("dispatch", batch * lm.TOKEN_BYTES, topo,
+                           token_bytes=lm.TOKEN_BYTES, compute_s=compute_s)
+        by_g: dict = {}
+        for pname, kn, t in d.candidates:
+            g = dict(kn).get("microbatch", 1)
+            if g not in by_g or t < by_g[g][1]:
+                by_g[g] = (pname, t)
+        serial_t = by_g[1][1]
+        gain = 100.0 * (1.0 - d.predicted_s / serial_t)
+        if d.microbatch > 1 and crossover is None:
+            crossover = batch
+        sweep = " ".join(f"{by_g[g][1]*1e6:8.1f}" for g in g_grid)
+        print(f"{batch:>6} {serial_t*1e6:>10.1f} {d.predicted_s*1e6:>13.1f} "
+              f"{d.microbatch:>3} {d.plan:<10} {gain:>6.1f}  {sweep}")
+        table.append({"batch": batch, "plan": d.plan, "g": d.microbatch,
+                      "serial_us": serial_t * 1e6,
+                      "pipelined_us": d.predicted_s * 1e6,
+                      "gain_pct": gain, "compute_us": compute_s * 1e6,
+                      "g_sweep_us": {g: by_g[g][1] * 1e6 for g in by_g}})
+        rows.append({"name": f"overlap_b{batch}_g", "metric": "chunks",
+                     "value": d.microbatch})
+        rows.append({"name": f"overlap_b{batch}_gain", "metric": "pct",
+                     "value": gain})
+    print(f"serial->pipelined crossover batch: {crossover}")
+    rows.append({"name": "overlap_crossover_batch", "metric": "batch",
+                 "value": float(crossover or float("inf"))})
+
+    # ---- close the loop: fit overlap_eff from measured decision rows ----
+    true_eta = 0.6
+    n_meas = 0
+    for batch in (512, 1024, 2048, 4096):
+        compute_s = lm.expert_compute_time_s(batch, top_k, d_model, f_shard)
+        d = planner.choose("dispatch", batch * lm.TOKEN_BYTES, topo,
+                           token_bytes=lm.TOKEN_BYTES, compute_s=compute_s)
+        if d.microbatch <= 1:
+            continue
+        measured = (d.predicted_serial_s
+                    - true_eta * (d.predicted_serial_s - d.predicted_ideal_s))
+        planner.note_measurement(d, measured)
+        n_meas += 1
+    eta_fit = fit_overlap_eff(planner.decision_log)
+    print(f"overlap_eff fit: {eta_fit} from {n_meas} measured pipelined "
+          f"decisions (true {true_eta})")
+    rows.append({"name": "overlap_eff_fit", "metric": "ratio",
+                 "value": eta_fit if eta_fit is not None else -1.0})
+
+    # ---- the knob must actually win (CI gate) -------------------------------
+    failures = []
+    if crossover is None:
+        failures.append("planner never chose microbatch > 1")
+    else:
+        best = next(r for r in table if r["batch"] == crossover)
+        if not best["pipelined_us"] < best["serial_us"]:
+            failures.append(f"pipelined did not beat serial at {crossover}")
+    if table[0]["g"] != 1:
+        failures.append(f"smallest batch chunked: G={table[0]['g']} "
+                        "(per-chunk alpha should keep it serial)")
+    if eta_fit is None or abs(eta_fit - true_eta) > 0.05:
+        failures.append(f"overlap_eff fit {eta_fit} != true {true_eta}")
+    for f in failures:
+        print(f"OVERLAP GATE FAIL: {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+    if not smoke:
+        out = {"fabric": topo.name, "token_bytes": lm.TOKEN_BYTES,
+               "top_k": top_k, "d_model": d_model, "f_shard": f_shard,
+               "crossover_batch": crossover, "cells": table,
+               "overlap_eff_fit": {"fitted": eta_fit, "true": true_eta,
+                                   "n_measured": n_meas}}
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_overlap.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
+    return rows
+
+
 def bench_train_throughput():
     """Tiny-model CPU train-step wall time (framework overhead check)."""
     import jax
@@ -347,6 +471,7 @@ MICRO_BENCHES = {
     "bench_planner": lambda smoke: bench_planner(),
     "bench_fabrics": bench_fabrics,
     "bench_calibration": bench_calibration,
+    "bench_overlap": bench_overlap,
     "bench_kernels": lambda smoke: bench_kernels(),
     "bench_dispatch_sim": lambda smoke: bench_dispatch_sim(),
     "bench_train_throughput": lambda smoke: bench_train_throughput(),

@@ -68,6 +68,11 @@ class HardwareModel:
     flow_interference: float = 1.0  # <1 derates a link shared by >=3
     # distinct concurrent unicast flows (paper: unicast multipath "more
     # susceptible to mutual interference"); 1.0 = mean behaviour.
+    overlap_eff: float = 0.75     # fraction of the theoretical chunk-
+    # pipeline overlap actually achieved (1 = perfect dispatch/compute/
+    # combine overlap, 0 = chunks serialize).  Seeded conservatively;
+    # telemetry fits it from Planner.decision_log measured rows
+    # (repro.telemetry.fit.fit_overlap_eff) like the link bandwidths.
     link_bw: tuple = ()           # MEASURED per-link bandwidth overrides
     # (((src, dst), bytes/s), ...) from recalibrated(); scoring prefers a
     # measured value over the topology's nominal one.  Stored as a sorted
@@ -75,7 +80,8 @@ class HardwareModel:
 
     def ideal(self) -> "HardwareModel":
         return HardwareModel(alpha_base=0.0, alpha_hop=0.0,
-                             copy_bw=math.inf, flow_interference=1.0)
+                             copy_bw=math.inf, flow_interference=1.0,
+                             overlap_eff=1.0)
 
     def recalibrated(self, measurements, topo=None) -> "HardwareModel":
         """Fold measured numbers back into the model (ROADMAP: online
@@ -92,7 +98,8 @@ class HardwareModel:
         measurements = dict(measurements)
         scalars = {k: float(measurements[k])
                    for k in ("alpha_base", "alpha_hop", "copy_bw",
-                             "flow_interference") if k in measurements}
+                             "flow_interference", "overlap_eff")
+                   if k in measurements}
         links = dict(self.link_bw)
         for key, bw in dict(measurements.get("links", {})).items():
             if isinstance(key, str):
@@ -116,10 +123,11 @@ class HardwareModel:
         decision scored under the old constants — and two value-equal
         models share cache entries."""
         return ("hw", self.alpha_base, self.alpha_hop, self.copy_bw,
-                self.flow_interference, self.link_bw)
+                self.flow_interference, self.overlap_eff, self.link_bw)
 
 
-IDEAL = HardwareModel(alpha_base=0.0, alpha_hop=0.0, copy_bw=math.inf)
+IDEAL = HardwareModel(alpha_base=0.0, alpha_hop=0.0, copy_bw=math.inf,
+                      overlap_eff=1.0)
 DEFAULT = HardwareModel()
 
 
@@ -135,6 +143,19 @@ def score_ledger(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
     bottleneck model, so plan choice is an emergent property of the
     calibration (Fig 7's ~2 MB crossover falls out of ``alpha_hop`` and
     ``copy_bw`` — nothing scheme-specific is hard-coded here).
+
+    Chunked ledgers (``stages == G > 1``) score in one of two modes:
+
+    * serial (``overlap=False``) — the pre-pipeline chunk loop: G
+      startup alphas plus the full wire+compute time, so G > 1 can only
+      lose (memory, not latency, was the reason to microbatch).
+    * pipelined (``overlap=True``) — dispatch of chunk k+1 overlaps the
+      compute of chunk k (``ledger.compute_s``) and the combine of
+      chunk k-1: the ideal G-chunk pipeline pays
+      ``sum(stage)/G + (G-1) * max(stage)/G`` instead of the serial
+      sum, derated by the calibrated ``hw.overlap_eff``.  The per-chunk
+      ``alpha_base`` penalty grows linearly in G while the overlap win
+      saturates, which is what makes SMALL G optimal.
     """
     if not ledger.link_bytes:
         return 0.0
@@ -157,9 +178,57 @@ def score_ledger(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
         bw = max((ln.bw for ln in ledger.topo.links.values()
                   if ln.src == node), default=math.inf)
         engine_time = max(engine_time, nbytes / bw)
-    return (hw.alpha_base * max(1, ledger.stages) + ledger.alpha_extra_s
-            + link_time + relay_time + engine_time
-            + (hw.alpha_hop if ledger.relayed else 0.0))
+    wire = link_time + relay_time + engine_time
+    g = max(1, ledger.stages)
+    fixed = (hw.alpha_base * g + ledger.alpha_extra_s
+             + (hw.alpha_hop if ledger.relayed else 0.0))
+    compute = max(0.0, ledger.compute_s)
+    serial = fixed + wire + compute
+    if g <= 1 or not ledger.overlap:
+        return serial
+    eta = min(1.0, max(0.0, hw.overlap_eff))
+    w, c = wire / g, compute / g
+    pipelined = fixed + w + c + (g - 1) * max(w, c)
+    return (1.0 - eta) * serial + eta * pipelined
+
+
+def overlap_endpoints(ledger: Ledger,
+                      hw: HardwareModel = DEFAULT) -> tuple[float, float]:
+    """(serial_s, ideal_s) endpoints of a ledger's overlap interpolation:
+    the score at ``overlap_eff`` 0 and 1.  ``measured`` times landing
+    between them identify the achieved efficiency — the quantity
+    ``repro.telemetry.fit.fit_overlap_eff`` regresses from
+    ``Planner.decision_log`` rows (equal endpoints carry no signal)."""
+    serial = score_ledger(ledger, dataclasses.replace(hw, overlap_eff=0.0))
+    ideal_ = score_ledger(ledger, dataclasses.replace(hw, overlap_eff=1.0))
+    return serial, ideal_
+
+
+def expert_compute_time_s(tokens_per_rank: int, top_k: int, d_model: int,
+                          d_ff_shard: int,
+                          peak_flops: float = None) -> float:
+    """Modeled per-rank expert-FFN time for one MoE layer — the compute
+    stage a pipelined dispatch/combine hides network chunks behind.
+
+    Balanced routing sends ``tokens_per_rank * top_k`` (token, expert)
+    pairs through each rank's experts; the gated FFN is three matmuls
+    (w1, w3, w2) of ``2 * d_model * d_ff_shard`` FLOPs each, where
+    ``d_ff_shard`` is the TP-local expert hidden width."""
+    from .topology import TPU_PEAK_FLOPS
+    if peak_flops is None:
+        peak_flops = TPU_PEAK_FLOPS
+    flops = tokens_per_rank * top_k * 3 * 2 * d_model * d_ff_shard
+    return float(flops) / float(peak_flops)
+
+
+def moe_overlap_compute_s(tokens_per_rank: int, top_k: int, d_model: int,
+                          d_ff: int, tp: int = 1) -> float:
+    """:func:`expert_compute_time_s` from the GLOBAL expert hidden width
+    and the TP degree — the ONE derivation of the overlap context every
+    surface shares (moe_ffn at trace time, train/serve reports, dryrun
+    cells), so the shard math and its zero-guards cannot diverge."""
+    return expert_compute_time_s(tokens_per_rank, top_k, d_model,
+                                 max(1, d_ff // max(1, tp)))
 
 
 def ledger_latency(sim: MultiWriteSimulator | Ledger,

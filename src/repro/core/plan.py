@@ -56,8 +56,19 @@ class Ledger:
                      copy/forward cost).
     ``flow_counts``  (src, dst) -> distinct concurrent flows (drives the
                      unicast-multipath interference derate).
-    ``stages``       serialized schedule stages, each paying the operator
-                     startup alpha (microbatching = ``stages`` chunks).
+    ``stages``       schedule chunks (microbatching = ``stages`` chunks),
+                     each paying the operator startup alpha.
+    ``overlap``      chunks are SOFTWARE-PIPELINED (dispatch of chunk k+1
+                     overlaps compute of chunk k and combine of chunk
+                     k-1): scoring pays ``max(stage) + (G-1)*bottleneck``
+                     derated by the calibrated overlap efficiency instead
+                     of the serial ``G*sum`` — the Fig 8 relay-pipeline
+                     idea applied across whole chunks.  False = the
+                     chunks serialize (the pre-pipeline ``lax.map`` loop).
+    ``compute_s``    per-full-payload compute time (expert FFN) the
+                     pipelined network chunks hide behind — the stage
+                     BETWEEN dispatch and combine.  Charged to serial
+                     scores too so G==1 and G>1 compare apples-to-apples.
     ``relayed``      whether any relay stage exists (pays ``alpha_hop``).
     ``alpha_extra_s``  schedule-specific fixed setup beyond the generic
                      alphas (the Fig 8 relay pipeline establishment).
@@ -74,6 +85,8 @@ class Ledger:
     relay_bytes: Mapping[int, float]
     flow_counts: Mapping[tuple[int, int], int]
     stages: int = 1
+    overlap: bool = False
+    compute_s: float = 0.0
     relayed: bool = False
     alpha_extra_s: float = 0.0
     engine_serial: Mapping[int, float] = dataclasses.field(
@@ -146,7 +159,12 @@ class DispatchScenario:
     (paper §6.1 "expert load balancing is enabled"); larger values draw
     expert choices from a Zipf-like popularity law, concentrating
     traffic on the hot experts' owners — the imbalanced-MoE regime the
-    planner must price for production routers."""
+    planner must price for production routers.
+
+    ``compute_s`` is the overlap context: the expert-FFN time (for the
+    FULL payload) a chunked dispatch can hide behind.  0 = score the
+    dispatch in isolation (the pre-overlap model — ``microbatch > 1``
+    can then never win and the planner keeps G == 1)."""
 
     topo: Topology
     num_experts: int = 64
@@ -154,10 +172,11 @@ class DispatchScenario:
     token_bytes: int = 7168
     seed: int = 0
     skew: float = 0.0
+    compute_s: float = 0.0
 
     def cache_key(self):
         return ("dispatch", self.num_experts, self.top_k, self.token_bytes,
-                self.skew)
+                self.skew, self.compute_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,10 +193,11 @@ class CombineScenario:
     token_bytes: int = 7168
     seed: int = 0
     skew: float = 0.0          # hot-expert routing skew (see DispatchScenario)
+    compute_s: float = 0.0     # overlap context (see DispatchScenario)
 
     def cache_key(self):
         return ("combine", self.num_experts, self.top_k, self.token_bytes,
-                self.skew)
+                self.skew, self.compute_s)
 
 
 def default_scenarios(topo: Topology) -> dict:

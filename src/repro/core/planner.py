@@ -52,6 +52,20 @@ def bucket_payload(payload_bytes: float) -> int:
     return 1 << int(math.ceil(math.log2(float(payload_bytes))))
 
 
+def bucket_compute_s(compute_s: float) -> float:
+    """Power-of-two bucket (in nanoseconds) for the overlap-context
+    compute time, mirroring :func:`bucket_payload`: nearby compute
+    estimates share one scenario cache entry instead of fragmenting the
+    LRU per traced dtype/shape.  Rounded to the NEAREST power of two in
+    log space (not up): the bucketed value is baked into the decision's
+    serial/ideal endpoints that fit_overlap_eff measures against, and a
+    systematically inflated compute stage would bias the fitted
+    efficiency upward."""
+    if compute_s <= 0:
+        return 0.0
+    return float(2.0 ** round(math.log2(compute_s * 1e9))) / 1e9
+
+
 # ---------------------------------------------------------------------------
 # decisions
 # ---------------------------------------------------------------------------
@@ -68,6 +82,11 @@ class PlanDecision:
     payload_bytes: int              # bucketed payload the scores used
     shard_map_kwargs: dict          # what the JAX layer executes
     candidates: tuple               # ((plan, knobs, predicted_s), ...) sorted
+    predicted_serial_s: float = 0.0  # winner scored at overlap_eff=0 (==
+    #   predicted_s for non-pipelined winners)
+    predicted_ideal_s: float = 0.0   # winner scored at overlap_eff=1; the
+    #   (serial, ideal) endpoints bracket any measured time, which is how
+    #   telemetry fits the achieved overlap efficiency (fit_overlap_eff)
 
     @property
     def delta_vs_baseline(self) -> float:
@@ -83,6 +102,11 @@ class PlanDecision:
 
     def knob(self, name: str, default=None):
         return dict(self.knobs).get(name, default)
+
+    @property
+    def microbatch(self) -> int:
+        """Pipeline chunk count G of the winning plan (1 = unchunked)."""
+        return int(self.knob("microbatch", 1))
 
     def summary(self) -> str:
         kn = ", ".join(f"{k}={v}" for k, v in self.knobs)
@@ -151,7 +175,13 @@ class Planner:
             {"op": decision.op, "plan": decision.plan,
              "knobs": dict(decision.knobs), "topo": topo_name,
              "payload_bytes": decision.payload_bytes,
-             "predicted_s": decision.predicted_s, "measured_s": None})
+             "predicted_s": decision.predicted_s,
+             # overlap-interpolation endpoints of the winner: the rows
+             # telemetry fits hw.overlap_eff against once measured_s
+             # arrives (fit_overlap_eff skips rows where they coincide)
+             "predicted_serial_s": decision.predicted_serial_s,
+             "predicted_ideal_s": decision.predicted_ideal_s,
+             "measured_s": None})
         if len(self.decision_log) > self.DECISION_LOG_MAX:
             del self.decision_log[:-self.DECISION_LOG_MAX]
 
@@ -159,10 +189,19 @@ class Planner:
                          measured_s: float) -> dict:
         """Attach a measured execution time to the most recent logged row
         for this decision (telemetry closes the loop here); appends a
-        fresh row if the decision was served from cache."""
+        fresh row if the decision was served from cache.  The knob AND
+        predicted-score match matter: a G == 1 execution time written
+        into a G > 1 row — or into the same plan's row for a DIFFERENT
+        fabric/compute context (equal op/plan/payload, different
+        endpoints) — would corrupt the overlap-efficiency fit.
+        ``predicted_s`` is copied verbatim from the decision into its
+        log row, so float equality identifies exactly its rows."""
+        knobs = dict(decision.knobs)
         for row in reversed(self.decision_log):
             if (row["op"] == decision.op and row["plan"] == decision.plan
                     and row["payload_bytes"] == decision.payload_bytes
+                    and row["predicted_s"] == decision.predicted_s
+                    and dict(row.get("knobs", {})) == knobs
                     and row["measured_s"] is None):
                 row["measured_s"] = float(measured_s)
                 return row
@@ -170,6 +209,8 @@ class Planner:
                "knobs": dict(decision.knobs), "topo": None,
                "payload_bytes": decision.payload_bytes,
                "predicted_s": decision.predicted_s,
+               "predicted_serial_s": decision.predicted_serial_s,
+               "predicted_ideal_s": decision.predicted_ideal_s,
                "measured_s": float(measured_s)}
         self.decision_log.append(row)
         return row
@@ -188,7 +229,9 @@ class Planner:
                 num_experts=scenario_kw.get("num_experts", 64),
                 top_k=scenario_kw.get("top_k", 8),
                 token_bytes=scenario_kw.get("token_bytes", 7168),
-                skew=scenario_kw.get("skew", 0.0))
+                skew=scenario_kw.get("skew", 0.0),
+                compute_s=bucket_compute_s(
+                    scenario_kw.get("compute_s", 0.0)))
         raise ValueError(f"unknown collective op {op!r}")
 
     # -- the decision --------------------------------------------------------
@@ -227,24 +270,33 @@ class Planner:
         plans = plan_ir.plans_for(op, executable_only=executable_only)
         if not plans:
             raise ValueError(f"no plans registered for op {op!r}")
-        scored: list[tuple[float, int, plan_ir.CollectivePlan, dict]] = []
+        scored: list[tuple] = []        # (t, order, plan, knobs, ledger)
         for order, p in enumerate(plans):
             for knobs in p.knob_grid():
                 ledger = p.simulate(scenario, bucket, **knobs)
                 t = score_ledger(ledger, hw)
-                scored.append((t, order, p, knobs))
+                scored.append((t, order, p, knobs, ledger))
         scored.sort(key=lambda s: (s[0], s[1]))
-        best_t, _, best, best_knobs = scored[0]
+        best_t, _, best, best_knobs, best_ledger = scored[0]
         base_name = plan_ir.BASELINE_PLAN[op]
-        base_t = min((t for t, _, p, _ in scored if p.name == base_name),
+        # the baseline reference is the SERIAL (G == 1) baseline cell —
+        # what a fixed-policy baseline deployment actually executes —
+        # so speedup_pct keeps its meaning now that the grid also holds
+        # pipelined baseline candidates
+        base_t = min((t for t, _, p, kn, _ in scored
+                      if p.name == base_name
+                      and kn.get("microbatch", 1) == 1),
                      default=best_t)
+        from .latency_model import overlap_endpoints
+        serial_t, ideal_t = overlap_endpoints(best_ledger, hw)
         return PlanDecision(
             op=op, plan=best.name,
             knobs=tuple(sorted(best_knobs.items())),
             predicted_s=best_t, baseline_s=base_t, payload_bytes=bucket,
             shard_map_kwargs=best.shard_map_kwargs(**best_knobs),
             candidates=tuple((p.name, tuple(sorted(kn.items())), t)
-                             for t, _, p, kn in scored))
+                             for t, _, p, kn, _ in scored),
+            predicted_serial_s=serial_t, predicted_ideal_s=ideal_t)
 
 
 _DEFAULT: Optional[Planner] = None
@@ -285,17 +337,22 @@ def moe_dispatch_decision(*, num_pods: int, ep_per_pod: int,
                           hw: Optional[HardwareModel] = None,
                           planner: Optional[Planner] = None,
                           topo: Optional[Topology] = None,
-                          skew: float = 0.0) -> PlanDecision:
+                          skew: float = 0.0,
+                          compute_s: float = 0.0) -> PlanDecision:
     """Plan the MoE dispatch for one EP mesh slice (see
     :func:`_ep_topology` for the fabric the payload is scored on).
     The payload is the per-rank token traffic of one dispatch.
-    ``skew > 0`` prices hot-expert (non-uniform) routing."""
+    ``skew > 0`` prices hot-expert (non-uniform) routing.
+    ``compute_s > 0`` (the expert-FFN time of the full batch, see
+    :func:`repro.core.latency_model.expert_compute_time_s`) enables the
+    pipelined scoring mode — the ``microbatch`` knob can then win and
+    the decision carries a G > 1 the MoE layer double-buffers."""
     planner = planner or default_planner()
     topo = _ep_topology(num_pods, ep_per_pod, topo)
     return planner.choose(
         "dispatch", float(tokens_per_rank) * token_bytes, topo, hw,
         num_experts=num_experts, top_k=top_k, token_bytes=token_bytes,
-        skew=skew)
+        skew=skew, compute_s=compute_s)
 
 
 def moe_combine_decision(*, num_pods: int, ep_per_pod: int,
@@ -304,17 +361,20 @@ def moe_combine_decision(*, num_pods: int, ep_per_pod: int,
                          hw: Optional[HardwareModel] = None,
                          planner: Optional[Planner] = None,
                          topo: Optional[Topology] = None,
-                         skew: float = 0.0) -> PlanDecision:
+                         skew: float = 0.0,
+                         compute_s: float = 0.0) -> PlanDecision:
     """Plan the MoE *combine* (return path) for one EP mesh slice —
     independent of the dispatch decision: the return path's redundancy is
     spread over the holders' rails (and may face asymmetric return
-    bandwidth), so its crossover sits elsewhere."""
+    bandwidth), so its crossover sits elsewhere.  ``compute_s`` is the
+    overlap context (see :func:`moe_dispatch_decision`): the combine of
+    chunk k-1 hides behind the expert FFN of chunk k."""
     planner = planner or default_planner()
     topo = _ep_topology(num_pods, ep_per_pod, topo)
     return planner.choose(
         "combine", float(tokens_per_rank) * token_bytes, topo, hw,
         num_experts=num_experts, top_k=top_k, token_bytes=token_bytes,
-        skew=skew)
+        skew=skew, compute_s=compute_s)
 
 
 def emergent_crossover_bytes(topo: Topology,

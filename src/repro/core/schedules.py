@@ -57,6 +57,7 @@ requires.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
 
 import numpy as np
@@ -521,37 +522,69 @@ for _scheme, _mode, _exec in [
         executable=_exec))
 
 
-def _simulate_dispatch(multiwrite: bool):
-    def simulate(scenario: plan_ir.DispatchScenario, payload_bytes: float,
+@functools.lru_cache(maxsize=128)
+def _moe_base_ledger(topo, num_experts: int, top_k: int, seed: int,
+                     skew: float, probe_batch: int, op: str,
+                     multiwrite: bool) -> plan_ir.Ledger:
+    """Unscaled single-chunk ledger of one dispatch/combine probe run —
+    cached so the microbatch knob sweep (which only re-labels stages and
+    re-scales bytes) never re-runs the packet simulator.  Keyed on the
+    fields the simulation actually reads (NOT the whole scenario:
+    ``compute_s`` varies per batch and would fragment the cache across
+    operating points that share one probe run).  Topologies hash by
+    identity."""
+    n_npus = topo.num_nodes
+    if num_experts % n_npus:
+        per_npu = max(1, num_experts // n_npus)
+        num_experts = per_npu * n_npus
+        top_k = min(top_k, num_experts)
+    sim = MultiWriteSimulator(topo)
+    routing = make_routing(probe_batch, n_npus, num_experts, top_k,
+                           seed=seed, skew=skew)
+    if op == "dispatch":
+        fn = dispatch_multiwrite if multiwrite else dispatch_unicast
+    else:
+        fn = combine_multiwrite if multiwrite else combine_unicast
+    fn(sim, routing, plan_ir.PROBE_TOKEN_BYTES)
+    from .latency_model import RELAY_SETUP_S
+    ledger = plan_ir.Ledger.from_sim(
+        sim, alpha_extra_s=RELAY_SETUP_S if multiwrite else 0.0)
+    if multiwrite:
+        # the relay forwards (dispatch: replicates; combine: reduces) in
+        # SOFTWARE (§6.4 AICPU data plane): its egress copies serialize
+        # through one engine — the term that makes Fig 8's small-batch
+        # unicast preference emerge (cf. dispatch_e2e_time's relay_fwd)
+        ledger = dataclasses.replace(
+            ledger, engine_serial=dict(sim.relay_tx_bytes))
+    return ledger
+
+
+def _simulate_moe(op: str, multiwrite: bool):
+    def simulate(scenario, payload_bytes: float,
                  *, microbatch: int = 1) -> plan_ir.Ledger:
-        n_npus = scenario.topo.num_nodes
         batch = max(1, int(round(payload_bytes / scenario.token_bytes)))
         probe_batch = min(batch, plan_ir.PROBE_BATCH)
-        num_experts, top_k = scenario.num_experts, scenario.top_k
-        if num_experts % n_npus:
-            per_npu = max(1, num_experts // n_npus)
-            num_experts = per_npu * n_npus
-            top_k = min(top_k, num_experts)
-        sim = MultiWriteSimulator(scenario.topo)
-        routing = make_routing(probe_batch, n_npus, num_experts, top_k,
-                               seed=scenario.seed, skew=scenario.skew)
-        fn = dispatch_multiwrite if multiwrite else dispatch_unicast
-        fn(sim, routing, plan_ir.PROBE_TOKEN_BYTES)
-        from .latency_model import RELAY_SETUP_S
-        ledger = plan_ir.Ledger.from_sim(
-            sim, stages=max(1, int(microbatch)),
-            alpha_extra_s=RELAY_SETUP_S if multiwrite else 0.0)
-        if multiwrite:
-            # the dispatch relay forwards in SOFTWARE (§6.4 AICPU data
-            # plane): its egress copies serialize through one engine —
-            # the term that makes Fig 8's small-batch unicast preference
-            # emerge (cf. dispatch_e2e_time's relay_fwd)
-            ledger = dataclasses.replace(
-                ledger, engine_serial=dict(sim.relay_tx_bytes))
+        ledger = _moe_base_ledger(scenario.topo, scenario.num_experts,
+                                  scenario.top_k, scenario.seed,
+                                  scenario.skew, probe_batch, op,
+                                  multiwrite)
         probe_bytes = probe_batch * plan_ir.PROBE_TOKEN_BYTES
-        return ledger.scaled(
+        ledger = ledger.scaled(
             plan_ir.probe_scale(batch * scenario.token_bytes, probe_bytes))
+        g = max(1, int(microbatch))
+        # G > 1 is the double-buffered moe_ffn pipeline (overlap=True):
+        # scoring pays max(stage) + (G-1)*bottleneck derated by
+        # hw.overlap_eff instead of the serial G*sum.  compute_s is the
+        # scenario's expert-FFN stage the chunks hide behind (charged to
+        # G == 1 too, so the comparison is apples-to-apples).
+        return dataclasses.replace(
+            ledger, stages=g, overlap=g > 1,
+            compute_s=float(getattr(scenario, "compute_s", 0.0)))
     return simulate
+
+
+def _simulate_dispatch(multiwrite: bool):
+    return _simulate_moe("dispatch", multiwrite)
 
 
 def _dispatch_kwargs(scheme: str):
@@ -561,53 +594,31 @@ def _dispatch_kwargs(scheme: str):
     return kwargs_fn
 
 
-# microbatch is declared (it maps onto pctx.moe_microbatch) but swept at
-# 1 only: the latency model has no stage-overlap term yet, so G > 1 can
-# never score better than G == 1 — widening the grid before modeling
-# pipelining would just burn sweep time (memory, not latency, is today's
-# reason to microbatch).  See the ROADMAP Planner bullet.
+# The microbatch grid (G = pipeline chunks, mapping onto
+# pctx.moe_microbatch).  The latency model's pipelined scoring mode
+# (score_ledger on overlap=True ledgers) lets G > 1 genuinely win when
+# the scenario carries an overlap context (compute_s > 0): chunked
+# dispatch hides behind the previous chunk's expert FFN.  Without
+# overlap context the per-chunk alpha keeps G == 1 optimal — the grid
+# head — so scenario-free sweeps behave exactly as before.  Powers of
+# two only: moe_ffn clamps the chosen G to a divisor of the local token
+# count via gcd, and pow-2 G always divides pow-2 batches.
+MICROBATCH_GRID = (1, 2, 4, 8)
+
 plan_ir.register_plan(plan_ir.CollectivePlan(
     name="unicast", op="dispatch",
-    knobs={"microbatch": (1,)},
+    knobs={"microbatch": MICROBATCH_GRID},
     simulate_fn=_simulate_dispatch(multiwrite=False),
     kwargs_fn=_dispatch_kwargs("baseline")))
 plan_ir.register_plan(plan_ir.CollectivePlan(
     name="multiwrite", op="dispatch",
-    knobs={"microbatch": (1,)},
+    knobs={"microbatch": MICROBATCH_GRID},
     simulate_fn=_simulate_dispatch(multiwrite=True),
     kwargs_fn=_dispatch_kwargs("hierarchical")))
 
 
 def _simulate_combine(multiwrite: bool):
-    def simulate(scenario: plan_ir.CombineScenario, payload_bytes: float,
-                 *, microbatch: int = 1) -> plan_ir.Ledger:
-        n_npus = scenario.topo.num_nodes
-        batch = max(1, int(round(payload_bytes / scenario.token_bytes)))
-        probe_batch = min(batch, plan_ir.PROBE_BATCH)
-        num_experts, top_k = scenario.num_experts, scenario.top_k
-        if num_experts % n_npus:
-            per_npu = max(1, num_experts // n_npus)
-            num_experts = per_npu * n_npus
-            top_k = min(top_k, num_experts)
-        sim = MultiWriteSimulator(scenario.topo)
-        routing = make_routing(probe_batch, n_npus, num_experts, top_k,
-                               seed=scenario.seed, skew=scenario.skew)
-        fn = combine_multiwrite if multiwrite else combine_unicast
-        fn(sim, routing, plan_ir.PROBE_TOKEN_BYTES)
-        from .latency_model import RELAY_SETUP_S
-        ledger = plan_ir.Ledger.from_sim(
-            sim, stages=max(1, int(microbatch)),
-            alpha_extra_s=RELAY_SETUP_S if multiwrite else 0.0)
-        if multiwrite:
-            # the combine relay reduces + forwards in SOFTWARE, same AICPU
-            # data plane as the dispatch relay (§6.4): its reduced-partial
-            # egress serializes through one engine
-            ledger = dataclasses.replace(
-                ledger, engine_serial=dict(sim.relay_tx_bytes))
-        probe_bytes = probe_batch * plan_ir.PROBE_TOKEN_BYTES
-        return ledger.scaled(
-            plan_ir.probe_scale(batch * scenario.token_bytes, probe_bytes))
-    return simulate
+    return _simulate_moe("combine", multiwrite)
 
 
 def _combine_kwargs(scheme: str):
@@ -619,12 +630,12 @@ def _combine_kwargs(scheme: str):
 
 plan_ir.register_plan(plan_ir.CollectivePlan(
     name="unicast", op="combine",
-    knobs={"microbatch": (1,)},
+    knobs={"microbatch": MICROBATCH_GRID},
     simulate_fn=_simulate_combine(multiwrite=False),
     kwargs_fn=_combine_kwargs("baseline")))
 plan_ir.register_plan(plan_ir.CollectivePlan(
     name="multiwrite", op="combine",
-    knobs={"microbatch": (1,)},
+    knobs={"microbatch": MICROBATCH_GRID},
     simulate_fn=_simulate_combine(multiwrite=True),
     kwargs_fn=_combine_kwargs("hierarchical")))
 

@@ -62,6 +62,10 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 # Named sharding/schedule variants (pctx overrides).  "mw" is the
 # paper-faithful default; the rest are §Perf hillclimb levers.
+# moe_microbatch="plan" derives the pipeline chunk count G from the
+# planner's overlap-aware dispatch decision for the CELL's workload
+# (batch, fabric, modeled expert compute) instead of a hard-coded
+# preset — the knob the pipelined scoring mode genuinely tunes.
 VARIANTS = {
     "mw": {},                                   # MultiWrite hierarchical EP
     "auto": {"plan_policy": "auto"},            # planner-chosen schemes
@@ -71,11 +75,11 @@ VARIANTS = {
     "nofsdp": {"fsdp": False},                  # pure DP (replicated params)
     # hillclimb combos (§Perf):
     "mwopt": {"moe_deferred_tp_reduce": True,   # deferred expert-TP psum
-              "moe_microbatch": 4},             # + dispatch microbatching
+              "moe_microbatch": "plan"},        # + planned pipeline chunks
     "mwdefer": {"moe_deferred_tp_reduce": True},
-    "mwmicro": {"moe_microbatch": 4},
+    "mwmicro": {"moe_microbatch": "plan"},
     "baseopt": {"moe_scheme": "baseline",
-                "moe_deferred_tp_reduce": True, "moe_microbatch": 4},
+                "moe_deferred_tp_reduce": True, "moe_microbatch": "plan"},
 }
 
 # optimizer-moment dtype per variant (memory lever for the 1T cell)
@@ -248,28 +252,37 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
         cal_store = resolve_store(calibration)
     cfg = get_config(arch)
     out = {"policy": pctx.plan_policy}
-    tokens = shape.global_batch * (shape.seq_len
-                                   if shape.kind in ("train", "prefill")
-                                   else 1)
-    n_local = max(1, tokens // (pctx.num_pods * pctx.data_size))
+    n_local = _cell_tokens_per_rank(shape, pctx)
+    cell_compute_s = _cell_compute_s(cfg, shape, pctx)
     if cfg.is_moe:
-        use_pod, _ = pctx.ep_ranks(cfg.num_experts)
-        ep_kw = dict(num_pods=pctx.num_pods if use_pod else 1,
-                     ep_per_pod=pctx.data_size,
-                     num_experts=cfg.num_experts, top_k=cfg.top_k,
-                     tokens_per_rank=n_local, token_bytes=cfg.d_model * 2)
+        ep_kw = _cell_ep_kw(cfg, shape, pctx)
+        compute_s = cell_compute_s
         d = pctx.moe_dispatch_plan(cfg.num_experts, cfg.top_k,
                                    tokens_per_rank=n_local,
-                                   token_bytes=cfg.d_model * 2)
+                                   token_bytes=cfg.d_model * 2,
+                                   compute_s=compute_s)
         if d is None:  # fixed policy: still report what auto would pick
             d = pl.moe_dispatch_decision(**ep_kw, topo=pctx.fabric)
         out["moe_dispatch"] = d.report()
         dc = pctx.moe_combine_plan(cfg.num_experts, cfg.top_k,
                                    tokens_per_rank=n_local,
-                                   token_bytes=cfg.d_model * 2)
+                                   token_bytes=cfg.d_model * 2,
+                                   compute_s=compute_s)
         if dc is None:
             dc = pl.moe_combine_decision(**ep_kw, topo=pctx.fabric)
         out["moe_combine"] = dc.report()
+        # the microbatch this cell EXECUTES (pctx knob — planner-derived
+        # for the "plan" presets; under auto the decision's G clamped to
+        # a divisor of the local token count, exactly as moe_ffn runs
+        # it) next to the planner's own pick, so preset/decision drift
+        # is visible in the table instead of silently baked in
+        g_knob = (d.microbatch if pctx.plan_policy == "auto"
+                  else int(pctx.moe_microbatch))
+        out["moe_microbatch"] = {
+            "executed": max(1, math.gcd(g_knob, n_local)),
+            "planned": d.microbatch,
+            "compute_s": compute_s,
+        }
     # Reference decision on the paper's §3.1 fixture (8-NPU split-TP full
     # mesh) at this cell's per-chip activation fragment — a what-if the
     # table carries alongside every cell, NOT a collective the traced
@@ -289,11 +302,13 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
             cell["dispatch"] = pl.default_planner().choose(
                 "dispatch", n_local * cfg.d_model * 2, ftopo,
                 num_experts=cfg.num_experts, top_k=cfg.top_k,
-                token_bytes=cfg.d_model * 2).report()
+                token_bytes=cfg.d_model * 2,
+                compute_s=cell_compute_s).report()
             cell["combine"] = pl.default_planner().choose(
                 "combine", n_local * cfg.d_model * 2, ftopo,
                 num_experts=cfg.num_experts, top_k=cfg.top_k,
-                token_bytes=cfg.d_model * 2).report()
+                token_bytes=cfg.d_model * 2,
+                compute_s=cell_compute_s).report()
         # calibration what-if: the same fabric cell under the measured
         # (fitted) hardware model from the --calibration store
         if cal_store is not None:
@@ -306,11 +321,13 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
                 cal["dispatch"] = pl.default_planner().choose(
                     "dispatch", n_local * cfg.d_model * 2, ftopo, hw_cal,
                     num_experts=cfg.num_experts, top_k=cfg.top_k,
-                    token_bytes=cfg.d_model * 2).report()
+                    token_bytes=cfg.d_model * 2,
+                    compute_s=cell_compute_s).report()
                 cal["combine"] = pl.default_planner().choose(
                     "combine", n_local * cfg.d_model * 2, ftopo, hw_cal,
                     num_experts=cfg.num_experts, top_k=cfg.top_k,
-                    token_bytes=cfg.d_model * 2).report()
+                    token_bytes=cfg.d_model * 2,
+                    compute_s=cell_compute_s).report()
             cell["calibrated"] = cal
         out["fabrics"][fname] = cell
     if cal_store is not None:
@@ -320,13 +337,66 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
     return out
 
 
-def _cell_pctx(shape: ShapeSpec, multi_pod: bool, variant: str):
+def _cell_tokens_per_rank(shape: ShapeSpec, pctx) -> int:
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    return max(1, tokens // (pctx.num_pods * pctx.data_size))
+
+
+def _cell_ep_kw(cfg, shape: ShapeSpec, pctx) -> dict:
+    """The ONE assembly of this cell's EP dispatch/combine decision
+    kwargs, shared by the "plan" preset derivation and the cell report —
+    so the G a preset executes is always derived from the same decision
+    the report displays as 'planned'."""
+    use_pod, _ = pctx.ep_ranks(cfg.num_experts)
+    return dict(num_pods=pctx.num_pods if use_pod else 1,
+                ep_per_pod=pctx.data_size,
+                num_experts=cfg.num_experts, top_k=cfg.top_k,
+                tokens_per_rank=_cell_tokens_per_rank(shape, pctx),
+                token_bytes=cfg.d_model * 2,
+                compute_s=_cell_compute_s(cfg, shape, pctx))
+
+
+def _cell_compute_s(cfg, shape: ShapeSpec, pctx) -> float:
+    """Modeled per-rank expert-FFN time of this cell — the overlap
+    context the planner's pipelined scoring mode prices chunked
+    dispatch/combine against."""
+    if not cfg.is_moe:
+        return 0.0
+    from repro.core.latency_model import moe_overlap_compute_s
+    return moe_overlap_compute_s(
+        _cell_tokens_per_rank(shape, pctx), cfg.top_k, cfg.d_model,
+        cfg.expert_d_ff, tp=pctx.model_size)
+
+
+def _planned_microbatch(arch: str, shape: ShapeSpec, pctx) -> int:
+    """Derive the moe_microbatch preset from the planner's overlap-aware
+    dispatch decision for this cell (the 'mwmicro' drift fix: the old
+    presets hard-coded G=4, a value the planner never chose)."""
+    cfg = get_config(arch)
+    if not cfg.is_moe:
+        return 1
+    from repro.core import planner as pl
+    ep_kw = _cell_ep_kw(cfg, shape, pctx)
+    d = pl.moe_dispatch_decision(**ep_kw, topo=pctx.fabric)
+    return max(1, math.gcd(d.microbatch, ep_kw["tokens_per_rank"]))
+
+
+def _cell_pctx(arch: str, shape: ShapeSpec, multi_pod: bool, variant: str):
     pctx_kw = dict(VARIANTS[variant])
     if shape.kind != "train":
         # serving: replicate dense params over data (classic TP serving);
         # MoE experts stay EP-sharded via moe_specs regardless.
         pctx_kw.setdefault("fsdp", False)
-    return make_pctx(multi_pod=multi_pod, **pctx_kw)
+    planned_g = pctx_kw.get("moe_microbatch") == "plan"
+    if planned_g:
+        pctx_kw.pop("moe_microbatch")   # integer presets pass through
+    pctx = make_pctx(multi_pod=multi_pod, **pctx_kw)
+    if planned_g:
+        pctx = dataclasses.replace(
+            pctx, moe_microbatch=_planned_microbatch(arch, shape, pctx))
+    return pctx
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
@@ -338,7 +408,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "mesh": "multi" if multi_pod else "single",
                 "variant": variant, "skipped": skip}
     shape = SHAPES[shape_name]
-    pctx = _cell_pctx(shape, multi_pod, variant)
+    pctx = _cell_pctx(arch, shape, multi_pod, variant)
     t0 = time.monotonic()
     kind, fn, args = input_specs(arch, shape_name, pctx,
                                  opt_dtype=VARIANT_OPT_DTYPE.get(variant))
@@ -444,6 +514,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                       f"predicted={pr['predicted_us']:.1f}us "
                       f"vs baseline={pr['baseline_us']:.1f}us "
                       f"({pr['speedup_pct']:+.1f}%)")
+        mb = result["planner"].get("moe_microbatch")
+        if mb:
+            print(f"  planner[microbatch]: executed={mb['executed']} "
+                  f"planned={mb['planned']}")
     return result
 
 
@@ -475,7 +549,7 @@ def run_and_save(arch, shape_name, multi_pod, variant="mw",
         cached = set(result.get("planner", {}).get("fabrics", {}))
         if "planner" in result and (cached != set(fabrics or ())
                                     or calibration is not None):
-            pctx = _cell_pctx(SHAPES[shape_name], multi_pod, variant)
+            pctx = _cell_pctx(arch, SHAPES[shape_name], multi_pod, variant)
             result["planner"] = planner_cell_report(
                 arch, SHAPES[shape_name], pctx, fabrics=fabrics,
                 calibration=calibration)

@@ -110,24 +110,40 @@ def main(argv=None):
             # Planner-selected dispatch AND combine plans for this
             # workload (the same decisions moe_ffn consumes at trace time
             # under "auto" — the two halves are planned independently).
+            from repro.core.latency_model import moe_overlap_compute_s
             n_local = (batch * seq) // (pctx.num_pods * pctx.data_size)
+            # overlap context: the modeled expert-FFN time the pipelined
+            # scoring mode hides chunked dispatch/combine behind — the
+            # same estimate moe_ffn derives at trace time
+            compute_s = moe_overlap_compute_s(
+                n_local, cfg.top_k, cfg.d_model, cfg.expert_d_ff,
+                tp=pctx.model_size)
             # token_bytes matches the bf16 activations built below; the
             # authoritative decision is the one moe_ffn re-derives from
             # the live dtype at trace time (same LRU cache entry here).
             decision = pctx.moe_dispatch_plan(
                 cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
-                token_bytes=cfg.d_model * 2)
+                token_bytes=cfg.d_model * 2, compute_s=compute_s)
             if decision is not None:
                 logging.info("planner %s", decision.summary())
+                if decision.microbatch > 1:
+                    logging.info(
+                        "planner pipelined dispatch: G=%d chunks "
+                        "(serial %.1fus -> %.1fus predicted)",
+                        decision.microbatch,
+                        decision.predicted_serial_s * 1e6,
+                        decision.predicted_s * 1e6)
                 combine = pctx.moe_combine_plan(
                     cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
-                    token_bytes=cfg.d_model * 2)
+                    token_bytes=cfg.d_model * 2, compute_s=compute_s)
                 if combine is not None:
                     logging.info("planner %s", combine.summary())
             else:
-                logging.info("planner fixed: moe_scheme=%s moe_combine=%s",
+                logging.info("planner fixed: moe_scheme=%s moe_combine=%s "
+                             "moe_microbatch=%d",
                              pctx.moe_scheme,
-                             pctx.moe_combine or pctx.moe_scheme)
+                             pctx.moe_combine or pctx.moe_scheme,
+                             pctx.moe_microbatch)
 
     monitor = None
     probe = None

@@ -17,7 +17,12 @@ ablation.  The COMBINE path is resolved independently through the
 planner's "combine" op (``pctx.resolve_combine_scheme``): a hierarchical
 dispatch may return via relay-reduced partials (hierarchical_combine) or
 individual partials (hierarchical_combine_unicast), whichever the return
-path's own ledger scores faster on the active fabric.
+path's own ledger scores faster on the active fabric.  The MICROBATCH
+knob is planner-driven too: under "auto" the pipelined scoring mode
+(overlap-aware ledgers, ``core.latency_model.score_ledger``) picks the
+chunk count G, and G > 1 runs the double-buffered pipeline below —
+dispatch of chunk k+1 overlaps expert FFN of chunk k and combine of
+chunk k-1, bit-exact vs the G == 1 trace.
 
 EP placement: EP spans (pod, data) when the arch has enough experts
 (kimi-k2: 384 experts over 32 EP ranks — the paper's large-EP regime);
@@ -158,22 +163,39 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
     n_local = (b * s) // (pctx.num_pods * pctx.data_size)
     dcfg = balanced_capacities(n_local, cfg.top_k, p, dd, per_rank,
                                capacity_factor)
-    # Dispatch scheme: planner-chosen from (payload, topology) under
+    # Dispatch scheme AND pipeline chunk count: planner-chosen from
+    # (payload, topology, modeled expert-FFN compute) under
     # plan_policy="auto" (§5.2 dynamic workflow — decode traces pick the
     # unicast plan at small batch, prefill/train pick MultiWrite past the
-    # crossover), or the declared moe_scheme knob under "fixed".
+    # crossover, and the pipelined scoring mode picks the microbatch G
+    # where overlapping dispatch/compute/combine chunks beats the
+    # per-chunk launch alpha), or the declared moe_scheme/moe_microbatch
+    # knobs under "fixed".
     # The COMBINE (return path) is resolved independently: its redundancy
     # is spread over the holders' rails, so its crossover sits elsewhere
     # (and the fabric may be asymmetric).  The baseline dispatch has no
     # relay to reduce at, so its return path is always unicast.
-    scheme = pctx.resolve_moe_scheme(
+    from repro.core.latency_model import moe_overlap_compute_s
+    compute_s = moe_overlap_compute_s(n_local, cfg.top_k, d,
+                                      params["w1"].shape[-1],
+                                      tp=pctx.model_size)
+    dispatch_kw = pctx.resolve_moe_dispatch(
         cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
-        token_bytes=d * x.dtype.itemsize)
+        token_bytes=d * x.dtype.itemsize, compute_s=compute_s)
+    scheme = dispatch_kw["moe_scheme"]
+    # the chosen G must divide the local token count; gcd clamps it to
+    # the largest divisor <= G (pow-2 grids always divide pow-2 batches)
+    microbatch = math.gcd(max(1, int(dispatch_kw.get("microbatch", 1))),
+                          n_local) or 1
     combine_scheme = "baseline"
     if scheme == "hierarchical":
+        # the combine runs inside the SAME chunk pipeline as dispatch,
+        # so its scheme is compared at the executed G — not at a G of
+        # its own that the pipeline never honors
         combine_scheme = pctx.resolve_combine_scheme(
             cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
-            token_bytes=d * x.dtype.itemsize)
+            token_bytes=d * x.dtype.itemsize, compute_s=compute_s,
+            microbatch=microbatch)
     if scheme == "baseline":
         dcfg = unicast_capacities(dcfg, n_local, cfg.top_k, p * dd,
                                   per_rank, capacity_factor)
@@ -185,38 +207,67 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
     expert_axis = (None if pctx.moe_deferred_tp_reduce
                    else pctx.model_axis)
 
-    def one_chunk(tok, router, w1, w3, w2):
+    # The chunk pipeline is split at the dispatch/compute boundary:
+    # ``dispatch_chunk`` routes + issues the dispatch collectives,
+    # ``finish_chunk`` runs the expert FFN and the combine.  The
+    # pipelined ``inner`` below issues the NEXT chunk's dispatch before
+    # finishing the previous one, so the dispatch collectives of chunk
+    # k+1 have no data dependency on the FFN/combine of chunk k and the
+    # compiler overlaps them (double buffering: one chunk in flight).
+
+    def dispatch_chunk(tok, router, w1, w3, w2):
         logits = tok.astype(jnp.float32) @ router
         gates, ids = cl.route_topk(logits, cfg.top_k)
         aux = load_balance_loss(logits, ids, cfg.num_experts)
         aux = jax.lax.pmean(aux, dp_spec)
+        dispatch_fn = (cl.hierarchical_dispatch if scheme == "hierarchical"
+                       else cl.baseline_dispatch)
+        exp_tok, exp_gate, st = dispatch_fn(tok, ids, gates, dcfg, epmesh)
+        return (exp_tok, exp_gate, st), aux
+
+    def finish_chunk(pack, w1, w3, w2, out_dtype):
+        exp_tok, exp_gate, st = pack
+        exp_out = _expert_ffn(w1, w3, w2, exp_tok, cfg.act, expert_axis)
         if scheme == "hierarchical":
-            exp_tok, exp_gate, st = cl.hierarchical_dispatch(
-                tok, ids, gates, dcfg, epmesh)
-            exp_out = _expert_ffn(w1, w3, w2, exp_tok, cfg.act, expert_axis)
             combine_fn = (cl.hierarchical_combine
                           if combine_scheme == "hierarchical"
                           else cl.hierarchical_combine_unicast)
-            out = combine_fn(exp_out, exp_gate, st)
         else:
-            exp_tok, exp_gate, st = cl.baseline_dispatch(
-                tok, ids, gates, dcfg, epmesh)
-            exp_out = _expert_ffn(w1, w3, w2, exp_tok, cfg.act, expert_axis)
-            out = cl.baseline_combine(exp_out, exp_gate, st)
+            combine_fn = cl.baseline_combine
+        out = combine_fn(exp_out, exp_gate, st)
         if pctx.moe_deferred_tp_reduce:
             out = jax.lax.psum(out, pctx.model_axis)
-        return out.astype(tok.dtype), aux
+        return out.astype(out_dtype)
+
+    def one_chunk(tok, router, w1, w3, w2):
+        pack, aux = dispatch_chunk(tok, router, w1, w3, w2)
+        return finish_chunk(pack, w1, w3, w2, tok.dtype), aux
 
     def inner(tok, router, w1, w3, w2):
-        g = pctx.moe_microbatch
+        g = microbatch
         if g <= 1:
             return one_chunk(tok, router, w1, w3, w2)
         n_loc, h = tok.shape
         assert n_loc % g == 0, (n_loc, g)
         chunks = tok.reshape(g, n_loc // g, h)
-        out, aux = jax.lax.map(
-            lambda c: one_chunk(c, router, w1, w3, w2), chunks)
-        return out.reshape(n_loc, h), jnp.mean(aux)
+        # software-pipelined chunk loop (double-buffered): the scan body
+        # dispatches chunk k+1 FIRST, then finishes chunk k — per-chunk
+        # results are identical to the serial loop (bit-exact), only the
+        # issue order changes, which is what lets the dispatch traffic
+        # hide behind the previous chunk's expert FFN + combine.
+        pack0, aux0 = dispatch_chunk(chunks[0], router, w1, w3, w2)
+
+        def body(carry, tok_next):
+            pack_next, aux_next = dispatch_chunk(tok_next, router,
+                                                 w1, w3, w2)
+            out_prev = finish_chunk(carry, w1, w3, w2, tok.dtype)
+            return pack_next, (out_prev, aux_next)
+
+        pack_last, (outs, auxs) = jax.lax.scan(body, pack0, chunks[1:])
+        out_last = finish_chunk(pack_last, w1, w3, w2, tok.dtype)
+        out = jnp.concatenate([outs.reshape(n_loc - n_loc // g, h),
+                               out_last], axis=0)
+        return out, (aux0 + jnp.sum(auxs)) / g
 
     out, aux = shard_map(
         inner, mesh=pctx.mesh,

@@ -59,8 +59,14 @@ class ParallelContext:
     moe_deferred_tp_reduce: bool = False  # move the expert row-parallel
     #   psum ([E_l, Ce, D] per layer) through the LINEAR combine tree to a
     #   single [N, D] psum at the end — ~Ce*E_l/N x fewer model-axis bytes
-    moe_microbatch: int = 1           # split dispatch into G chunks
-    #   (scan) — dispatch buffer memory / G
+    moe_microbatch: int = 1           # split dispatch into G chunks,
+    #   double-buffered: dispatch of chunk k+1 overlaps expert FFN of
+    #   chunk k and combine of chunk k-1 — a latency lever AND a memory
+    #   lever (peak dispatch buffers ~2/G of the unchunked size: the
+    #   pipeline keeps TWO chunks in flight, vs 1/G for the old serial
+    #   chunk loop).  Under plan_policy="auto" the planner's microbatch
+    #   knob overrides this — the pipelined scoring mode picks the G
+    #   where the overlap win beats the per-chunk alpha.
 
     # -- derived -------------------------------------------------------------
     @property
@@ -105,11 +111,15 @@ class ParallelContext:
         return topo, hw
 
     def moe_dispatch_plan(self, num_experts: int, top_k: int,
-                          tokens_per_rank: int, token_bytes: int):
+                          tokens_per_rank: int, token_bytes: int,
+                          compute_s: float = 0.0):
         """Planner decision for an MoE dispatch on this mesh (or on the
         explicit ``fabric``), or ``None`` when ``plan_policy`` is "fixed"
         (the explicit ``moe_scheme`` knob applies).  Called at trace
-        time; decisions are LRU-cached on (topology, payload bucket)."""
+        time; decisions are LRU-cached on (topology, payload bucket).
+        ``compute_s > 0`` (the modeled expert-FFN time) enables the
+        pipelined scoring mode — the decision's ``microbatch`` knob can
+        then come back > 1."""
         if self.plan_policy != "auto":
             return None
         from repro.core.planner import moe_dispatch_decision
@@ -120,10 +130,11 @@ class ParallelContext:
             ep_per_pod=self.data_size,
             num_experts=num_experts, top_k=top_k,
             tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
-            topo=topo, hw=hw, skew=self.moe_skew)
+            topo=topo, hw=hw, skew=self.moe_skew, compute_s=compute_s)
 
     def moe_combine_plan(self, num_experts: int, top_k: int,
-                         tokens_per_rank: int, token_bytes: int):
+                         tokens_per_rank: int, token_bytes: int,
+                         compute_s: float = 0.0):
         """Planner decision for the MoE *combine* (return path), planned
         independently of dispatch — the return redundancy is spread over
         the holders' rails and may face asymmetric bandwidth.  ``None``
@@ -138,31 +149,65 @@ class ParallelContext:
             ep_per_pod=self.data_size,
             num_experts=num_experts, top_k=top_k,
             tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
-            topo=topo, hw=hw, skew=self.moe_skew)
+            topo=topo, hw=hw, skew=self.moe_skew, compute_s=compute_s)
+
+    def resolve_moe_dispatch(self, num_experts: int, top_k: int,
+                             tokens_per_rank: int, token_bytes: int,
+                             compute_s: float = 0.0) -> dict:
+        """The dispatch configuration moe_ffn executes:
+        ``{"moe_scheme": ..., "microbatch": G}`` — planner-chosen under
+        ``plan_policy="auto"`` (scheme AND pipeline chunk count from one
+        sweep), the declared ``moe_scheme``/``moe_microbatch`` knobs
+        otherwise."""
+        decision = self.moe_dispatch_plan(num_experts, top_k,
+                                          tokens_per_rank, token_bytes,
+                                          compute_s=compute_s)
+        if decision is None:
+            return {"moe_scheme": self.moe_scheme,
+                    "microbatch": max(1, int(self.moe_microbatch))}
+        return dict(decision.shard_map_kwargs)
 
     def resolve_moe_scheme(self, num_experts: int, top_k: int,
-                           tokens_per_rank: int, token_bytes: int) -> str:
+                           tokens_per_rank: int, token_bytes: int,
+                           compute_s: float = 0.0) -> str:
         """The dispatch scheme moe_ffn executes: planner-chosen under
         ``plan_policy="auto"``, the declared knob otherwise."""
-        decision = self.moe_dispatch_plan(num_experts, top_k,
-                                          tokens_per_rank, token_bytes)
-        if decision is None:
-            return self.moe_scheme
-        return decision.shard_map_kwargs["moe_scheme"]
+        return self.resolve_moe_dispatch(
+            num_experts, top_k, tokens_per_rank, token_bytes,
+            compute_s=compute_s)["moe_scheme"]
 
     def resolve_combine_scheme(self, num_experts: int, top_k: int,
-                               tokens_per_rank: int, token_bytes: int) -> str:
+                               tokens_per_rank: int, token_bytes: int,
+                               compute_s: float = 0.0,
+                               microbatch: Optional[int] = None) -> str:
         """The combine (return-path) scheme moe_ffn executes:
         planner-chosen under ``plan_policy="auto"`` (the "combine" op,
         resolved independently of dispatch), else the declared
-        ``moe_combine`` knob, defaulting to following ``moe_scheme``."""
+        ``moe_combine`` knob, defaulting to following ``moe_scheme``.
+
+        ``microbatch`` constrains the comparison to the pipeline depth
+        the layer actually RUNS (moe_ffn chunks the whole pipeline at
+        the dispatch decision's G): the scheme is chosen among the
+        combine candidates at that G, not at a G the execution never
+        honors."""
         decision = self.moe_combine_plan(num_experts, top_k,
-                                         tokens_per_rank, token_bytes)
+                                         tokens_per_rank, token_bytes,
+                                         compute_s=compute_s)
         if decision is None:
             if self.moe_combine is not None:
                 return self.moe_combine
             return self.moe_scheme
-        return decision.shard_map_kwargs["moe_combine"]
+        if microbatch is None:
+            return decision.shard_map_kwargs["moe_combine"]
+        from repro.core import plan as plan_ir
+        g = max(1, int(microbatch))
+        at_g = [(t, name) for name, kn, t in decision.candidates
+                if dict(kn).get("microbatch", 1) == g]
+        if not at_g:                   # G outside the grid: unconstrained
+            return decision.shard_map_kwargs["moe_combine"]
+        best_name = min(at_g)[1]
+        return plan_ir.get_plan("combine", best_name).shard_map_kwargs(
+            microbatch=g)["moe_combine"]
 
 
 def shard(x, pctx: Optional[ParallelContext], *spec):

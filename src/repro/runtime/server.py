@@ -74,11 +74,20 @@ class ServeEngine:
             out["calibration"] = self.monitor.report()
         if self.pctx is None or not getattr(mcfg, "is_moe", False):
             return out
+        from repro.core.latency_model import moe_overlap_compute_s
         dp = self.pctx.num_pods * self.pctx.data_size
+        d_ff = getattr(mcfg, "expert_d_ff", mcfg.d_model)
         for phase, n_tokens in (("prefill", batch * prompt_len),
                                 ("decode", batch)):
-            kw = dict(tokens_per_rank=max(1, n_tokens // dp),
-                      token_bytes=mcfg.d_model * 2)
+            n_rank = max(1, n_tokens // dp)
+            kw = dict(tokens_per_rank=n_rank,
+                      token_bytes=mcfg.d_model * 2,
+                      # overlap context: pipelined scoring can pick a
+                      # microbatch G > 1 for the prefill dispatch while
+                      # decode stays unchunked (nothing to hide behind)
+                      compute_s=moe_overlap_compute_s(
+                          n_rank, mcfg.top_k, mcfg.d_model, d_ff,
+                          tp=self.pctx.model_size))
             dispatch = self.pctx.moe_dispatch_plan(
                 mcfg.num_experts, mcfg.top_k, **kw)
             if dispatch is None:

@@ -1,8 +1,13 @@
-"""Per-link-class alpha/beta regression over probe sweeps (the FIT).
+"""Per-link-group alpha/beta regression over probe sweeps (the FIT).
 
-Each probe record carries the per-class bottleneck bytes of the plan it
-timed (``class_bytes``).  For a link class ``c`` (``intra`` = in-server
-full mesh, ``inter`` = rails) the latency model predicts
+Each probe record carries the bottleneck bytes of the plan it timed at
+two granularities: per link CLASS (``class_bytes``: ``intra`` =
+in-server full mesh, ``inter`` = rails) and per directed link ROLE
+(``role_bytes``: one role per ordered server pair, ``inter:0>1`` vs
+``inter:1>0``) — the refinement that keeps an asymmetric fabric's
+forward and return rails on separate fit lines instead of collapsing
+both directions to one "inter" bandwidth.  For a link group ``c`` the
+latency model predicts
 
     t  =  alpha  +  x_c / bw_c  (+ small relay/engine terms)
 
@@ -35,10 +40,13 @@ from repro.core.latency_model import DEFAULT, HardwareModel
 from repro.core.plan import BASELINE_PLAN
 from repro.core.topology import Topology
 
-from .probe import link_class
+from .probe import link_class, link_role
 from .store import CalibrationStore, topo_key
 
 LINK_CLASSES = ("intra", "inter")
+# minimum points for the overlap-efficiency fit (decision-log rows with
+# a measured time AND a non-degenerate serial/ideal bracket)
+OVERLAP_MIN_POINTS = 3
 
 # confidence floor defaults: a fit below any of these is not trusted
 MIN_POINTS = 3
@@ -87,6 +95,12 @@ def _dominant_class(rec: dict) -> str:
     return rec.get("bottleneck_class", "intra")
 
 
+def _dominant_role(rec: dict) -> str:
+    """The directed link ROLE dominating this record; old-schema records
+    without role fields fall back to the class (== role for intra)."""
+    return rec.get("bottleneck_role", _dominant_class(rec))
+
+
 def is_fit_record(rec: dict) -> bool:
     """Only each op's BASELINE plan feeds the regression: baselines are
     pure-serialization probes (t = alpha + bytes/bw, at most a small
@@ -101,14 +115,18 @@ def fit_link_class(records: Sequence[dict], cls: str, *,
                    min_points: int = MIN_POINTS,
                    min_payloads: int = MIN_DISTINCT_PAYLOADS,
                    r2_floor: float = R2_FLOOR,
-                   rel_outlier: float = REL_OUTLIER) -> Optional[FitResult]:
-    """LS fit of one link class over the records that bottleneck on it.
-    Returns None when no record regresses against this class at all."""
+                   rel_outlier: float = REL_OUTLIER,
+                   bytes_field: str = "class_bytes",
+                   dominant_fn=None) -> Optional[FitResult]:
+    """LS fit of one link GROUP (class or directed role) over the
+    records that bottleneck on it.  Returns None when no record
+    regresses against this group at all."""
+    dominant_fn = dominant_fn or _dominant_class
     xs, ys, clean = [], [], []
     for r in records:
-        if _dominant_class(r) != cls:
+        if dominant_fn(r) != cls:
             continue
-        x = float(r.get("class_bytes", {}).get(cls, 0.0))
+        x = float(r.get(bytes_field, {}).get(cls, 0.0))
         if x <= 0:
             continue
         xs.append(x)
@@ -168,29 +186,113 @@ def fit_link_classes(records: Sequence[dict], *,
     return out
 
 
+def fit_link_roles(records: Sequence[dict], *,
+                   baseline_only: bool = True,
+                   **floor_kw) -> dict[str, FitResult]:
+    """Per-ROLE (directed) alpha/beta fits — the per-link refinement of
+    :func:`fit_link_classes`.  Each ordered server pair's rails regress
+    on their own line, so an asymmetric fabric (``2x8asym``: the return
+    rails run at half bandwidth) fits both directions separately instead
+    of collapsing them onto one "inter" slope.  The ``intra`` role is
+    identical to the class fit and skipped here."""
+    if baseline_only:
+        records = [r for r in records if is_fit_record(r)]
+    roles = sorted({_dominant_role(r) for r in records
+                    if r.get("role_bytes")} - {"intra"})
+    out = {}
+    for role in roles:
+        fit = fit_link_class(records, role, bytes_field="role_bytes",
+                             dominant_fn=_dominant_role, **floor_kw)
+        if fit is not None:
+            out[role] = fit
+    return out
+
+
 def fit_measurements(records: Sequence[dict], topo: Topology,
                      **floor_kw) -> tuple[dict, dict[str, FitResult]]:
     """(measurements, fits): the ``measurements`` dict feeds
     ``HardwareModel.recalibrated`` directly — per-link bandwidths for
-    every link of each TRUSTED class, plus ``alpha_base`` when a
-    relay-free sweep pinned the intercept.  Empty dict = nothing
-    trustworthy, keep the current model."""
+    every link of each TRUSTED group, plus ``alpha_base`` when a
+    relay-free sweep pinned the intercept.  Links take the directed
+    per-ROLE fit when one cleared the confidence floor (asymmetric
+    fabrics keep both rail directions distinct); the class-level fit is
+    the fallback for every link of a NOMINALLY-UNIFORM class, while a
+    heterogeneous class's unfitted directions keep their nominal
+    bandwidth (see the inline rationale).  The returned ``fits`` dict
+    carries both levels (classes under ``intra``/``inter``, roles under
+    ``inter:a>b``).  Empty dict = nothing trustworthy, keep the current
+    model."""
     fits = fit_link_classes(records, **floor_kw)
+    role_fits = fit_link_roles(records, **floor_kw)
+    # classes whose NOMINAL link bandwidths are uniform: their links are
+    # interchangeable a priori, so the class fit generalizes to every
+    # link (incl. directions that never bottlenecked — a uniform
+    # degradation on a 4x8 fabric must override ALL 96 inter links even
+    # though only a couple of directed roles ever set the max).  A
+    # heterogeneous class (asymmetric / mixed-rail fabric) is different:
+    # its class line is dominated by whichever direction bottlenecks,
+    # carries no evidence about the others, and would mislabel them —
+    # there only directed ROLE fits apply and unfitted links keep
+    # nominal.
+    nominal_by_class: dict[str, set] = {}
+    for key, ln in topo.links.items():
+        nominal_by_class.setdefault(link_class(topo, *key), set()).add(ln.bw)
     links = {}
     measurements: dict = {}
-    for cls, fit in fits.items():
-        if not fit.trusted:
-            continue
-        for key in topo.links:
-            if link_class(topo, *key) == cls:
-                links[key] = fit.bw
-        if cls == "intra" and fit.alpha_clean and fit.alpha_s > 0:
-            measurements["alpha_base"] = fit.alpha_s
+    for key in topo.links:
+        cls = link_class(topo, *key)
+        rf = role_fits.get(link_role(topo, *key))
+        cf = fits.get(cls)
+        if rf is not None and rf.trusted:
+            links[key] = rf.bw
+        elif cf is not None and cf.trusted and \
+                len(nominal_by_class[cls]) == 1:
+            links[key] = cf.bw
+    intra = fits.get("intra")
+    if (intra is not None and intra.trusted and intra.alpha_clean
+            and intra.alpha_s > 0):
+        measurements["alpha_base"] = intra.alpha_s
     if links:
         measurements["links"] = links
     elif "alpha_base" not in measurements:
         measurements = {}
-    return measurements, fits
+    return measurements, {**fits, **role_fits}
+
+
+def fit_overlap_eff(decision_rows: Sequence[dict], *,
+                    min_points: int = OVERLAP_MIN_POINTS,
+                    rel_span_floor: float = 0.02) -> Optional[float]:
+    """Achieved overlap efficiency from ``Planner.decision_log`` rows.
+
+    Every pipelined (``microbatch > 1``) decision is logged with its
+    serial (``overlap_eff=0``) and ideal (``overlap_eff=1``) score
+    endpoints; a measured execution time landing between them identifies
+    the efficiency the pipeline actually achieved:
+
+        eta  =  (serial - measured) / (serial - ideal)
+
+    clamped to [0, 1].  Rows without a measurement, or whose endpoints
+    coincide (non-pipelined decisions carry no overlap signal, gated by
+    ``rel_span_floor``), contribute nothing.  Returns the MEDIAN eta
+    over the contributing rows — robust to the odd straggler-polluted
+    measurement — or None below ``min_points`` (keep the current
+    calibration).  The result feeds ``HardwareModel.recalibrated`` as
+    the ``overlap_eff`` scalar, closing the loop the same way the link
+    bandwidth fits do."""
+    etas = []
+    for row in decision_rows:
+        m = row.get("measured_s")
+        s = row.get("predicted_serial_s")
+        i = row.get("predicted_ideal_s")
+        if m is None or not s or i is None:
+            continue
+        span = float(s) - float(i)
+        if span <= rel_span_floor * float(s):
+            continue
+        etas.append(min(1.0, max(0.0, (float(s) - float(m)) / span)))
+    if len(etas) < min_points:
+        return None
+    return float(np.median(etas))
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,7 @@ from repro.core.latency_model import HardwareModel
 from repro.core.planner import Planner
 from repro.core.topology import Topology
 
-from .fit import fit_measurements
+from .fit import fit_measurements, fit_overlap_eff
 from .probe import DEFAULT_OPS, probe_sweep
 from .store import CalibrationStore, topo_key
 
@@ -78,11 +78,19 @@ class DriftMonitor:
         dq.append(abs(m - p) / p)
         # close the planner's audit trail: if this probe timed the plan
         # of a logged (still-unmeasured) decision at the same payload
-        # bucket, fill its measured side
+        # bucket AND the same knob configuration, fill its measured
+        # side.  The knob match matters for pipelined rows: a default
+        # G=1 probe timing must never land in a G>1 decision row —
+        # fit_overlap_eff would misread the collective-only time as a
+        # pipelined end-to-end time and inflate overlap_eff toward 1.
+        rk = record.get("knobs")
+        rt = record.get("fabric_name")
         for row in reversed(self.planner.decision_log):
             if (row["op"] == record.get("op")
                     and row["plan"] == record.get("plan")
                     and row["payload_bytes"] == record.get("bucket")
+                    and (rk is None or dict(row.get("knobs", {})) == dict(rk))
+                    and (rt is None or row.get("topo") in (None, rt))
                     and row["measured_s"] is None):
                 row["measured_s"] = m
                 break
@@ -113,6 +121,12 @@ class DriftMonitor:
         records = list(
             self.store.latest_by_key(fabric=topo_key(self.topo)).values())
         measurements, fits = fit_measurements(records, self.topo)
+        # overlap-efficiency hook: measured pipelined decisions in the
+        # planner's log calibrate hw.overlap_eff alongside the link fits
+        eta = fit_overlap_eff(self.planner.decision_log)
+        if eta is not None:
+            measurements = dict(measurements)
+            measurements["overlap_eff"] = eta
         if not measurements and not force:
             return None
         new_hw = (self.base_hw.recalibrated(measurements, self.topo)
@@ -129,6 +143,7 @@ class DriftMonitor:
             "n_records": len(records),
             "fits": {cls: f.report() for cls, f in fits.items()},
             "measured_links": len(measurements.get("links", {})),
+            "overlap_eff": measurements.get("overlap_eff"),
         }
         self.events.append(event)
         self._last_recal_check = self.checks

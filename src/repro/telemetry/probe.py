@@ -56,15 +56,41 @@ def link_class(topo: Topology, src: int, dst: int) -> str:
             else "inter")
 
 
+def link_role(topo: Topology, src: int, dst: int) -> str:
+    """Directed fit ROLE of one link: ``intra``, or one role per ordered
+    server pair for rails (``inter:0>1`` vs ``inter:1>0``).  Roles are
+    the per-link refinement of :func:`link_class`: on an asymmetric
+    fabric like ``2x8asym`` the two rail directions carry different
+    bandwidths, and a class-level fit would collapse both onto one
+    "inter" line — per-role regression keeps each direction's slope."""
+    sa, sb = topo.server_of(src), topo.server_of(dst)
+    if sa == sb:
+        return "intra"
+    return f"inter:{sa}>{sb}"
+
+
+def _ledger_group_bytes(ledger: plan_ir.Ledger, group_fn) -> dict:
+    out: dict = {}
+    for (a, b), v in ledger.link_bytes.items():
+        g = group_fn(ledger.topo, a, b)
+        out[g] = max(out.get(g, 0.0), float(v))
+    return out
+
+
 def ledger_class_bytes(ledger: plan_ir.Ledger) -> dict:
     """Max per-link bytes per link class — the regressors the fitter
     uses (the bottleneck-link term of the latency model is a max, so the
     heaviest link of each class is the right x value)."""
     out = {"intra": 0.0, "inter": 0.0}
-    for (a, b), v in ledger.link_bytes.items():
-        c = link_class(ledger.topo, a, b)
-        out[c] = max(out[c], float(v))
+    out.update(_ledger_group_bytes(ledger, link_class))
     return out
+
+
+def ledger_role_bytes(ledger: plan_ir.Ledger) -> dict:
+    """Max per-link bytes per directed link ROLE (see :func:`link_role`)
+    — the per-direction regressors that keep asymmetric fabrics'
+    forward/return rails on separate fit lines."""
+    return _ledger_group_bytes(ledger, link_role)
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +323,9 @@ def probe_record(op: str, plan: plan_ir.CollectivePlan, payload_bytes: float,
         "measured_s": float(measured_s),
         "bottleneck_link": [int(bsrc), int(bdst)],
         "bottleneck_class": link_class(topo, bsrc, bdst),
+        "bottleneck_role": link_role(topo, bsrc, bdst),
         "class_bytes": cls_bytes,
+        "role_bytes": ledger_role_bytes(ledger),
         "stages": int(ledger.stages),
         "relayed": bool(ledger.relayed),
         "source": source,

@@ -221,6 +221,51 @@ def run_split_tp_layer_checks():
 
 
 # ===========================================================================
+# pipelined moe_ffn (microbatch G > 1, double-buffered) == serial G == 1
+# ===========================================================================
+
+def run_moe_pipeline_checks():
+    import dataclasses
+    import types
+
+    from repro.models.moe import init_moe, moe_ffn
+    from repro.parallel.context import ParallelContext
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = types.SimpleNamespace(num_experts=8, top_k=2, act="silu",
+                                moe_capacity=4.0)
+    d_model, f = 16, 32
+    params = init_moe(jax.random.key(0), d_model, f, cfg.num_experts)
+    rng = np.random.default_rng(5)
+    # b*s = 64 -> n_local = 16 per (pod, data) rank, divisible by G = 4
+    x = jnp.asarray(rng.normal(size=(4, 16, d_model)).astype(np.float32))
+    base = ParallelContext(mesh=mesh, pod_axis="pod", data_axis="data",
+                           model_axis="model", plan_policy="fixed")
+    # both dispatch schemes x both combine schemes (baseline dispatch has
+    # no relay to reduce at, so its return path is always unicast)
+    combos = [("hierarchical", "hierarchical"),
+              ("hierarchical", "baseline"),
+              ("baseline", "baseline")]
+    for scheme, combine in combos:
+        outs, auxs = {}, {}
+        for g in (1, 4):
+            pctx = dataclasses.replace(base, moe_scheme=scheme,
+                                       moe_combine=combine,
+                                       moe_microbatch=g)
+            with mesh:
+                out, aux = jax.jit(
+                    lambda xx, p=pctx: moe_ffn(params, xx, cfg, p))(x)
+            outs[g], auxs[g] = np.asarray(out), float(aux)
+        ok = np.array_equal(outs[1], outs[4])
+        err = float(np.max(np.abs(outs[1] - outs[4])))
+        check(f"moe_ffn pipelined G=4 bit-exact vs G=1 "
+              f"(dispatch={scheme}, combine={combine}, err={err:.1e})", ok)
+        check(f"moe_ffn pipelined aux finite "
+              f"(dispatch={scheme}, combine={combine})",
+              np.isfinite(auxs[4]) and np.isfinite(auxs[1]))
+
+
+# ===========================================================================
 # telemetry LiveProbe: every executable plan's lowering times on the mesh
 # ===========================================================================
 
@@ -303,6 +348,7 @@ if __name__ == "__main__":
     run_dispatch_checks("hierarchical_unicast_combine")
     run_dispatch_checks("baseline")
     run_capacity_checks()
+    run_moe_pipeline_checks()
     run_split_tp_layer_checks()
     run_split_tp_block_checks()
     run_live_probe_checks()

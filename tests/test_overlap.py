@@ -1,0 +1,314 @@
+"""Overlap-aware pipelined scoring (ISSUE 4).
+
+What is pinned here:
+
+  * the pipelined scoring MODE of ``score_ledger``: G-chunk overlap
+    ledgers pay ``max(stage) + (G-1)*bottleneck`` derated by
+    ``hw.overlap_eff`` instead of the serial ``G*sum``, with the
+    per-chunk alpha penalty that makes small G optimal;
+  * ``Planner.choose`` genuinely selecting ``microbatch > 1`` at
+    operating points where the overlap win beats the per-chunk alpha
+    (the ISSUE acceptance criterion), and staying at G == 1 both for
+    tiny batches and whenever no overlap context is given (so every
+    pre-overlap decision is unchanged);
+  * the decision cache keying on the compute bucket;
+  * the telemetry hook: ``fit_overlap_eff`` recovers an injected true
+    efficiency from measured ``Planner.decision_log`` rows, and the
+    recalibrated model moves subsequent G choices;
+  * ``ParallelContext.resolve_moe_dispatch`` threading (scheme AND G).
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import latency_model as lm
+from repro.core import plan as plan_ir
+from repro.core import planner as pl
+from repro.core.topology import two_server_cluster
+
+TOPO = two_server_cluster()
+TOKEN = lm.TOKEN_BYTES
+
+
+def compute_ctx(batch, top_k=8, d_model=7168, f_shard=2048):
+    return lm.expert_compute_time_s(batch, top_k, d_model, f_shard)
+
+
+def dispatch_ledger(batch, microbatch, compute_s=0.0):
+    scenario = plan_ir.DispatchScenario(topo=TOPO, compute_s=compute_s)
+    return plan_ir.get_plan("dispatch", "multiwrite").simulate(
+        scenario, batch * TOKEN, microbatch=microbatch)
+
+
+# ---------------------------------------------------------------------------
+# the scoring mode
+# ---------------------------------------------------------------------------
+
+class TestPipelinedScoring:
+    def test_no_overlap_context_g_never_wins(self):
+        """compute_s == 0: chunking only adds per-chunk alphas, so the
+        serial G == 1 score is optimal at every batch (the pre-overlap
+        behaviour, byte-for-byte)."""
+        for batch in (32, 512, 4096):
+            scores = [lm.score_ledger(dispatch_ledger(batch, g))
+                      for g in (1, 2, 4, 8)]
+            assert scores == sorted(scores)
+            assert scores[0] == pytest.approx(
+                scores[1] - lm.DEFAULT.alpha_base)
+
+    def test_overlap_beats_serial_past_crossover(self):
+        c = compute_ctx(2048)
+        serial = lm.score_ledger(dispatch_ledger(2048, 1, c))
+        piped = lm.score_ledger(dispatch_ledger(2048, 4, c))
+        assert piped < serial
+
+    def test_interpolation_endpoints(self):
+        """score(eta) moves linearly between the serial and ideal
+        endpoints; overlap_endpoints brackets every mid score."""
+        led = dispatch_ledger(1024, 4, compute_ctx(1024))
+        serial, ideal = lm.overlap_endpoints(led)
+        assert ideal < serial
+        mid = lm.score_ledger(
+            led, dataclasses.replace(lm.DEFAULT, overlap_eff=0.5))
+        assert mid == pytest.approx(0.5 * (serial + ideal))
+        assert lm.score_ledger(
+            led, dataclasses.replace(lm.DEFAULT, overlap_eff=0.0)) \
+            == pytest.approx(serial)
+
+    def test_ideal_pipeline_pays_bottleneck_stage(self):
+        """At eta == 1 and large G the score approaches
+        fixed + max(wire, compute) — the steady-state bottleneck stage —
+        from above (overlap can't hide the bigger stage)."""
+        c = compute_ctx(4096)
+        led = dispatch_ledger(4096, 8, c)
+        hw = dataclasses.replace(lm.DEFAULT, overlap_eff=1.0)
+        serial_1 = lm.score_ledger(dispatch_ledger(4096, 1, c), hw)
+        wire = serial_1 - lm.DEFAULT.alpha_base - c \
+            - dispatch_ledger(4096, 1, c).alpha_extra_s \
+            - lm.DEFAULT.alpha_hop
+        floor = max(wire, c)
+        assert floor < lm.score_ledger(led, hw) < serial_1
+
+    def test_serial_chunks_unchanged_without_overlap_flag(self):
+        """A stages > 1 ledger NOT marked overlap keeps the serial
+        G*alpha + wire formula (the old lax.map chunk loop)."""
+        led = dataclasses.replace(dispatch_ledger(512, 4), overlap=False)
+        assert lm.score_ledger(led) == pytest.approx(
+            lm.score_ledger(dispatch_ledger(512, 1))
+            + 3 * lm.DEFAULT.alpha_base)
+
+    def test_overlap_eff_in_fingerprint_and_recalibrated(self):
+        hw = lm.DEFAULT.recalibrated({"overlap_eff": 0.42})
+        assert hw.overlap_eff == 0.42
+        assert hw.fingerprint() != lm.DEFAULT.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# the planner picks G (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+
+class TestPlannerPicksG:
+    def test_choose_selects_microbatch_gt1(self):
+        """ACCEPTANCE: at a registered-fabric operating point with
+        overlap context the winning knob set carries microbatch > 1, and
+        the pipelined score beats the best serial candidate."""
+        planner = pl.Planner()
+        d = planner.choose("dispatch", 2048 * TOKEN, TOPO,
+                           token_bytes=TOKEN,
+                           compute_s=compute_ctx(2048))
+        assert d.microbatch > 1
+        serial_best = min(t for _, kn, t in d.candidates
+                          if dict(kn).get("microbatch", 1) == 1)
+        assert d.predicted_s < serial_best
+
+    def test_combine_also_picks_g(self):
+        planner = pl.Planner()
+        d = planner.choose("combine", 2048 * TOKEN, TOPO,
+                           token_bytes=TOKEN,
+                           compute_s=compute_ctx(2048))
+        assert d.microbatch > 1
+
+    def test_small_batch_stays_serial(self):
+        """The per-chunk alpha keeps tiny decode batches at G == 1 even
+        with overlap context."""
+        planner = pl.Planner()
+        d = planner.choose("dispatch", 8 * TOKEN, TOPO,
+                           token_bytes=TOKEN, compute_s=compute_ctx(8))
+        assert d.microbatch == 1
+
+    def test_no_context_decisions_unchanged(self):
+        """Without compute_s the widened grid never changes a decision:
+        G == 1 wins everywhere (pre-overlap planner behaviour)."""
+        planner = pl.Planner()
+        for batch in (8, 64, 1024, 4096):
+            d = planner.choose("dispatch", batch * TOKEN, TOPO,
+                               token_bytes=TOKEN)
+            assert d.microbatch == 1
+
+    def test_cache_keyed_on_compute_bucket(self):
+        planner = pl.Planner()
+        planner.choose("dispatch", 2048 * TOKEN, TOPO, token_bytes=TOKEN,
+                       compute_s=compute_ctx(2048))
+        misses = planner.cache_misses
+        # same bucket -> hit; an order-of-magnitude different compute ->
+        # new bucket -> fresh sweep
+        planner.choose("dispatch", 2048 * TOKEN, TOPO, token_bytes=TOKEN,
+                       compute_s=compute_ctx(2048) * 1.01)
+        assert planner.cache_misses == misses
+        planner.choose("dispatch", 2048 * TOKEN, TOPO, token_bytes=TOKEN,
+                       compute_s=compute_ctx(2048) * 10)
+        assert planner.cache_misses == misses + 1
+
+    def test_decision_carries_overlap_endpoints(self):
+        planner = pl.Planner()
+        d = planner.choose("dispatch", 2048 * TOKEN, TOPO,
+                           token_bytes=TOKEN,
+                           compute_s=compute_ctx(2048))
+        assert d.predicted_ideal_s < d.predicted_s < d.predicted_serial_s
+        row = planner.decision_log[-1]
+        assert row["predicted_serial_s"] == d.predicted_serial_s
+        assert row["predicted_ideal_s"] == d.predicted_ideal_s
+
+
+# ---------------------------------------------------------------------------
+# the telemetry hook (fit_overlap_eff closes the loop)
+# ---------------------------------------------------------------------------
+
+class TestOverlapFit:
+    def _measured_planner(self, true_eta):
+        from repro.telemetry import fit_overlap_eff
+        planner = pl.Planner()
+        n = 0
+        for batch in (512, 1024, 2048, 4096):
+            d = planner.choose("dispatch", batch * TOKEN, TOPO,
+                               token_bytes=TOKEN,
+                               compute_s=compute_ctx(batch))
+            if d.microbatch <= 1:
+                continue
+            measured = d.predicted_serial_s - true_eta * (
+                d.predicted_serial_s - d.predicted_ideal_s)
+            planner.note_measurement(d, measured)
+            n += 1
+        return planner, fit_overlap_eff(planner.decision_log), n
+
+    def test_fit_recovers_injected_eta(self):
+        for true_eta in (0.3, 0.6, 0.9):
+            _, eta, n = self._measured_planner(true_eta)
+            assert n >= 3
+            assert eta == pytest.approx(true_eta, abs=1e-9)
+
+    def test_fit_needs_enough_pipelined_rows(self):
+        from repro.telemetry import fit_overlap_eff
+        planner = pl.Planner()
+        # serial decisions only: endpoints coincide, no signal
+        for batch in (8, 16, 32, 64):
+            d = planner.choose("dispatch", batch * TOKEN, TOPO,
+                               token_bytes=TOKEN)
+            planner.note_measurement(d, d.predicted_s)
+        assert fit_overlap_eff(planner.decision_log) is None
+
+    def test_refit_moves_subsequent_g_choice(self):
+        """A fitted low efficiency (overlap barely works) must shrink or
+        kill the chosen G for the same workload — the closed loop."""
+        planner, eta, _ = self._measured_planner(0.05)
+        d_before = planner.choose("dispatch", 1024 * TOKEN, TOPO,
+                                  token_bytes=TOKEN,
+                                  compute_s=compute_ctx(1024))
+        planner.refresh_hardware(
+            planner.hw.recalibrated({"overlap_eff": eta}))
+        d_after = planner.choose("dispatch", 1024 * TOKEN, TOPO,
+                                 token_bytes=TOKEN,
+                                 compute_s=compute_ctx(1024))
+        assert d_after.microbatch < d_before.microbatch
+
+    def test_repeated_measurements_of_cached_decision_feed_fit(self):
+        """note_measurement's fallback rows (decision served from cache)
+        must carry the overlap endpoints too — steady-state training
+        measures ONE operating point repeatedly and that alone has to
+        reach OVERLAP_MIN_POINTS."""
+        from repro.telemetry import fit_overlap_eff
+        planner = pl.Planner()
+        true_eta = 0.55
+        d = planner.choose("dispatch", 2048 * TOKEN, TOPO,
+                           token_bytes=TOKEN, compute_s=compute_ctx(2048))
+        assert d.microbatch > 1
+        measured = d.predicted_serial_s - true_eta * (
+            d.predicted_serial_s - d.predicted_ideal_s)
+        for _ in range(4):                       # 1 fill + 3 fallback rows
+            planner.note_measurement(d, measured)
+        assert fit_overlap_eff(planner.decision_log) == pytest.approx(
+            true_eta, abs=1e-9)
+
+    def test_probe_timing_never_fills_pipelined_row(self):
+        """A default-knob (G == 1) probe record must not land in a G > 1
+        decision row: the collective-only time would masquerade as a
+        pipelined end-to-end time and drag overlap_eff toward 1."""
+        from repro.telemetry import CalibrationStore, DriftMonitor
+        planner = pl.Planner()
+        d = planner.choose("dispatch", 2048 * TOKEN, TOPO,
+                           token_bytes=TOKEN, compute_s=compute_ctx(2048))
+        assert d.microbatch > 1
+        monitor = DriftMonitor(planner, CalibrationStore(":memory:"), TOPO)
+        monitor.observe({"op": "dispatch", "plan": d.plan,
+                         "bucket": d.payload_bytes,
+                         "knobs": {"microbatch": 1},
+                         "predicted_s": d.predicted_ideal_s * 0.1,
+                         "measured_s": d.predicted_ideal_s * 0.1})
+        row = planner.decision_log[-1]
+        assert dict(row["knobs"])["microbatch"] == d.microbatch
+        assert row["measured_s"] is None
+
+    def test_monitor_recalibrate_merges_overlap_fit(self):
+        """DriftMonitor.recalibrate folds the decision-log efficiency
+        fit into the planner's hardware model alongside the link fits."""
+        from repro.telemetry import (CalibrationStore, DriftMonitor,
+                                     GroundTruth, SimProbe)
+        planner, _, _ = self._measured_planner(0.4)
+        store = CalibrationStore(":memory:")
+        monitor = DriftMonitor(planner, store, TOPO)
+        monitor.run_cycle(SimProbe(GroundTruth(noise=0.01)))
+        event = monitor.last_recalibration or monitor.recalibrate(
+            force=True)
+        assert event["overlap_eff"] == pytest.approx(0.4, abs=1e-9)
+        assert planner.hw.overlap_eff == pytest.approx(0.4, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# context threading (scheme AND G reach moe_ffn)
+# ---------------------------------------------------------------------------
+
+class TestContextThreading:
+    @pytest.fixture()
+    def pctx(self):
+        import jax
+
+        from repro.launch.mesh import make_test_mesh
+        from repro.parallel.context import ParallelContext
+        if len(jax.devices()) < 1:
+            pytest.skip("no devices")
+        mesh = make_test_mesh(shape=(1,), axes=("model",))
+        return ParallelContext(mesh=mesh, pod_axis=None, data_axis="model",
+                               model_axis="model", plan_policy="auto",
+                               fabric=TOPO)
+
+    def test_resolve_moe_dispatch_returns_scheme_and_g(self, pctx):
+        got = pctx.resolve_moe_dispatch(64, 8, tokens_per_rank=2048,
+                                        token_bytes=TOKEN,
+                                        compute_s=compute_ctx(2048))
+        assert got["moe_scheme"] in ("hierarchical", "baseline")
+        assert got["microbatch"] > 1
+
+    def test_fixed_policy_keeps_declared_knobs(self, pctx):
+        fixed = dataclasses.replace(pctx, plan_policy="fixed",
+                                    moe_scheme="baseline",
+                                    moe_microbatch=4)
+        got = fixed.resolve_moe_dispatch(64, 8, tokens_per_rank=2048,
+                                         token_bytes=TOKEN,
+                                         compute_s=compute_ctx(2048))
+        assert got == {"moe_scheme": "baseline", "microbatch": 4}
+
+    def test_no_context_resolution_stays_serial(self, pctx):
+        got = pctx.resolve_moe_dispatch(64, 8, tokens_per_rank=2048,
+                                        token_bytes=TOKEN)
+        assert got["microbatch"] == 1

@@ -414,6 +414,94 @@ class TestClosedLoop:
 # hot-expert (skewed) routing scenarios
 # ---------------------------------------------------------------------------
 
+class TestPerRoleFits:
+    """Per-link (directed ROLE) fits — the asymmetric-fabric debt item:
+    ``2x8asym`` must no longer collapse both rail directions to one
+    "inter" bandwidth."""
+
+    def test_asym_directions_fit_separately(self):
+        from repro.core.topology import get_fabric
+        from repro.telemetry import link_role
+        topo = get_fabric("2x8asym")        # return rails at half bw
+        records = probe_sweep(topo, SimProbe(GroundTruth(noise=0.005)))
+        meas, fits = fit_measurements(records, topo)
+        links = meas["links"]
+        rev = {bw for (a, b), bw in links.items()
+               if link_role(topo, a, b) == "inter:1>0"}
+        # the degraded (bottleneck) direction is identified near its
+        # true 12.5 GB/s ...
+        assert rev, f"no reverse-rail fits in {sorted(fits)}"
+        for bw in rev:
+            assert bw == pytest.approx(12.5e9, rel=0.1)
+        # ... and the forward rails do NOT inherit the slow line: the
+        # end-to-end times carry no evidence about the direction that
+        # never bottlenecks, so it keeps the nominal 25 GB/s (no
+        # override) instead of being mislabeled at ~12.5
+        fwd = [k for k in topo.links
+               if link_role(topo, *k) == "inter:0>1"]
+        assert fwd and all(k not in links for k in fwd)
+
+    def test_symmetric_fabric_fits_both_directions(self):
+        from repro.telemetry import link_role
+        records = healthy_records(noise=0.005)
+        meas, fits = fit_measurements(records, TOPO)
+        by_role = {}
+        for (a, b), bw in meas["links"].items():
+            by_role.setdefault(link_role(TOPO, a, b), []).append(bw)
+        for role in ("inter:0>1", "inter:1>0"):
+            assert role in by_role, sorted(by_role)
+            for bw in by_role[role]:
+                assert bw == pytest.approx(25e9, rel=0.1)
+
+    def test_role_records_and_fit_surface(self):
+        from repro.telemetry import fit_link_roles, ledger_role_bytes
+        records = healthy_records()
+        for r in records:
+            assert "bottleneck_role" in r and "role_bytes" in r
+        role_fits = fit_link_roles(records)
+        assert any(f.trusted for f in role_fits.values())
+        # ledger role bytes refine class bytes: the inter class max is
+        # the max over the inter roles
+        scenario = plan_ir.DispatchScenario(topo=TOPO)
+        led = plan_ir.get_plan("dispatch", "unicast").simulate(
+            scenario, 512 * lm.TOKEN_BYTES)
+        roles = ledger_role_bytes(led)
+        inter_roles = {k: v for k, v in roles.items() if k != "intra"}
+        assert inter_roles
+        from repro.telemetry import ledger_class_bytes
+        assert max(inter_roles.values()) == \
+            ledger_class_bytes(led)["inter"]
+
+    def test_uniform_class_degradation_overrides_all_links(self):
+        """On a nominally-UNIFORM fabric the class fit still generalizes
+        to every link — a 4x inter degradation on 4x8 must override all
+        96 inter links even though only a couple of directed roles ever
+        set the bottleneck (the closed-loop property must not regress on
+        >2-server fabrics)."""
+        from repro.core.topology import get_fabric
+        from repro.telemetry import link_class
+        topo = get_fabric("4x8")
+        truth = GroundTruth(noise=0.005).degraded(topo, 4.0)
+        records = probe_sweep(topo, SimProbe(truth))
+        meas, _ = fit_measurements(records, topo)
+        inter = [k for k in topo.links if link_class(topo, *k) == "inter"]
+        assert all(k in meas["links"] for k in inter)
+        for k in inter:
+            assert meas["links"][k] == pytest.approx(25e9 / 4, rel=0.1)
+
+    def test_old_schema_records_fall_back_to_class(self):
+        """Records without role fields (pre-role stores) still fit at
+        the class level and override every link of the class."""
+        records = healthy_records()
+        for r in records:
+            r.pop("bottleneck_role", None)
+            r.pop("role_bytes", None)
+        meas, _ = fit_measurements(records, TOPO)
+        inter = [k for k in TOPO.links
+                 if TOPO.server_of(k[0]) != TOPO.server_of(k[1])]
+        assert all(k in meas["links"] for k in inter)
+
+
 class TestSkewedRouting:
     def test_skew_concentrates_expert_traffic(self):
         flat = sch.make_routing(64, 16, 64, 8, seed=0)
