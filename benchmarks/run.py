@@ -439,6 +439,161 @@ def bench_overlap(smoke: bool = False):
     return rows
 
 
+def bench_program(smoke: bool = False):
+    """Joint whole-program planning vs the PR-4 dispatch-first path.
+
+    For each (fabric, batch) cell, two plans of the SAME MoE round trip:
+
+    * dispatch-first — the dispatch op sweeps alone, the pipeline runs
+      its G, the combine scheme is compared at that executed G (how
+      moe_ffn resolved before the ExecutionPlan redesign);
+    * joint — ``Planner.plan_program`` sweeps the (dispatch scheme) x
+      (combine scheme) x (shared G) product under the shared-pipeline
+      scorer (``score_pipeline``).
+
+    Both configurations are scored with the same combined model, so the
+    table shows exactly what joint planning buys: cells where a SMALLER
+    dispatch G (or a different scheme pair) wins on the combined score.
+
+    CI gates (also under ``--smoke``): the joint score must never lose
+    to dispatch-first; at least one cell must genuinely change the
+    (dispatch G, combine G) decision and strictly win; ExecutionPlan
+    fingerprints must be deterministic across fresh planners.  Full mode
+    emits results/BENCH_program.json.
+    """
+    import json
+    import os
+
+    from repro.core import latency_model as lm
+    from repro.core import plan as plan_ir
+    from repro.core import planner as pl
+    from repro.core.topology import get_fabric
+
+    top_k, d_model, f_shard = 8, 7168, 2048   # DeepSeek-class expert FFN
+    fabrics = ("2x8",) if smoke else ("2x8", "2x8@50", "2x8asym", "4x8")
+    batches = ((64, 256, 1024, 2048) if smoke
+               else (64, 128, 256, 512, 1024, 2048, 4096))
+
+    def scheme_of(plan_name):
+        return "hierarchical" if plan_name == "multiwrite" else "baseline"
+
+    def dispatch_first(planner, topo, batch, compute_s):
+        """The PR-4 resolution: dispatch alone, combine at its G."""
+        d = planner.choose("dispatch", batch * lm.TOKEN_BYTES, topo,
+                           token_bytes=lm.TOKEN_BYTES,
+                           compute_s=compute_s)
+        g = d.microbatch
+        c = planner.choose("combine", batch * lm.TOKEN_BYTES, topo,
+                           token_bytes=lm.TOKEN_BYTES,
+                           compute_s=compute_s)
+        c_name = min((t, name) for name, kn, t in c.candidates
+                     if dict(kn).get("microbatch", 1) == g)[1]
+        if d.plan == "unicast":
+            c_name = "unicast"             # executable pairing
+        scen_kw = dict(num_experts=64, top_k=top_k,
+                       token_bytes=lm.TOKEN_BYTES, skew=0.0,
+                       compute_s=compute_s)
+        bucket = pl.bucket_payload(batch * lm.TOKEN_BYTES)
+        ld = plan_ir.get_plan("dispatch", d.plan).simulate(
+            pl.Planner._scenario("dispatch", topo, scen_kw), bucket,
+            microbatch=g)
+        lc = plan_ir.get_plan("combine", c_name).simulate(
+            pl.Planner._scenario("combine", topo, scen_kw), bucket,
+            microbatch=g)
+        t = lm.score_pipeline((ld, lc), planner.hw)
+        return (d.plan, g, c_name), t
+
+    def joint_cell(planner, topo, batch, compute_s):
+        sites = plan_ir.moe_sites("bench", num_experts=64, top_k=top_k,
+                                  tokens_per_rank=batch,
+                                  token_bytes=lm.TOKEN_BYTES,
+                                  compute_s=compute_s)
+        eplan = planner.plan_program(
+            plan_ir.CollectiveProgram("bench", sites), topo)
+        return eplan, eplan.joint["bench/moe_dispatch"]
+
+    rows, table, failures, changed = [], [], [], 0
+    print("\n== bench_program: joint vs dispatch-first planning ==")
+    print(f"{'fabric':<9} {'batch':>6} {'dispatch-first':<28} "
+          f"{'joint':<28} {'first us':>9} {'joint us':>9} {'gain%':>6}")
+    for fname in fabrics:
+        topo = get_fabric(fname)
+        planner = pl.Planner()
+        for batch in batches:
+            compute_s = lm.expert_compute_time_s(batch, top_k, d_model,
+                                                 f_shard)
+            (dp, g1, cp), first_t = dispatch_first(planner, topo, batch,
+                                                   compute_s)
+            eplan, joint = joint_cell(planner, topo, batch, compute_s)
+            kw = joint.shard_map_kwargs
+            gj = joint.microbatch
+            pair_first = (scheme_of(dp), g1, scheme_of(cp), g1)
+            pair_joint = (kw["moe_scheme"], gj, kw["moe_combine"], gj)
+            gain = 100.0 * (1.0 - joint.predicted_s / first_t)
+            moved = pair_joint != pair_first
+            changed += moved
+            if joint.predicted_s > first_t * (1 + 1e-9):
+                failures.append(
+                    f"{fname} b{batch}: joint {joint.predicted_s:.2e}s "
+                    f"lost to dispatch-first {first_t:.2e}s")
+            if moved and not joint.predicted_s < first_t:
+                failures.append(
+                    f"{fname} b{batch}: decision moved without a win")
+            first_s = f"{dp}@G{g1} + {cp}@G{g1}"
+            joint_s = (f"{kw['moe_scheme'][:4]}@G{gj} + "
+                       f"{kw['moe_combine'][:4]}@G{gj}"
+                       f"{' *' if moved else ''}")
+            print(f"{fname:<9} {batch:>6} {first_s:<28} {joint_s:<28} "
+                  f"{first_t*1e6:>9.1f} {joint.predicted_s*1e6:>9.1f} "
+                  f"{gain:>6.2f}")
+            table.append({
+                "fabric": fname, "batch": batch,
+                "dispatch_first": {"pair": pair_first,
+                                   "combined_us": first_t * 1e6},
+                "joint": {"pair": pair_joint,
+                          "combined_us": joint.predicted_s * 1e6,
+                          "fingerprint": eplan.fingerprint},
+                "changed": moved, "gain_pct": gain})
+            rows.append({"name": f"program_{fname}_b{batch}_gain",
+                         "metric": "pct", "value": gain})
+    print(f"cells where joint planning changed the decision: {changed}/"
+          f"{len(table)}")
+    rows.append({"name": "program_cells_changed", "metric": "count",
+                 "value": changed})
+
+    # fingerprint determinism across fresh planners
+    topo = get_fabric(fabrics[0])
+    compute_s = lm.expert_compute_time_s(batches[-1], top_k, d_model,
+                                         f_shard)
+    fp_a = joint_cell(pl.Planner(), topo, batches[-1],
+                      compute_s)[0].fingerprint
+    fp_b = joint_cell(pl.Planner(), topo, batches[-1],
+                      compute_s)[0].fingerprint
+    if fp_a != fp_b:
+        failures.append(f"non-deterministic fingerprints: {fp_a} != {fp_b}")
+
+    if not changed:
+        failures.append("joint planning never changed a (dispatch G, "
+                        "combine G) decision vs dispatch-first")
+    for f in failures:
+        print(f"PROGRAM GATE FAIL: {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+    if not smoke:
+        out = {"token_bytes": lm.TOKEN_BYTES, "top_k": top_k,
+               "d_model": d_model, "f_shard": f_shard,
+               "cells": table, "cells_changed": changed,
+               "fingerprint_deterministic": True}
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_program.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
+    return rows
+
+
 def bench_train_throughput():
     """Tiny-model CPU train-step wall time (framework overhead check)."""
     import jax
@@ -472,6 +627,7 @@ MICRO_BENCHES = {
     "bench_fabrics": bench_fabrics,
     "bench_calibration": bench_calibration,
     "bench_overlap": bench_overlap,
+    "bench_program": bench_program,
     "bench_kernels": lambda smoke: bench_kernels(),
     "bench_dispatch_sim": lambda smoke: bench_dispatch_sim(),
     "bench_train_throughput": lambda smoke: bench_train_throughput(),

@@ -36,8 +36,9 @@ MoE dispatch/combine (paper §3.2 / §6.3):
     the dual of dispatch dedup — one partial per (token, pod) crosses back).
   * :func:`hierarchical_combine_unicast` — unicast return path for the
     hierarchical dispatch (no relay reduction): the executable lowering of
-    the combine planner's "unicast" plan, selected at trace time by
-    ``ParallelContext.resolve_combine_scheme`` independently of dispatch.
+    the combine planner's "unicast" plan, selected at trace time through
+    ``ParallelContext.moe_pipeline_kwargs`` (jointly with the dispatch
+    scheme and the shared microbatch G).
 
 All functions are pure and must be called inside ``shard_map`` (they use
 named axes).  Shapes are static; capacity semantics follow standard MoE
@@ -127,27 +128,33 @@ def multiwrite_allgather(x: jax.Array, axis_name: str, *,
 
 def planned_allgather(x: jax.Array, axis_name: str, *,
                       num_domains: int = 2,
-                      planner=None, hw=None) -> jax.Array:
-    """AllGather whose scheme and split come from the planner (§5.2
-    dynamic workflow) instead of hard-coded ``mode=``/``split=`` kwargs.
+                      planner=None, hw=None, decision=None) -> jax.Array:
+    """AllGather whose scheme and split come from a planner decision
+    (§5.2 dynamic workflow) instead of hard-coded ``mode=``/``split=``
+    kwargs.
 
-    At trace time the fragment size and split-TP topology are static, so
-    the planner's (LRU-cached) decision selects among the registered
-    executable plans: baseline below the Fig 7 crossover,
-    multiwrite paired/full above it, at the split the latency model
-    scored best.  Must be called inside ``shard_map``.
+    ``decision`` is the per-site verdict of a bound
+    :class:`~repro.core.plan.ExecutionPlan` (the declarative path —
+    layers pass it through from ``ParallelContext.allgather_plan``).
+    Without one, the process planner decides here: at trace time the
+    fragment size and split-TP topology are static, so the (LRU-cached)
+    decision selects among the registered executable plans — baseline
+    below the Fig 7 crossover, multiwrite paired/full above it, at the
+    split the latency model scored best.  Must be called inside
+    ``shard_map``.
     """
     import math as _math
 
     from repro.core import planner as _planner_mod
     from repro.core.topology import split_tp_full_mesh
 
-    n = axis_size(axis_name)
-    frag_bytes = _math.prod(x.shape) * x.dtype.itemsize
-    topo, _ = split_tp_full_mesh(n, tp=max(1, n // num_domains))
-    pl = planner or _planner_mod.default_planner()
-    decision = pl.choose("allgather", frag_bytes, topo, hw,
-                         executable_only=True, num_domains=num_domains)
+    if decision is None:
+        n = axis_size(axis_name)
+        frag_bytes = _math.prod(x.shape) * x.dtype.itemsize
+        topo, _ = split_tp_full_mesh(n, tp=max(1, n // num_domains))
+        pl = planner or _planner_mod.default_planner()
+        decision = pl.choose("allgather", frag_bytes, topo, hw,
+                             executable_only=True, num_domains=num_domains)
     kw = decision.shard_map_kwargs
     if kw["mode"] is None:
         return allgather_reference(x, axis_name, num_domains)

@@ -135,6 +135,45 @@ DEFAULT = HardwareModel()
 # Ledger-driven latency (works for ANY plan / schedule run on the simulator)
 # ---------------------------------------------------------------------------
 
+def ledger_wire_s(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
+    """Full-payload serialization time of one ledger: the bottleneck-link
+    transfer plus relay-copy and software-forwarding-engine terms — no
+    startup alphas, no compute stage (those are charged separately so the
+    shared-pipeline scorer can combine several ledgers without
+    double-counting)."""
+    if not ledger.link_bytes:
+        return 0.0
+    measured = dict(hw.link_bw) if hw.link_bw else None
+    link_time = 0.0
+    for key, nbytes in ledger.link_bytes.items():
+        bw = ledger.topo.link(*key).bw
+        if measured is not None:
+            bw = measured.get(key, bw)
+        if ledger.flow_counts.get(key, 0) >= 3:
+            bw *= hw.flow_interference
+        link_time = max(link_time, nbytes / bw)
+    relay_time = 0.0
+    if ledger.relay_bytes:
+        relay_time = max(ledger.relay_bytes.values()) / hw.copy_bw
+    engine_time = 0.0
+    for node, nbytes in ledger.engine_serial.items():
+        # software forwarding engine (§6.4 AICPU): per-copy egress
+        # serializes at the node's fastest egress link
+        bw = max((ln.bw for ln in ledger.topo.links.values()
+                  if ln.src == node), default=math.inf)
+        engine_time = max(engine_time, nbytes / bw)
+    return link_time + relay_time + engine_time
+
+
+def ledger_fixed_s(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
+    """Payload-independent overheads of one ledger: per-chunk operator
+    startup (``alpha_base * G``), schedule-specific setup and the relay
+    pipeline-fill alpha."""
+    g = max(1, ledger.stages)
+    return (hw.alpha_base * g + ledger.alpha_extra_s
+            + (hw.alpha_hop if ledger.relayed else 0.0))
+
+
 def score_ledger(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
     """End-to-end latency of any plan's :class:`~repro.core.plan.Ledger`.
 
@@ -159,29 +198,9 @@ def score_ledger(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
     """
     if not ledger.link_bytes:
         return 0.0
-    measured = dict(hw.link_bw) if hw.link_bw else None
-    link_time = 0.0
-    for key, nbytes in ledger.link_bytes.items():
-        bw = ledger.topo.link(*key).bw
-        if measured is not None:
-            bw = measured.get(key, bw)
-        if ledger.flow_counts.get(key, 0) >= 3:
-            bw *= hw.flow_interference
-        link_time = max(link_time, nbytes / bw)
-    relay_time = 0.0
-    if ledger.relay_bytes:
-        relay_time = max(ledger.relay_bytes.values()) / hw.copy_bw
-    engine_time = 0.0
-    for node, nbytes in ledger.engine_serial.items():
-        # software forwarding engine (§6.4 AICPU): per-copy egress
-        # serializes at the node's fastest egress link
-        bw = max((ln.bw for ln in ledger.topo.links.values()
-                  if ln.src == node), default=math.inf)
-        engine_time = max(engine_time, nbytes / bw)
-    wire = link_time + relay_time + engine_time
+    wire = ledger_wire_s(ledger, hw)
     g = max(1, ledger.stages)
-    fixed = (hw.alpha_base * g + ledger.alpha_extra_s
-             + (hw.alpha_hop if ledger.relayed else 0.0))
+    fixed = ledger_fixed_s(ledger, hw)
     compute = max(0.0, ledger.compute_s)
     serial = fixed + wire + compute
     if g <= 1 or not ledger.overlap:
@@ -190,6 +209,55 @@ def score_ledger(ledger: Ledger, hw: HardwareModel = DEFAULT) -> float:
     w, c = wire / g, compute / g
     pipelined = fixed + w + c + (g - 1) * max(w, c)
     return (1.0 - eta) * serial + eta * pipelined
+
+
+def score_pipeline(ledgers, hw: HardwareModel = DEFAULT) -> float:
+    """Combined latency of COUPLED collectives sharing one chunk pipeline
+    (the moe_ffn dispatch -> expert FFN -> combine scan).
+
+    Scoring each half alone and summing would double-count the compute
+    stage and — worse — let each half pick its own microbatch G even
+    though the executed pipeline chunks everything at ONE G.  This
+    scorer is the shared-pipeline ledger of the joint sweep: every
+    ledger's wire time is a pipeline stage, the (shared) compute stage
+    is charged once, per-chunk alphas accumulate across ALL coupled
+    collectives (G chunks now pay dispatch + combine startup each), and
+    the pipelined bound pays ``sum(stage)/G + (G-1) * max(stage)/G``
+    over the full stage set, derated by ``hw.overlap_eff`` exactly like
+    :func:`score_ledger`.  All ledgers must agree on ``stages``; a
+    single-ledger call reduces to :func:`score_ledger`.
+    """
+    ledgers = [l for l in ledgers if l.link_bytes]
+    if not ledgers:
+        return 0.0
+    gs = {max(1, l.stages) for l in ledgers}
+    if len(gs) != 1:
+        raise ValueError(f"coupled ledgers disagree on chunk count: {gs}")
+    g = gs.pop()
+    wires = [ledger_wire_s(l, hw) for l in ledgers]
+    fixed = sum(ledger_fixed_s(l, hw) for l in ledgers)
+    # the compute stage BETWEEN the coupled collectives is one shared
+    # quantity carried redundantly by each scenario — charge it once
+    compute = max([0.0] + [l.compute_s for l in ledgers])
+    serial = fixed + sum(wires) + compute
+    if g <= 1 or not all(l.overlap for l in ledgers):
+        return serial
+    eta = min(1.0, max(0.0, hw.overlap_eff))
+    per_chunk = [w / g for w in wires] + [compute / g]
+    pipelined = fixed + sum(per_chunk) + (g - 1) * max(per_chunk)
+    return (1.0 - eta) * serial + eta * pipelined
+
+
+def pipeline_overlap_endpoints(ledgers, hw: HardwareModel = DEFAULT
+                               ) -> tuple[float, float]:
+    """(serial_s, ideal_s) endpoints of a coupled pipeline's overlap
+    interpolation (:func:`overlap_endpoints` generalized to the shared
+    pipeline of :func:`score_pipeline`)."""
+    serial = score_pipeline(
+        ledgers, dataclasses.replace(hw, overlap_eff=0.0))
+    ideal_ = score_pipeline(
+        ledgers, dataclasses.replace(hw, overlap_eff=1.0))
+    return serial, ideal_
 
 
 def overlap_endpoints(ledger: Ledger,

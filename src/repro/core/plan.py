@@ -35,12 +35,41 @@ grids and scores each ledger with the calibrated latency model.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import math
-from typing import Callable, Iterator, Mapping, Sequence
+from typing import Callable, Iterator, Mapping, Optional, Sequence
 
 from .multiwrite import MultiWriteSimulator
 from .topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# bucketing helpers (shared by the planner's LRU keys and the declarative
+# CollectiveSite keys, so a bound ExecutionPlan and a trace-time lookup
+# can never disagree about which cell a payload falls into)
+# ---------------------------------------------------------------------------
+
+def bucket_payload(payload_bytes: float) -> int:
+    """Power-of-two payload bucket: plan choice is scored at the bucket
+    size, so nearby payloads share one cache entry."""
+    if payload_bytes <= 1:
+        return 1
+    return 1 << int(math.ceil(math.log2(float(payload_bytes))))
+
+
+def bucket_compute_s(compute_s: float) -> float:
+    """Power-of-two bucket (in nanoseconds) for the overlap-context
+    compute time, mirroring :func:`bucket_payload`: nearby compute
+    estimates share one scenario cache entry instead of fragmenting the
+    LRU per traced dtype/shape.  Rounded to the NEAREST power of two in
+    log space (not up): the bucketed value is baked into the decision's
+    serial/ideal endpoints that fit_overlap_eff measures against, and a
+    systematically inflated compute stage would bias the fitted
+    efficiency upward."""
+    if compute_s <= 0:
+        return 0.0
+    return float(2.0 ** round(math.log2(compute_s * 1e9))) / 1e9
 
 
 # ---------------------------------------------------------------------------
@@ -200,13 +229,32 @@ class CombineScenario:
                 self.skew, self.compute_s)
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkProbeScenario:
+    """Directed point-to-point microbenchmark: every rail link from
+    ``src_server`` to ``dst_server`` carries the payload simultaneously
+    (the telemetry probe that fits a direction which NEVER bottlenecks
+    any real collective — 2x8asym forward rails — instead of leaving it
+    nominal).  ``src_server == dst_server`` probes the server's intra
+    full mesh."""
+
+    topo: Topology
+    src_server: int = 0
+    dst_server: int = 1
+
+    def cache_key(self):
+        return ("linkprobe", self.src_server, self.dst_server)
+
+
 def default_scenarios(topo: Topology) -> dict:
     """One representative scenario per op for ``topo`` — the grid the CI
     fabric smoke iterates (every registered plan must simulate on every
     registered fabric without raising)."""
     return {"allgather": AllGatherScenario.split_tp(topo, 2),
             "dispatch": DispatchScenario(topo=topo),
-            "combine": CombineScenario(topo=topo)}
+            "combine": CombineScenario(topo=topo),
+            "linkprobe": LinkProbeScenario(
+                topo, 0, 1 if topo.meta.num_servers > 1 else 0)}
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +306,11 @@ class CollectivePlan:
 
 PLAN_REGISTRY: dict[tuple[str, str], CollectivePlan] = {}
 BASELINE_PLAN = {"allgather": "baseline", "dispatch": "unicast",
-                 "combine": "unicast"}
+                 "combine": "unicast",
+                 # directed point-to-point link microbenchmark (telemetry):
+                 # pure serialization, so its records feed the alpha/beta
+                 # regression like the real baselines do
+                 "linkprobe": "p2p"}
 
 
 def register_plan(plan: CollectivePlan) -> CollectivePlan:
@@ -283,6 +335,334 @@ def plans_for(op: str, executable_only: bool = False
     if executable_only:
         out = [p for p in out if p.executable]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Declarative collective programs (the bindable planning surface)
+# ---------------------------------------------------------------------------
+#
+# A model's collectives used to be planned one call site at a time: every
+# consumer asked ``ParallelContext.resolve_*`` for its own op at trace
+# time, so coupled sites (the MoE dispatch and its return-path combine,
+# which execute inside ONE chunk pipeline) could never be optimized
+# together.  The declarative surface inverts that: callers REGISTER their
+# sites up-front as a :class:`CollectiveProgram`, one
+# ``Planner.plan_program`` sweep decides every site (coupled groups
+# jointly, under the shared-pipeline scorer), and the resulting immutable
+# :class:`ExecutionPlan` is bound into the ``ParallelContext`` — trace
+# time is pure lookup.
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """One declared collective call site of a model.
+
+    ``op``        planner op ("allgather" | "dispatch" | "combine");
+    ``role``      unique name within the program ("train/moe_dispatch");
+    ``payload_bytes``  per-participant payload of the site;
+    ``scenario_kw``    sorted (key, value) pairs completing the planner
+                  scenario (num_experts / top_k / token_bytes /
+                  num_domains);
+    ``compute_ctx``    overlap context: the modeled compute time (expert
+                  FFN) chunked transfers of this site hide behind;
+    ``skew``      hot-expert routing skew the site is priced under;
+    ``coupled_with``   role of the site sharing this site's chunk
+                  pipeline (the MoE combine declares
+                  ``coupled_with="…/moe_dispatch"``) — coupled groups are
+                  swept jointly over one shared microbatch G;
+    ``topo``      optional site-specific fabric (the split-TP AllGather
+                  runs on the §3.1 full-mesh fixture, not the EP fabric).
+    """
+
+    op: str
+    role: str
+    payload_bytes: float
+    scenario_kw: tuple = ()
+    compute_ctx: float = 0.0
+    skew: float = 0.0
+    coupled_with: Optional[str] = None
+    topo: Optional[Topology] = None
+
+    def scenario_args(self) -> dict:
+        """kwargs for ``Planner._scenario`` (skew/compute folded in)."""
+        return {**dict(self.scenario_kw), "skew": self.skew,
+                "compute_s": self.compute_ctx}
+
+    def key(self) -> tuple:
+        """Workload identity of the site — what a trace-time lookup can
+        reconstruct from live shapes.  Deliberately excludes ``role``,
+        ``coupled_with`` and ``topo``: the consumer inside ``shard_map``
+        knows its op, payload and scenario, nothing else."""
+        return (self.op, bucket_payload(self.payload_bytes),
+                tuple(sorted(dict(self.scenario_kw).items())),
+                float(self.skew), bucket_compute_s(self.compute_ctx))
+
+
+def site_key(op: str, payload_bytes: float, *, skew: float = 0.0,
+             compute_s: float = 0.0, **scenario_kw) -> tuple:
+    """The :meth:`CollectiveSite.key` a trace-time consumer derives from
+    its live quantities (one shared construction, so bind-time and
+    trace-time keys cannot drift)."""
+    return (op, bucket_payload(payload_bytes),
+            tuple(sorted(scenario_kw.items())),
+            float(skew), bucket_compute_s(compute_s))
+
+
+def moe_sites(phase: str, *, num_experts: int, top_k: int,
+              tokens_per_rank: int, token_bytes: int,
+              skew: float = 0.0, compute_s: float = 0.0,
+              topo: Optional[Topology] = None
+              ) -> tuple[CollectiveSite, CollectiveSite]:
+    """The canonical coupled (dispatch, combine) site pair of one MoE
+    phase — both halves of the token round trip, declared as ONE group
+    so the planner sweeps (dispatch scheme, combine scheme, shared G)
+    jointly under the shared-pipeline scorer."""
+    kw = (("num_experts", int(num_experts)), ("top_k", int(top_k)),
+          ("token_bytes", int(token_bytes)))
+    payload = float(tokens_per_rank) * token_bytes
+    dispatch = CollectiveSite(
+        op="dispatch", role=f"{phase}/moe_dispatch", payload_bytes=payload,
+        scenario_kw=kw, compute_ctx=compute_s, skew=skew, topo=topo)
+    combine = CollectiveSite(
+        op="combine", role=f"{phase}/moe_combine", payload_bytes=payload,
+        scenario_kw=kw, compute_ctx=compute_s, skew=skew,
+        coupled_with=dispatch.role, topo=topo)
+    return dispatch, combine
+
+
+def allgather_site(phase: str, *, frag_bytes: float, num_domains: int = 2,
+                   topo: Optional[Topology] = None) -> CollectiveSite:
+    """The §3.1 split-TP AllGather site of one phase."""
+    return CollectiveSite(
+        op="allgather", role=f"{phase}/split_tp_gather",
+        payload_bytes=float(frag_bytes),
+        scenario_kw=(("num_domains", int(num_domains)),), topo=topo)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveProgram:
+    """Every collective site a workload will issue, declared up-front.
+
+    ``name`` identifies the launch surface ("train", "serve", "dryrun");
+    sites carry their phase in the role prefix ("prefill/moe_dispatch").
+    Roles must be unique; ``coupled_with`` references must resolve and
+    must not chain (a group is one pipeline).
+    """
+
+    name: str
+    sites: tuple[CollectiveSite, ...]
+
+    def __post_init__(self):
+        roles = [s.role for s in self.sites]
+        if len(set(roles)) != len(roles):
+            dup = sorted({r for r in roles if roles.count(r) > 1})
+            raise ValueError(f"duplicate site roles in program "
+                             f"{self.name!r}: {dup}")
+        by_role = {s.role: s for s in self.sites}
+        for s in self.sites:
+            if s.coupled_with is None:
+                continue
+            anchor = by_role.get(s.coupled_with)
+            if anchor is None:
+                raise ValueError(
+                    f"site {s.role!r} couples to unknown role "
+                    f"{s.coupled_with!r}")
+            if anchor.coupled_with is not None:
+                raise ValueError(
+                    f"coupling chains are not a pipeline: {s.role!r} -> "
+                    f"{s.coupled_with!r} -> {anchor.coupled_with!r}")
+
+    def site(self, role: str) -> CollectiveSite:
+        for s in self.sites:
+            if s.role == role:
+                return s
+        raise KeyError(f"no site {role!r} in program {self.name!r}; have "
+                       f"{[s.role for s in self.sites]}")
+
+    def groups(self) -> list[tuple[CollectiveSite, ...]]:
+        """Sites partitioned into jointly-planned groups: each coupled
+        pair (anchor, satellite) is one group, everything else plans
+        alone.  Declaration order is preserved."""
+        by_anchor: dict[str, list[CollectiveSite]] = {}
+        for s in self.sites:
+            if s.coupled_with is not None:
+                by_anchor.setdefault(s.coupled_with, []).append(s)
+        out: list[tuple[CollectiveSite, ...]] = []
+        for s in self.sites:
+            if s.coupled_with is not None:
+                continue
+            out.append((s, *by_anchor.get(s.role, [])))
+        return out
+
+    def cache_key(self) -> tuple:
+        return (self.name,
+                tuple((s.role, s.key(), s.coupled_with,
+                       None if s.topo is None else s.topo.fingerprint())
+                      for s in self.sites))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The planner's immutable verdict for one whole program.
+
+    ``decisions``   role -> per-site PlanDecision (marginal view: the
+                    site's own predicted/baseline times at the jointly
+                    chosen configuration);
+    ``joint``       group anchor role -> combined PlanDecision of the
+                    coupled pipeline (op "dispatch+combine", merged
+                    shard_map kwargs, joint serial/ideal endpoints — the
+                    row step-time telemetry measures against);
+    ``group_of``    role -> anchor role of its coupled group (anchors
+                    map to themselves; uncoupled sites are absent).
+
+    Bound into a :class:`~repro.parallel.context.ParallelContext` via
+    ``pctx.bind(plan)``; consumers resolve their site by
+    :func:`site_key` lookup and execute the stored kwargs verbatim.
+    """
+
+    program: CollectiveProgram
+    topo_fingerprint: tuple
+    hw_fingerprint: tuple
+    decisions: Mapping[str, object]
+    joint: Mapping[str, object] = dataclasses.field(default_factory=dict)
+    group_of: Mapping[str, str] = dataclasses.field(default_factory=dict)
+
+    # -- identity ------------------------------------------------------------
+    @property
+    def fingerprint(self) -> str:
+        """Stable content hash: program sites + fabrics + calibration +
+        every chosen (plan, knobs).  Two plans with the same fingerprint
+        execute identically; a re-plan that changes any decision changes
+        the fingerprint (what launch surfaces log across recalibrations)."""
+        parts = [repr(self.program.cache_key()),
+                 repr(self.topo_fingerprint), repr(self.hw_fingerprint)]
+        for role in sorted(self.decisions):
+            d = self.decisions[role]
+            parts.append(f"{role}={d.plan}{sorted(dict(d.knobs).items())}")
+        return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]
+
+    # -- lookup --------------------------------------------------------------
+    def decision(self, role: str):
+        try:
+            return self.decisions[role]
+        except KeyError:
+            raise KeyError(
+                f"no decision for role {role!r}; have "
+                f"{sorted(self.decisions)}") from None
+
+    def find_role(self, op: str, payload_bytes: float, *,
+                  skew: float = 0.0, compute_s: float = 0.0,
+                  **scenario_kw) -> Optional[str]:
+        """Role of the site matching a trace-time workload, or None (the
+        traced shape was not declared — consumers fall back to their
+        policy default)."""
+        key = site_key(op, payload_bytes, skew=skew, compute_s=compute_s,
+                       **scenario_kw)
+        for s in self.program.sites:
+            if s.key() == key:
+                return s.role
+        return None
+
+    def site_kwargs(self, role: str) -> dict:
+        """The kwargs the consumer of ``role`` executes: the coupled
+        group's merged kwargs when the site is part of one (dispatch
+        scheme + combine scheme + the SHARED microbatch G), else the
+        site's own decision kwargs."""
+        anchor = self.group_of.get(role)
+        if anchor is not None and anchor in self.joint:
+            return dict(self.joint[anchor].shard_map_kwargs)
+        return dict(self.decision(role).shard_map_kwargs)
+
+    # -- reporting -----------------------------------------------------------
+    def report(self) -> dict:
+        out = {"program": self.program.name,
+               "fingerprint": self.fingerprint,
+               "sites": {}, "joint": {}}
+        for role in sorted(self.decisions):
+            out["sites"][role] = self.decisions[role].report()
+        for anchor in sorted(self.joint):
+            out["joint"][anchor] = self.joint[anchor].report()
+        return out
+
+    def summary(self) -> str:
+        lines = [f"program {self.program.name} [{self.fingerprint}]"]
+        done = set()
+        for anchor, d in self.joint.items():
+            lines.append(f"  {anchor} (+coupled): {d.summary()}")
+            done.update(r for r, a in self.group_of.items() if a == anchor)
+        for role in sorted(self.decisions):
+            if role not in done:
+                lines.append(f"  {role}: {self.decisions[role].summary()}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class PinnedDecision:
+    """A hand-pinned site decision (no sweep behind it): what
+    :func:`pinned_execution_plan` installs.  Mirrors the PlanDecision
+    surface ExecutionPlan consumers touch (kwargs, knobs, report)."""
+
+    op: str
+    plan: str
+    knobs: tuple
+    shard_map_kwargs: Mapping
+    predicted_s: float = 0.0
+    baseline_s: float = 0.0
+    predicted_serial_s: float = 0.0
+    predicted_ideal_s: float = 0.0
+
+    @property
+    def microbatch(self) -> int:
+        return int(dict(self.knobs).get("microbatch", 1))
+
+    def report(self) -> dict:
+        # same key schema as PlanDecision.report so report consumers
+        # (serve.py's stats printout, dryrun tables) never branch on
+        # whether a decision was swept or pinned
+        return {"plan": self.plan, "knobs": dict(self.knobs),
+                "pinned": True, "predicted_us": self.predicted_s * 1e6,
+                "baseline_us": self.baseline_s * 1e6,
+                "delta_vs_baseline_us":
+                    (self.baseline_s - self.predicted_s) * 1e6,
+                "speedup_pct": 0.0}
+
+    def summary(self) -> str:
+        kn = ", ".join(f"{k}={v}" for k, v in self.knobs)
+        return f"{self.op}: pinned {self.plan}({kn})"
+
+
+def pinned_execution_plan(program: CollectiveProgram,
+                          kwargs_by_role: Mapping[str, Mapping]
+                          ) -> ExecutionPlan:
+    """An :class:`ExecutionPlan` with hand-pinned per-group kwargs — the
+    operational override path (force a known-good configuration without
+    a sweep) and the test fixture for bound-plan execution.
+
+    ``kwargs_by_role`` maps each group ANCHOR role to the execution
+    kwargs its consumers should get verbatim (for a coupled MoE pair:
+    ``{"moe_scheme", "moe_combine", "microbatch"}``)."""
+    decisions: dict = {}
+    joint: dict = {}
+    group_of: dict = {}
+    for group in program.groups():
+        anchor = group[0]
+        kw = dict(kwargs_by_role[anchor.role])
+        g = int(kw.get("microbatch", 1))
+        if len(group) == 1:
+            decisions[anchor.role] = PinnedDecision(
+                op=anchor.op, plan="pinned",
+                knobs=tuple(sorted(kw.items())), shard_map_kwargs=kw)
+            continue
+        joint[anchor.role] = PinnedDecision(
+            op="+".join(s.op for s in group), plan="pinned",
+            knobs=(("microbatch", g),), shard_map_kwargs=kw)
+        for s in group:
+            group_of[s.role] = anchor.role
+            decisions[s.role] = PinnedDecision(
+                op=s.op, plan="pinned", knobs=(("microbatch", g),),
+                shard_map_kwargs=kw)
+    return ExecutionPlan(program=program, topo_fingerprint=("pinned",),
+                         hw_fingerprint=("pinned",), decisions=decisions,
+                         joint=joint, group_of=group_of)
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,12 @@ from typing import Optional
 
 from . import plan as plan_ir
 from . import schedules as _schedules  # noqa: F401  (registers the plans)
-from .latency_model import DEFAULT, HardwareModel, score_ledger
+from .latency_model import (DEFAULT, HardwareModel, overlap_endpoints,
+                            pipeline_overlap_endpoints, score_ledger,
+                            score_pipeline)
+# bucketing lives next to the CollectiveSite keys it must agree with;
+# re-exported here because this module defined it historically
+from .plan import bucket_compute_s, bucket_payload  # noqa: F401
 from .topology import TPU_ICI_LINK_BW, Topology, full_mesh, tpu_pods
 
 
@@ -42,28 +47,6 @@ def topology_fingerprint(topo: Topology) -> tuple:
     per-link bandwidth assignment — asymmetric fabrics with identical
     bandwidth multisets stay distinct)."""
     return topo.fingerprint()
-
-
-def bucket_payload(payload_bytes: float) -> int:
-    """Power-of-two payload bucket: plan choice is scored at the bucket
-    size, so nearby payloads share one cache entry."""
-    if payload_bytes <= 1:
-        return 1
-    return 1 << int(math.ceil(math.log2(float(payload_bytes))))
-
-
-def bucket_compute_s(compute_s: float) -> float:
-    """Power-of-two bucket (in nanoseconds) for the overlap-context
-    compute time, mirroring :func:`bucket_payload`: nearby compute
-    estimates share one scenario cache entry instead of fragmenting the
-    LRU per traced dtype/shape.  Rounded to the NEAREST power of two in
-    log space (not up): the bucketed value is baked into the decision's
-    serial/ideal endpoints that fit_overlap_eff measures against, and a
-    systematically inflated compute stage would bias the fitted
-    efficiency upward."""
-    if compute_s <= 0:
-        return 0.0
-    return float(2.0 ** round(math.log2(compute_s * 1e9))) / 1e9
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +120,8 @@ class Planner:
 
     DECISION_LOG_MAX = 1024
 
+    PROGRAM_CACHE_SIZE = 64
+
     def __init__(self, hw: HardwareModel = DEFAULT,
                  cache_size: int = 256) -> None:
         self.hw = hw
@@ -149,6 +134,12 @@ class Planner:
         # None until telemetry fills it via note_measurement) — the audit
         # trail the drift monitor and serve reports read.
         self.decision_log: list[dict] = []
+        # whole-program planning: memoized ExecutionPlans plus a registry
+        # of every (program, topo) planned through this planner, so a
+        # re-calibration can replan PROGRAMS (the unit consumers bind)
+        # rather than just dropping per-op cache entries.
+        self._program_cache: OrderedDict[tuple, object] = OrderedDict()
+        self._programs: OrderedDict[tuple, tuple] = OrderedDict()
 
     # -- cache ---------------------------------------------------------------
     def cache_info(self) -> dict:
@@ -157,6 +148,7 @@ class Planner:
 
     def cache_clear(self) -> None:
         self._cache.clear()
+        self._program_cache.clear()
         self.cache_hits = self.cache_misses = 0
 
     # -- online re-calibration ----------------------------------------------
@@ -168,6 +160,7 @@ class Planner:
         LRU."""
         self.hw = hw
         self._cache.clear()
+        self._program_cache.clear()
         self.recalibrations += 1
 
     def _log_decision(self, decision: PlanDecision, topo_name: str) -> None:
@@ -232,6 +225,11 @@ class Planner:
                 skew=scenario_kw.get("skew", 0.0),
                 compute_s=bucket_compute_s(
                     scenario_kw.get("compute_s", 0.0)))
+        if op == "linkprobe":
+            return plan_ir.LinkProbeScenario(
+                topo, scenario_kw.get("src_server", 0),
+                scenario_kw.get("dst_server",
+                                1 if topo.meta.num_servers > 1 else 0))
         raise ValueError(f"unknown collective op {op!r}")
 
     # -- the decision --------------------------------------------------------
@@ -287,7 +285,6 @@ class Planner:
                       if p.name == base_name
                       and kn.get("microbatch", 1) == 1),
                      default=best_t)
-        from .latency_model import overlap_endpoints
         serial_t, ideal_t = overlap_endpoints(best_ledger, hw)
         return PlanDecision(
             op=op, plan=best.name,
@@ -297,6 +294,223 @@ class Planner:
             candidates=tuple((p.name, tuple(sorted(kn.items())), t)
                              for t, _, p, kn, _ in scored),
             predicted_serial_s=serial_t, predicted_ideal_s=ideal_t)
+
+    # -- whole-program planning ----------------------------------------------
+    def plan_program(self, program: "plan_ir.CollectiveProgram",
+                     topo: Topology,
+                     hw: Optional[HardwareModel] = None,
+                     *, executable_only: bool = True
+                     ) -> "plan_ir.ExecutionPlan":
+        """Jointly plan every declared site of ``program`` and return the
+        immutable, fingerprinted :class:`~repro.core.plan.ExecutionPlan`.
+
+        Uncoupled sites sweep exactly as :meth:`choose` does.  Coupled
+        groups — the MoE (dispatch, combine) pair that executes inside
+        ONE chunk pipeline — sweep the full (dispatch scheme) x (combine
+        scheme) x (shared microbatch G) product under the
+        shared-pipeline scorer (:func:`score_pipeline`), so a smaller
+        dispatch G can win on the COMBINED score where the old
+        dispatch-first resolution would have over-chunked (the joint
+        pipeline pays dispatch + combine startup per chunk and its
+        bottleneck stage is the max over three stages, not two).
+
+        Sites may carry their own fabric (``site.topo``); everything
+        else is scored on ``topo``.  Plans are memoized on
+        (program, topo, hw) and the (program, topo) pair is registered
+        so :meth:`replan_programs` can re-derive every known program
+        after a re-calibration.
+        """
+        hw = hw or self.hw
+        pkey = (program.cache_key(), topology_fingerprint(topo),
+                executable_only)
+        key = (*pkey, hw.fingerprint())
+        hit = self._program_cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+            self._program_cache.move_to_end(key)
+            return hit
+        self.cache_misses += 1
+        decisions: dict = {}
+        joint: dict = {}
+        group_of: dict = {}
+        for group in program.groups():
+            if len(group) == 1:
+                site = group[0]
+                decisions[site.role] = self.choose(
+                    site.op, site.payload_bytes, site.topo or topo, hw,
+                    executable_only=executable_only, **site.scenario_args())
+            elif (len(group) == 2 and group[0].op == "dispatch"
+                  and group[1].op == "combine"):
+                dsite, csite = group
+                d_dec, c_dec, j_dec = self._joint_moe_sweep(
+                    dsite, csite, dsite.topo or topo, hw,
+                    executable_only=executable_only)
+                decisions[dsite.role] = d_dec
+                decisions[csite.role] = c_dec
+                joint[dsite.role] = j_dec
+                group_of[dsite.role] = dsite.role
+                group_of[csite.role] = dsite.role
+                self._log_decision(j_dec, (dsite.topo or topo).name)
+            else:
+                raise ValueError(
+                    f"unsupported coupled group "
+                    f"{[(s.role, s.op) for s in group]}: joint sweeps are "
+                    f"defined for a (dispatch, combine) pair")
+        eplan = plan_ir.ExecutionPlan(
+            program=program,
+            topo_fingerprint=topology_fingerprint(topo),
+            hw_fingerprint=hw.fingerprint(),
+            decisions=decisions, joint=joint, group_of=group_of)
+        self._program_cache[key] = eplan
+        while len(self._program_cache) > self.PROGRAM_CACHE_SIZE:
+            self._program_cache.popitem(last=False)
+        self._programs[pkey] = (program, topo, eplan.fingerprint)
+        while len(self._programs) > self.PROGRAM_CACHE_SIZE:
+            self._programs.popitem(last=False)
+        return eplan
+
+    def replan_programs(self) -> list[dict]:
+        """Re-plan every registered (program, topo) under the CURRENT
+        hardware model — the whole-program face of a re-calibration
+        (DriftMonitor calls this after :meth:`refresh_hardware`).
+        Returns one event per program: its fresh plan and whether any
+        decision changed (fingerprint moved)."""
+        events = []
+        for pkey, (program, topo, old_fp) in list(self._programs.items()):
+            eplan = self.plan_program(program, topo,
+                                      executable_only=pkey[-1])
+            events.append({"program": program.name,
+                           "fingerprint": eplan.fingerprint,
+                           "changed": eplan.fingerprint != old_fp,
+                           "plan": eplan})
+        return events
+
+    def _joint_moe_sweep(self, dsite, csite, topo: Topology,
+                         hw: HardwareModel, *, executable_only: bool):
+        """The coupled (dispatch, combine) product sweep.
+
+        Every (dispatch plan, dispatch knobs) x (combine plan, combine
+        knobs) cell whose microbatch knobs AGREE (the executed pipeline
+        chunks both halves at one shared G) and whose pair is executable
+        (a unicast dispatch leaves no relay state for a relay-reduced
+        combine to consume) is scored with :func:`score_pipeline`.
+        Returns (dispatch decision, combine decision, joint decision):
+        the per-site views carry marginal candidates (best joint score
+        per own configuration) and their own-ledger predicted times so
+        existing per-op reports keep their meaning; the joint view
+        carries the combined score, merged execution kwargs and the
+        joint serial/ideal endpoints telemetry fits overlap efficiency
+        against."""
+        d_scenario = self._scenario("dispatch", topo, dsite.scenario_args())
+        c_scenario = self._scenario("combine", topo, csite.scenario_args())
+        d_bucket = bucket_payload(dsite.payload_bytes)
+        c_bucket = bucket_payload(csite.payload_bytes)
+        d_plans = plan_ir.plans_for("dispatch",
+                                    executable_only=executable_only)
+        c_plans = plan_ir.plans_for("combine",
+                                    executable_only=executable_only)
+        if not d_plans or not c_plans:
+            raise ValueError("no registered dispatch/combine plans")
+        scored = []      # (t, order, pd, kn_d, ld, pc, kn_c, lc)
+        ledgers: dict = {}
+        for d_ord, pd in enumerate(d_plans):
+            d_scheme = pd.shard_map_kwargs()["moe_scheme"]
+            for kn_d in pd.knob_grid():
+                d_key = ("d", pd.name, tuple(sorted(kn_d.items())))
+                if d_key not in ledgers:
+                    ledgers[d_key] = pd.simulate(d_scenario, d_bucket,
+                                                 **kn_d)
+                ld = ledgers[d_key]
+                for c_ord, pc in enumerate(c_plans):
+                    c_scheme = pc.shard_map_kwargs()["moe_combine"]
+                    # executable pairing: the baseline (unicast) dispatch
+                    # has no relay stage, so only the unicast return path
+                    # exists for it — mirror of moe_ffn's lowering table
+                    if d_scheme == "baseline" and c_scheme != "baseline":
+                        continue
+                    for kn_c in pc.knob_grid():
+                        if kn_c.get("microbatch", 1) != \
+                                kn_d.get("microbatch", 1):
+                            continue
+                        c_key = ("c", pc.name,
+                                 tuple(sorted(kn_c.items())))
+                        if c_key not in ledgers:
+                            ledgers[c_key] = pc.simulate(
+                                c_scenario, c_bucket, **kn_c)
+                        lc = ledgers[c_key]
+                        t = score_pipeline((ld, lc), hw)
+                        scored.append((t, (d_ord, c_ord), pd, kn_d, ld,
+                                       pc, kn_c, lc))
+        scored.sort(key=lambda s: (s[0], s[1]))
+        best_t, _, pd, kn_d, ld, pc, kn_c, lc = scored[0]
+        g = kn_d.get("microbatch", 1)
+        # joint baseline: what a fixed unicast/unicast serial deployment
+        # pays for the whole round trip
+        base_t = min((t for t, _, bpd, bkd, _, bpc, bkc, _ in scored
+                      if bpd.name == plan_ir.BASELINE_PLAN["dispatch"]
+                      and bpc.name == plan_ir.BASELINE_PLAN["combine"]
+                      and bkd.get("microbatch", 1) == 1),
+                     default=best_t)
+        serial_t, ideal_t = pipeline_overlap_endpoints((ld, lc), hw)
+        joint = PlanDecision(
+            op="dispatch+combine",
+            plan=f"{pd.name}+{pc.name}",
+            knobs=(("microbatch", g),),
+            predicted_s=best_t, baseline_s=base_t,
+            payload_bytes=d_bucket,
+            shard_map_kwargs={**pd.shard_map_kwargs(**kn_d),
+                              **pc.shard_map_kwargs(**kn_c)},
+            candidates=tuple(
+                (f"{spd.name}+{spc.name}",
+                 tuple(sorted({**skd, **skc}.items())), t)
+                for t, _, spd, skd, _, spc, skc, _ in scored),
+            predicted_serial_s=serial_t, predicted_ideal_s=ideal_t)
+        d_dec = self._marginal_decision(
+            "dispatch", pd, kn_d, ld, d_bucket, hw, scored,
+            side=lambda s: (s[2], s[3]))
+        c_dec = self._marginal_decision(
+            "combine", pc, kn_c, lc, c_bucket, hw, scored,
+            side=lambda s: (s[5], s[6]))
+        return d_dec, c_dec, joint
+
+    def _marginal_decision(self, op: str, best_plan, best_knobs, best_ledger,
+                           bucket: int, hw: HardwareModel, scored,
+                           side) -> PlanDecision:
+        """Per-site view of a joint sweep: the site's own-ledger times at
+        the jointly chosen configuration, with candidates carrying the
+        best JOINT score reachable per (plan, knobs) of this side —
+        reports built on candidates stay meaningful under coupling."""
+        marginal: dict = {}
+        for row in scored:
+            p, kn = side(row)
+            k = (p.name, tuple(sorted(kn.items())))
+            if k not in marginal or row[0] < marginal[k]:
+                marginal[k] = row[0]
+        own_t = score_ledger(best_ledger, hw)
+        base_name = plan_ir.BASELINE_PLAN[op]
+        base_rows = [row for row in scored
+                     if side(row)[0].name == base_name
+                     and side(row)[1].get("microbatch", 1) == 1]
+        base_t = (score_ledger(self._side_ledger(base_rows[0], side), hw)
+                  if base_rows else own_t)
+        serial_t, ideal_t = overlap_endpoints(best_ledger, hw)
+        return PlanDecision(
+            op=op, plan=best_plan.name,
+            knobs=tuple(sorted(best_knobs.items())),
+            predicted_s=own_t, baseline_s=base_t, payload_bytes=bucket,
+            shard_map_kwargs=best_plan.shard_map_kwargs(**best_knobs),
+            candidates=tuple((name, kn, t)
+                             for (name, kn), t in sorted(
+                                 marginal.items(),
+                                 key=lambda kv: (kv[1], kv[0]))),
+            predicted_serial_s=serial_t, predicted_ideal_s=ideal_t)
+
+    @staticmethod
+    def _side_ledger(row, side):
+        """The ledger belonging to ``side`` of a joint-sweep row."""
+        p, _ = side(row)
+        # rows are (t, order, pd, kn_d, ld, pc, kn_c, lc)
+        return row[4] if p is row[2] else row[7]
 
 
 _DEFAULT: Optional[Planner] = None
@@ -339,8 +553,11 @@ def moe_dispatch_decision(*, num_pods: int, ep_per_pod: int,
                           topo: Optional[Topology] = None,
                           skew: float = 0.0,
                           compute_s: float = 0.0) -> PlanDecision:
-    """Plan the MoE dispatch for one EP mesh slice (see
-    :func:`_ep_topology` for the fabric the payload is scored on).
+    """Plan the MoE dispatch for one EP mesh slice INDEPENDENTLY of its
+    return path — the dispatch-first reference (what-if reports and
+    ``bench_program``'s comparison baseline); executing consumers plan
+    the (dispatch, combine) pair jointly via :meth:`Planner.plan_program`
+    (see :func:`_ep_topology` for the fabric the payload is scored on).
     The payload is the per-rank token traffic of one dispatch.
     ``skew > 0`` prices hot-expert (non-uniform) routing.
     ``compute_s > 0`` (the expert-FFN time of the full batch, see
@@ -364,7 +581,8 @@ def moe_combine_decision(*, num_pods: int, ep_per_pod: int,
                          skew: float = 0.0,
                          compute_s: float = 0.0) -> PlanDecision:
     """Plan the MoE *combine* (return path) for one EP mesh slice —
-    independent of the dispatch decision: the return path's redundancy is
+    independent of the dispatch decision (the what-if reference; see
+    :func:`moe_dispatch_decision`): the return path's redundancy is
     spread over the holders' rails (and may face asymmetric return
     bandwidth), so its crossover sits elsewhere.  ``compute_s`` is the
     overlap context (see :func:`moe_dispatch_decision`): the combine of

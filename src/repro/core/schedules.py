@@ -628,6 +628,32 @@ def _combine_kwargs(scheme: str):
     return kwargs_fn
 
 
+def _simulate_linkprobe(scenario, payload_bytes: float) -> plan_ir.Ledger:
+    """Ledger of the directed p2p microbenchmark: the payload on every
+    link from ``src_server`` to ``dst_server`` at once (and nothing
+    else), so the record's bottleneck ROLE is exactly that direction and
+    the telemetry fitter regresses its bandwidth even though no real
+    collective ever bottlenecks there."""
+    topo = scenario.topo
+    links = [k for k in topo.links
+             if topo.server_of(k[0]) == scenario.src_server
+             and topo.server_of(k[1]) == scenario.dst_server]
+    if not links:
+        raise ValueError(
+            f"no links {scenario.src_server}->{scenario.dst_server} "
+            f"in {topo.name}")
+    return plan_ir.Ledger(
+        topo=topo,
+        link_bytes={k: float(payload_bytes) for k in links},
+        relay_bytes={}, flow_counts={k: 1 for k in links})
+
+
+plan_ir.register_plan(plan_ir.CollectivePlan(
+    name="p2p", op="linkprobe", knobs={},
+    simulate_fn=_simulate_linkprobe,
+    kwargs_fn=lambda **kw: {}))
+
+
 plan_ir.register_plan(plan_ir.CollectivePlan(
     name="unicast", op="combine",
     knobs={"microbatch": MICROBATCH_GRID},

@@ -238,10 +238,13 @@ DEFAULT_REPORT_FABRICS = ("2x8", "4x8", "2x8r2")
 def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
                         fabrics=DEFAULT_REPORT_FABRICS,
                         calibration=None) -> dict:
-    """Which plan the latency-model planner picks for this cell, and the
-    predicted delta vs the baseline plan (the quantity the dry-run table
-    reports next to the roofline terms).  ``fabrics`` adds a what-if axis:
-    the same cell's dispatch+combine decisions on each named fabric.
+    """Which plan the planner picks for this cell, and the predicted
+    delta vs the baseline plan (the quantity the dry-run table reports
+    next to the roofline terms).  The cell's collective sites are
+    declared as a program and planned JOINTLY — the MoE dispatch/combine
+    pair shares one chunk pipeline, so the reported G is the shared G
+    the model executes under a bound ExecutionPlan.  ``fabrics`` adds a
+    what-if axis: the same cell's per-op decisions on each named fabric.
     ``calibration`` (a telemetry store or path) adds a second what-if
     axis: the same decisions under the store's FITTED hardware model —
     'what would the planner do on the fabric we actually measured'."""
@@ -255,33 +258,27 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
     n_local = _cell_tokens_per_rank(shape, pctx)
     cell_compute_s = _cell_compute_s(cfg, shape, pctx)
     if cfg.is_moe:
-        ep_kw = _cell_ep_kw(cfg, shape, pctx)
-        compute_s = cell_compute_s
-        d = pctx.moe_dispatch_plan(cfg.num_experts, cfg.top_k,
-                                   tokens_per_rank=n_local,
-                                   token_bytes=cfg.d_model * 2,
-                                   compute_s=compute_s)
-        if d is None:  # fixed policy: still report what auto would pick
-            d = pl.moe_dispatch_decision(**ep_kw, topo=pctx.fabric)
-        out["moe_dispatch"] = d.report()
-        dc = pctx.moe_combine_plan(cfg.num_experts, cfg.top_k,
-                                   tokens_per_rank=n_local,
-                                   token_bytes=cfg.d_model * 2,
-                                   compute_s=compute_s)
-        if dc is None:
-            dc = pl.moe_combine_decision(**ep_kw, topo=pctx.fabric)
-        out["moe_combine"] = dc.report()
+        eplan = _cell_execution_plan(arch, shape, pctx)
+        role_d = f"{shape.kind}/moe_dispatch"
+        out["execution_plan"] = eplan.fingerprint
+        out["moe_dispatch"] = eplan.decision(role_d).report()
+        out["moe_combine"] = eplan.decision(
+            f"{shape.kind}/moe_combine").report()
+        joint = eplan.joint.get(role_d)
+        out["moe_joint"] = joint.report() if joint else None
         # the microbatch this cell EXECUTES (pctx knob — planner-derived
-        # for the "plan" presets; under auto the decision's G clamped to
-        # a divisor of the local token count, exactly as moe_ffn runs
-        # it) next to the planner's own pick, so preset/decision drift
-        # is visible in the table instead of silently baked in
-        g_knob = (d.microbatch if pctx.plan_policy == "auto"
+        # for the "plan" presets; under auto the joint decision's shared
+        # G clamped to a divisor of the local token count, exactly as
+        # moe_ffn runs it) next to the planner's own pick, so
+        # preset/decision drift is visible in the table instead of
+        # silently baked in
+        planned_g = joint.microbatch if joint else 1
+        g_knob = (planned_g if pctx.plan_policy == "auto"
                   else int(pctx.moe_microbatch))
         out["moe_microbatch"] = {
             "executed": max(1, math.gcd(g_knob, n_local)),
-            "planned": d.microbatch,
-            "compute_s": compute_s,
+            "planned": planned_g,
+            "compute_s": cell_compute_s,
         }
     # Reference decision on the paper's §3.1 fixture (8-NPU split-TP full
     # mesh) at this cell's per-chip activation fragment — a what-if the
@@ -344,18 +341,24 @@ def _cell_tokens_per_rank(shape: ShapeSpec, pctx) -> int:
     return max(1, tokens // (pctx.num_pods * pctx.data_size))
 
 
-def _cell_ep_kw(cfg, shape: ShapeSpec, pctx) -> dict:
-    """The ONE assembly of this cell's EP dispatch/combine decision
-    kwargs, shared by the "plan" preset derivation and the cell report —
-    so the G a preset executes is always derived from the same decision
-    the report displays as 'planned'."""
-    use_pod, _ = pctx.ep_ranks(cfg.num_experts)
-    return dict(num_pods=pctx.num_pods if use_pod else 1,
-                ep_per_pod=pctx.data_size,
-                num_experts=cfg.num_experts, top_k=cfg.top_k,
-                tokens_per_rank=_cell_tokens_per_rank(shape, pctx),
-                token_bytes=cfg.d_model * 2,
-                compute_s=_cell_compute_s(cfg, shape, pctx))
+def _cell_program(arch: str, shape: ShapeSpec, pctx):
+    """The ONE declared collective program of this cell (phase ==
+    shape.kind), shared by the "plan" preset derivation, the auto-policy
+    binding and the cell report — so the G a preset executes is always
+    derived from the same joint decision the report displays as
+    'planned'."""
+    from repro.parallel.context import build_collective_program
+    cfg = get_config(arch)
+    seq = shape.seq_len if shape.kind != "decode" else 1
+    return build_collective_program(
+        cfg, pctx, "dryrun", {shape.kind: (shape.global_batch, seq)})
+
+
+def _cell_execution_plan(arch: str, shape: ShapeSpec, pctx):
+    """Jointly-planned ExecutionPlan of this cell's program (planned
+    regardless of policy: the fixed-policy cells still REPORT what the
+    planner would bind)."""
+    return pctx.plan_collectives(_cell_program(arch, shape, pctx))
 
 
 def _cell_compute_s(cfg, shape: ShapeSpec, pctx) -> float:
@@ -371,16 +374,17 @@ def _cell_compute_s(cfg, shape: ShapeSpec, pctx) -> float:
 
 
 def _planned_microbatch(arch: str, shape: ShapeSpec, pctx) -> int:
-    """Derive the moe_microbatch preset from the planner's overlap-aware
-    dispatch decision for this cell (the 'mwmicro' drift fix: the old
-    presets hard-coded G=4, a value the planner never chose)."""
+    """Derive the moe_microbatch preset from the JOINT pipeline decision
+    of this cell's program (the 'mwmicro' drift fix, now joint-aware:
+    the shared G is the one the dispatch+combine round trip scores best
+    at, not the dispatch half's own optimum)."""
     cfg = get_config(arch)
     if not cfg.is_moe:
         return 1
-    from repro.core import planner as pl
-    ep_kw = _cell_ep_kw(cfg, shape, pctx)
-    d = pl.moe_dispatch_decision(**ep_kw, topo=pctx.fabric)
-    return max(1, math.gcd(d.microbatch, ep_kw["tokens_per_rank"]))
+    eplan = _cell_execution_plan(arch, shape, pctx)
+    joint = eplan.joint.get(f"{shape.kind}/moe_dispatch")
+    g = joint.microbatch if joint else 1
+    return max(1, math.gcd(g, _cell_tokens_per_rank(shape, pctx)))
 
 
 def _cell_pctx(arch: str, shape: ShapeSpec, multi_pod: bool, variant: str):
@@ -396,6 +400,13 @@ def _cell_pctx(arch: str, shape: ShapeSpec, multi_pod: bool, variant: str):
     if planned_g:
         pctx = dataclasses.replace(
             pctx, moe_microbatch=_planned_microbatch(arch, shape, pctx))
+    if pctx.plan_policy == "auto":
+        # bind the cell's jointly-planned ExecutionPlan: the traced model
+        # resolves its sites by lookup — the dry run exercises the same
+        # bound-plan path production launchers use
+        program = _cell_program(arch, shape, pctx)
+        if program.sites:
+            pctx = pctx.bind(pctx.plan_collectives(program))
     return pctx
 
 

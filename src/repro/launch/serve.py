@@ -93,6 +93,23 @@ def main(argv=None):
               f"recalibrated={bool(event)}"
               + (f", drift at fit {100 * event['drift']:.1f}%"
                  if event else ""))
+    # Declare both serving phases' collective sites as ONE program and
+    # bind the jointly-planned ExecutionPlan BEFORE building the model:
+    # the jitted prefill/decode traces then resolve their MoE round trips
+    # by site lookup (prefill and decode sites differ by payload, so one
+    # bound plan serves both phases).
+    if pctx is not None and pctx.plan_policy == "auto":
+        from repro.parallel.context import build_collective_program
+        # itemsize must match the activation dtype build_model uses
+        # below (site keys embed the payload bucket)
+        program = build_collective_program(
+            cfg, pctx, "serve", {"prefill": (args.prompts, args.prompt_len),
+                                 "decode": (args.prompts, 1)},
+            itemsize=4 if args.smoke else 2)
+        if program.sites:
+            eplan = pctx.plan_collectives(program)
+            pctx = pctx.bind(eplan)
+            print(eplan.summary())
     model = build_model(cfg, pctx, dtype=jnp.float32 if args.smoke
                         else jnp.bfloat16)
     params = model.init(jax.random.key(args.seed))
@@ -107,6 +124,9 @@ def main(argv=None):
           f"prefill {engine.stats['prefill_s']*1e3:.0f}ms, "
           f"decode {engine.stats['decode_s']*1e3:.0f}ms")
     for phase, per_op in engine.stats.get("plans", {}).items():
+        if phase == "execution_plan":
+            print(f"execution plan fingerprint: {per_op}")
+            continue
         if phase == "calibration":
             last = per_op.get("last_recalibration")
             print(f"calibration: drift {per_op['drift_pct']:.1f}% over "

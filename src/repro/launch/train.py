@@ -106,44 +106,6 @@ def main(argv=None):
             logging.info("planner fabric: %s", pctx.fabric.name)
         shape = SHAPES[args.shape]
         batch, seq = shape.global_batch, shape.seq_len
-        if cfg.is_moe:
-            # Planner-selected dispatch AND combine plans for this
-            # workload (the same decisions moe_ffn consumes at trace time
-            # under "auto" — the two halves are planned independently).
-            from repro.core.latency_model import moe_overlap_compute_s
-            n_local = (batch * seq) // (pctx.num_pods * pctx.data_size)
-            # overlap context: the modeled expert-FFN time the pipelined
-            # scoring mode hides chunked dispatch/combine behind — the
-            # same estimate moe_ffn derives at trace time
-            compute_s = moe_overlap_compute_s(
-                n_local, cfg.top_k, cfg.d_model, cfg.expert_d_ff,
-                tp=pctx.model_size)
-            # token_bytes matches the bf16 activations built below; the
-            # authoritative decision is the one moe_ffn re-derives from
-            # the live dtype at trace time (same LRU cache entry here).
-            decision = pctx.moe_dispatch_plan(
-                cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
-                token_bytes=cfg.d_model * 2, compute_s=compute_s)
-            if decision is not None:
-                logging.info("planner %s", decision.summary())
-                if decision.microbatch > 1:
-                    logging.info(
-                        "planner pipelined dispatch: G=%d chunks "
-                        "(serial %.1fus -> %.1fus predicted)",
-                        decision.microbatch,
-                        decision.predicted_serial_s * 1e6,
-                        decision.predicted_s * 1e6)
-                combine = pctx.moe_combine_plan(
-                    cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
-                    token_bytes=cfg.d_model * 2, compute_s=compute_s)
-                if combine is not None:
-                    logging.info("planner %s", combine.summary())
-            else:
-                logging.info("planner fixed: moe_scheme=%s moe_combine=%s "
-                             "moe_microbatch=%d",
-                             pctx.moe_scheme,
-                             pctx.moe_combine or pctx.moe_scheme,
-                             pctx.moe_microbatch)
 
     monitor = None
     probe = None
@@ -170,6 +132,43 @@ def main(argv=None):
         if pctx is not None:
             pctx = dataclasses.replace(pctx, calibration=store)
 
+    # Declare the training phase's collective program up-front and bind
+    # the jointly-planned ExecutionPlan: the MoE (dispatch, combine) pair
+    # is swept as ONE shared chunk pipeline (a smaller dispatch G can win
+    # on the combined score) and the split-TP boundary gather rides in
+    # the same program.  Built AFTER calibration so the plan is scored
+    # under the fitted model; moe_ffn resolves its sites by lookup
+    # against the bound plan at trace time.
+    eplan = None
+    if pctx is not None:
+        from repro.parallel.context import build_collective_program
+        # itemsize must match the activation dtype built below (site
+        # keys embed the payload bucket)
+        program = build_collective_program(
+            cfg, pctx, "train", {"train": (batch, seq)},
+            itemsize=4 if args.smoke else 2)
+        if program.sites and pctx.plan_policy == "auto":
+            eplan = pctx.plan_collectives(program)
+            pctx = pctx.bind(eplan)
+            for line in eplan.summary().splitlines():
+                logging.info("planner %s", line)
+            joint = eplan.joint.get("train/moe_dispatch")
+            if joint is not None and joint.microbatch > 1:
+                logging.info(
+                    "planner pipelined MoE round trip: G=%d shared chunks "
+                    "(serial %.1fus -> %.1fus predicted)",
+                    joint.microbatch, joint.predicted_serial_s * 1e6,
+                    joint.predicted_s * 1e6)
+        elif pctx.plan_policy == "auto":
+            logging.info("planner auto: no collective sites to declare "
+                         "for this config (dense, no split-TP gather)")
+        else:
+            logging.info("planner fixed: moe_scheme=%s moe_combine=%s "
+                         "moe_microbatch=%d",
+                         pctx.moe_scheme,
+                         pctx.moe_combine or pctx.moe_scheme,
+                         pctx.moe_microbatch)
+
     model = build_model(cfg, pctx,
                         dtype=jnp.float32 if args.smoke else jnp.bfloat16)
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
@@ -181,18 +180,39 @@ def main(argv=None):
                          checkpoint_every=args.ckpt_every,
                          checkpoint_dir=args.ckpt_dir, log_every=10)
 
+    # LIVE overlap-efficiency feedback (ROADMAP debt): pipelined moe_ffn
+    # step wall times flow through Planner.note_measurement into the
+    # joint decision's log rows, so DriftMonitor's fit_overlap_eff is fed
+    # by the real training loop — not just SimProbe/synthetic rows.
+    attribution = None
+    if monitor is not None and eplan is not None:
+        from repro.telemetry import StepAttribution
+        joint = next((d for d in eplan.joint.values()
+                      if d.microbatch > 1), None)
+        if joint is not None:
+            from repro.core.planner import default_planner
+            attribution = StepAttribution(
+                default_planner(), joint,
+                n_layers=max(1, cfg.n_layers
+                             - getattr(cfg, "first_k_dense", 0)))
+
     step_hook = None
-    if args.calibrate == "online":
+    if attribution is not None or args.calibrate == "online":
         def step_hook(step, row, _every=max(1, args.calibrate_every)):
-            if step == 0 or step % _every:
+            if attribution is not None:
+                attribution.observe_step(row["wall"])
+            if args.calibrate != "online" or step == 0 or step % _every:
                 return
             event = monitor.run_cycle(probe)
             if event:
                 logging.info(
                     "step %d: drift %.1f%% exceeded %.0f%% — recalibrated "
-                    "(%d links refit); planner cache invalidated",
+                    "(%d links refit, overlap_eff=%s, %d program(s) "
+                    "replanned); planner cache invalidated",
                     step, 100 * event["drift"],
-                    100 * monitor.threshold, event["measured_links"])
+                    100 * monitor.threshold, event["measured_links"],
+                    event.get("overlap_eff"),
+                    len(event.get("programs", [])))
 
     trainer = Trainer(model, opt,
                       lambda s: batch_for_model(cfg, data.batch(s)),
@@ -207,6 +227,9 @@ def main(argv=None):
         print(f"calibration: {rep['recalibrations']} recalibration(s), "
               f"drift {rep['drift_pct']:.1f}%, "
               f"{rep['store_records']} store records")
+    if attribution is not None:
+        print(f"overlap feedback: {attribution.fed} step timing(s) fed "
+              f"into the joint pipeline decision's measurement rows")
     return 0
 
 

@@ -284,18 +284,22 @@ def split_tp_allgather(x, pctx, *, axis_name: Optional[str] = None):
 
     Must be called inside ``shard_map`` (named-axis collective).  Routing:
 
-    - ``plan_policy == "auto"``: through ``collectives.planned_allgather``
-      — scheme and split come from the latency-model planner at trace
-      time (baseline below the Fig 7 crossover, multiwrite above it); no
-      fixed ``mode=``/``split=`` at the call site.
-    - ``plan_policy == "fixed"``: the paper-faithful multiwrite paired
-      relaying at the §5.2 analytic split.
+    - bound ``pctx.execution_plan`` with a matching declared allgather
+      site, or ``plan_policy == "auto"``: the per-site decision comes
+      from ``pctx.allgather_plan`` (ExecutionPlan lookup first, planner
+      fallback — baseline below the Fig 7 crossover, multiwrite above
+      it); no fixed ``mode=``/``split=`` at the call site.
+    - ``plan_policy == "fixed"`` without a bound site: the
+      paper-faithful multiwrite paired relaying at the §5.2 analytic
+      split.
     - ``tp_subgroups == 1``: plain all_gather over the whole axis (no
       split-TP domains, nothing to relay through).
 
     Returns ``[domain_size, *x.shape]`` — fragment-stacked, bit-identical
     to ``collectives.allgather_reference`` over the same domains.
     """
+    import math as _math
+
     from repro.core import collectives as cl
     from repro.core.schedules import optimal_split
 
@@ -307,8 +311,11 @@ def split_tp_allgather(x, pctx, *, axis_name: Optional[str] = None):
         # paired relaying (and the registered §3.1 plans) are defined on
         # 2 domains; more domains gather plainly within each domain
         return cl.allgather_reference(x, axis, num_domains=nd)
-    if pctx.plan_policy == "auto":
-        return cl.planned_allgather(x, axis, num_domains=nd)
+    frag_bytes = _math.prod(x.shape) * x.dtype.itemsize
+    decision = pctx.allgather_plan(frag_bytes, num_domains=nd)
+    if decision is not None:
+        return cl.planned_allgather(x, axis, num_domains=nd,
+                                    decision=decision)
     return cl.multiwrite_allgather(
         x, axis, num_domains=nd,
         split=optimal_split("multiwrite_paired"), mode="paired")

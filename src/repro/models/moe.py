@@ -7,22 +7,22 @@ Token path per layer (DeepSeek-style EP):
   -> per-expert gated FFN (TP over the model axis inside each expert)
   -> hierarchical_combine (relay-side partial reduction on the way back)
 
-Scheme selection: under ``pctx.plan_policy == "auto"`` the dispatch plan
-comes from :mod:`repro.core.planner` at trace time (payload size +
-topology decide — the §5.2 dynamic workflow, Fig 8's batch-dependent
-winner); under "fixed", ``pctx.moe_scheme`` selects hierarchical
-(MultiWrite) vs baseline (unicast: one copy per (token, destination
-chip)) — the paper's comparison pair, selectable per run for the §Perf
-ablation.  The COMBINE path is resolved independently through the
-planner's "combine" op (``pctx.resolve_combine_scheme``): a hierarchical
-dispatch may return via relay-reduced partials (hierarchical_combine) or
-individual partials (hierarchical_combine_unicast), whichever the return
-path's own ledger scores faster on the active fabric.  The MICROBATCH
-knob is planner-driven too: under "auto" the pipelined scoring mode
-(overlap-aware ledgers, ``core.latency_model.score_ledger``) picks the
-chunk count G, and G > 1 runs the double-buffered pipeline below —
-dispatch of chunk k+1 overlaps expert FFN of chunk k and combine of
-chunk k-1, bit-exact vs the G == 1 trace.
+Scheme selection: the dispatch scheme, the combine (return-path) scheme
+and the pipeline chunk count G are ONE jointly-planned decision
+(``pctx.moe_pipeline_kwargs``) — resolved by declared-site lookup
+against a bound :class:`~repro.core.plan.ExecutionPlan`, or through the
+same ``Planner.plan_program`` joint sweep ad hoc under
+``plan_policy="auto"`` (payload size + topology decide — the §5.2
+dynamic workflow, Fig 8's batch-dependent winner, with both halves of
+the round trip scored as one shared chunk pipeline); under "fixed",
+``pctx.moe_scheme``/``pctx.moe_combine`` select hierarchical
+(MultiWrite) vs baseline (unicast) verbatim — the paper's comparison
+pair, selectable per run for the §Perf ablation.  A hierarchical
+dispatch may return via relay-reduced partials (hierarchical_combine)
+or individual partials (hierarchical_combine_unicast), whichever the
+joint ledger scores faster on the active fabric; G > 1 runs the
+double-buffered pipeline below — dispatch of chunk k+1 overlaps expert
+FFN of chunk k and combine of chunk k-1, bit-exact vs the G == 1 trace.
 
 EP placement: EP spans (pod, data) when the arch has enough experts
 (kimi-k2: 384 experts over 32 EP ranks — the paper's large-EP regime);
@@ -163,39 +163,37 @@ def moe_ffn(params, x, cfg, pctx: ParallelContext | None,
     n_local = (b * s) // (pctx.num_pods * pctx.data_size)
     dcfg = balanced_capacities(n_local, cfg.top_k, p, dd, per_rank,
                                capacity_factor)
-    # Dispatch scheme AND pipeline chunk count: planner-chosen from
-    # (payload, topology, modeled expert-FFN compute) under
-    # plan_policy="auto" (§5.2 dynamic workflow — decode traces pick the
-    # unicast plan at small batch, prefill/train pick MultiWrite past the
-    # crossover, and the pipelined scoring mode picks the microbatch G
-    # where overlapping dispatch/compute/combine chunks beats the
-    # per-chunk launch alpha), or the declared moe_scheme/moe_microbatch
-    # knobs under "fixed".
-    # The COMBINE (return path) is resolved independently: its redundancy
-    # is spread over the holders' rails, so its crossover sits elsewhere
-    # (and the fabric may be asymmetric).  The baseline dispatch has no
-    # relay to reduce at, so its return path is always unicast.
+    # The WHOLE round trip — dispatch scheme, return-path scheme and the
+    # shared pipeline chunk count G — is one jointly-planned decision:
+    # a bound ExecutionPlan resolves it by declared-site lookup; under
+    # plan_policy="auto" without a bound plan the same joint sweep runs
+    # ad hoc (§5.2 dynamic workflow — decode traces pick the unicast
+    # pair at small batch, prefill/train cross to MultiWrite, and the
+    # shared-pipeline scorer picks the G where overlapping
+    # dispatch/compute/combine chunks beats BOTH halves' per-chunk
+    # launch alphas); the declared moe_scheme/moe_combine/moe_microbatch
+    # knobs apply under "fixed".
     from repro.core.latency_model import moe_overlap_compute_s
     compute_s = moe_overlap_compute_s(n_local, cfg.top_k, d,
                                       params["w1"].shape[-1],
                                       tp=pctx.model_size)
-    dispatch_kw = pctx.resolve_moe_dispatch(
+    pipe_kw = pctx.moe_pipeline_kwargs(
         cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
         token_bytes=d * x.dtype.itemsize, compute_s=compute_s)
-    scheme = dispatch_kw["moe_scheme"]
     # the chosen G must divide the local token count; gcd clamps it to
-    # the largest divisor <= G (pow-2 grids always divide pow-2 batches)
-    microbatch = math.gcd(max(1, int(dispatch_kw.get("microbatch", 1))),
+    # the largest divisor <= G (pow-2 grids always divide pow-2 batches).
+    # A clamp re-resolves the configuration AT the executed G: the
+    # scheme pair is taken from the joint sweep's candidates at the
+    # depth the pipeline actually runs, not one it never honors.
+    microbatch = math.gcd(max(1, int(pipe_kw["microbatch"])),
                           n_local) or 1
-    combine_scheme = "baseline"
-    if scheme == "hierarchical":
-        # the combine runs inside the SAME chunk pipeline as dispatch,
-        # so its scheme is compared at the executed G — not at a G of
-        # its own that the pipeline never honors
-        combine_scheme = pctx.resolve_combine_scheme(
+    if microbatch != int(pipe_kw["microbatch"]):
+        pipe_kw = pctx.moe_pipeline_kwargs(
             cfg.num_experts, cfg.top_k, tokens_per_rank=n_local,
             token_bytes=d * x.dtype.itemsize, compute_s=compute_s,
             microbatch=microbatch)
+    scheme = pipe_kw["moe_scheme"]
+    combine_scheme = pipe_kw["moe_combine"]
     if scheme == "baseline":
         dcfg = unicast_capacities(dcfg, n_local, cfg.top_k, p * dd,
                                   per_rank, capacity_factor)

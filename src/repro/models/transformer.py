@@ -173,9 +173,10 @@ def _split_tp_seq_gather(x, pctx: Optional[ParallelContext]):
     over the model axis; attention needs the full sequence back.  When
     the model axis is divided into ``tp_subgroups`` domains, that gather
     decomposes hierarchically: each domain reassembles its own sequence
-    span via :func:`repro.models.layers.split_tp_allgather` — the
-    planner-routed lowering whose multiwrite plans exploit the
-    otherwise-idle cross-domain links — then ONE cross-domain gather of
+    span via :func:`repro.models.layers.split_tp_allgather` — which
+    consumes the bound ExecutionPlan's per-site decision (or the planner
+    under "auto"); its multiwrite plans exploit the otherwise-idle
+    cross-domain links — then ONE cross-domain gather of
     the domain-assembled chunks completes the sequence.  Bit-identical
     to the implicit single-stage GSPMD gather it replaces (the multidev
     suite pins transformer forward equality against ``tp_subgroups=1``).

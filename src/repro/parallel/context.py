@@ -17,10 +17,18 @@ Axis roles on the production mesh (launch/mesh.py):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _deprecated(name: str, repl: str) -> None:
+    warnings.warn(
+        f"ParallelContext.{name} is deprecated (one release): collective "
+        f"sites are planned as a whole program now — use {repl}",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +75,12 @@ class ParallelContext:
     #   chunk loop).  Under plan_policy="auto" the planner's microbatch
     #   knob overrides this — the pipelined scoring mode picks the G
     #   where the overlap win beats the per-chunk alpha.
+    execution_plan: Optional[object] = None  # bound
+    #   core.plan.ExecutionPlan: the jointly-planned, fingerprinted
+    #   verdict for this workload's declared collective program.  Trace-
+    #   time consumers (moe_ffn, split-TP gathers) resolve their site by
+    #   key lookup against it; sites the program didn't declare fall back
+    #   to plan_policy.  Install via ``pctx.bind(plan)``.
 
     # -- derived -------------------------------------------------------------
     @property
@@ -110,69 +124,255 @@ class ParallelContext:
             hw = calibrated_hw(resolve_store(self.calibration), topo)
         return topo, hw
 
+    # -- declarative collective programs (the bindable planning surface) -----
+    def bind(self, plan) -> "ParallelContext":
+        """Install a jointly-planned :class:`~repro.core.plan.ExecutionPlan`
+        (returns the bound context — the dataclass is frozen).  The plan
+        must have been planned for THIS context's fabric: binding a plan
+        fingerprinted on a different topology is a deployment bug caught
+        here rather than silently mis-executed."""
+        if (plan is not None and self.fabric is not None
+                and plan.topo_fingerprint != ("pinned",)):
+            fp = self.fabric.fingerprint()
+            if plan.topo_fingerprint != fp:
+                raise ValueError(
+                    f"ExecutionPlan {plan.fingerprint} was planned on "
+                    f"{plan.topo_fingerprint[0]!r}, but this context's "
+                    f"fabric is {fp[0]!r} — replan the program for the "
+                    f"active fabric before binding")
+        return dataclasses.replace(self, execution_plan=plan)
+
+    def moe_sites(self, phase: str, *, num_experts: int, top_k: int,
+                  tokens_per_rank: int, token_bytes: int,
+                  compute_s: float = 0.0) -> tuple:
+        """This context's coupled MoE (dispatch, combine) site pair for
+        one phase — skew comes from the declared ``moe_skew`` knob, so a
+        program built here prices exactly what the trace-time lookup
+        will ask for."""
+        from repro.core import plan as plan_ir
+        return plan_ir.moe_sites(
+            phase, num_experts=num_experts, top_k=top_k,
+            tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
+            skew=self.moe_skew, compute_s=compute_s)
+
+    def split_tp_gather_site(self, phase: str, *, global_batch: int,
+                             seq_len: int, d_model: int, itemsize: int = 2):
+        """The §3.1 split-TP AllGather site this context's transformer
+        blocks will issue for one phase (the SP -> TP boundary gather of
+        ``_split_tp_seq_gather``), or ``None`` when the geometry emits no
+        split-TP gather — mirrors the trace-time guards exactly."""
+        m, nd = self.model_size, self.tp_subgroups
+        dp = self.num_pods * self.data_size
+        if (nd != 2 or not self.seq_parallel or m % nd or seq_len % m
+                or global_batch % dp):
+            return None
+        from repro.core import plan as plan_ir
+        from repro.core.topology import split_tp_full_mesh
+        frag = (global_batch // dp) * (seq_len // m) * d_model * itemsize
+        topo, _ = split_tp_full_mesh(m, tp=m // nd)
+        return plan_ir.allgather_site(phase, frag_bytes=frag,
+                                      num_domains=nd, topo=topo)
+
+    def plan_collectives(self, program):
+        """Jointly plan a declared program on this context's fabric and
+        calibration: the launch-surface entry point
+        (``pctx = pctx.bind(pctx.plan_collectives(program))``)."""
+        from repro.core.planner import default_planner
+        num_experts = max((dict(s.scenario_kw).get("num_experts", 0)
+                           for s in program.sites), default=0)
+        topo, hw = self._plan_topo_hw(num_experts)
+        return default_planner().plan_program(program, topo, hw)
+
+    # -- trace-time site resolution ------------------------------------------
+    def moe_pipeline_kwargs(self, num_experts: int, top_k: int,
+                            tokens_per_rank: int, token_bytes: int,
+                            compute_s: float = 0.0,
+                            microbatch: Optional[int] = None) -> dict:
+        """The full MoE round-trip configuration one layer executes:
+        ``{"moe_scheme", "moe_combine", "microbatch"}`` — dispatch
+        scheme, return-path scheme and the SHARED pipeline chunk count,
+        decided together.
+
+        Resolution order: (1) a bound :class:`ExecutionPlan` whose
+        declared dispatch site matches this workload (pure lookup, the
+        production path); (2) under ``plan_policy="auto"``, an ad-hoc
+        single-phase program through ``Planner.plan_program`` (same
+        joint sweep, LRU-cached — undeclared workloads still plan
+        jointly); (3) the declared fixed knobs.  The executable-pairing
+        constraint (a unicast dispatch leaves no relay state, so its
+        return path is unicast) holds on every path.
+
+        ``microbatch`` constrains the result to the chunk count the
+        layer actually RUNS: when moe_ffn's divisibility clamp moves G
+        off the planned value, it re-resolves here and gets the best
+        joint candidate AT the executed G (a scheme pair that only won
+        at the planned depth is never executed at one the sweep scored
+        worse)."""
+        payload = float(tokens_per_rank) * token_bytes
+        scen = dict(num_experts=num_experts, top_k=top_k,
+                    token_bytes=token_bytes)
+        decision = None
+        if self.execution_plan is not None:
+            role = self.execution_plan.find_role(
+                "dispatch", payload, skew=self.moe_skew,
+                compute_s=compute_s, **scen)
+            if role is not None:
+                anchor = self.execution_plan.group_of.get(role)
+                decision = (self.execution_plan.joint.get(anchor)
+                            if anchor is not None else None)
+                if decision is None:
+                    kw = self.execution_plan.site_kwargs(role)
+                    return self._norm_moe_kwargs(
+                        self._kwargs_at_g(None, kw, microbatch))
+        if decision is None:
+            if self.plan_policy != "auto":
+                return self._norm_moe_kwargs(self._kwargs_at_g(
+                    None, {"moe_scheme": self.moe_scheme,
+                           "moe_combine": self.moe_combine,
+                           "microbatch": max(1, int(self.moe_microbatch))},
+                    microbatch))
+            from repro.core import plan as plan_ir
+            sites = self.moe_sites(
+                "auto", num_experts=num_experts, top_k=top_k,
+                tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
+                compute_s=compute_s)
+            eplan = self.plan_collectives(
+                plan_ir.CollectiveProgram("moe/auto", sites))
+            decision = eplan.joint.get(sites[0].role)
+            if decision is None:
+                return self._norm_moe_kwargs(self._kwargs_at_g(
+                    None, eplan.site_kwargs(sites[0].role), microbatch))
+        return self._norm_moe_kwargs(self._kwargs_at_g(
+            decision, dict(decision.shard_map_kwargs), microbatch))
+
+    @staticmethod
+    def _kwargs_at_g(decision, kwargs: dict,
+                     microbatch: Optional[int]) -> dict:
+        """Constrain a resolved configuration to an executed chunk count:
+        the best JOINT candidate at that G when the decision carries a
+        candidate sweep, else the same kwargs with G overridden."""
+        if microbatch is None or \
+                int(microbatch) == int(kwargs.get("microbatch", 1)):
+            return kwargs
+        g = max(1, int(microbatch))
+        for name, kn, _ in sorted(
+                getattr(decision, "candidates", None) or (),
+                key=lambda c: c[2]):
+            if dict(kn).get("microbatch", 1) != g or "+" not in name:
+                continue
+            from repro.core import plan as plan_ir
+            d_name, _, c_name = name.partition("+")
+            kw = plan_ir.get_plan("dispatch", d_name).shard_map_kwargs(
+                microbatch=g)
+            kw.update(plan_ir.get_plan("combine", c_name).shard_map_kwargs(
+                microbatch=g))
+            return kw
+        return {**kwargs, "microbatch": g}
+
+    @staticmethod
+    def _norm_moe_kwargs(kw: dict) -> dict:
+        """Normalize a resolved MoE configuration: the combine defaults
+        to following the dispatch scheme, and the baseline (unicast)
+        dispatch forces the unicast return path (no relay state exists
+        for a relay-reduced combine)."""
+        scheme = kw.get("moe_scheme", "hierarchical")
+        combine = kw.get("moe_combine") or scheme
+        if scheme == "baseline":
+            combine = "baseline"
+        return {"moe_scheme": scheme, "moe_combine": combine,
+                "microbatch": max(1, int(kw.get("microbatch", 1)))}
+
+    def allgather_plan(self, frag_bytes: float, num_domains: int = 2):
+        """Decision for the §3.1 split-TP AllGather at one traced
+        fragment size: bound-plan lookup first, then the planner under
+        "auto", ``None`` under "fixed" (the call site keeps the
+        paper-faithful analytic knobs)."""
+        if self.execution_plan is not None:
+            role = self.execution_plan.find_role(
+                "allgather", frag_bytes, num_domains=num_domains)
+            if role is not None:
+                return self.execution_plan.decision(role)
+        if self.plan_policy != "auto":
+            return None
+        from repro.core.planner import default_planner
+        from repro.core.topology import split_tp_full_mesh
+        n = self.model_size
+        topo, _ = split_tp_full_mesh(n, tp=max(1, n // num_domains))
+        return default_planner().choose(
+            "allgather", float(frag_bytes), topo, executable_only=True,
+            num_domains=num_domains)
+
+    # -- deprecated per-op resolution shims (one release) ---------------------
+    # The resolve_*/moe_*_plan knob zoo planned every site independently;
+    # coupled sites are planned jointly through CollectiveProgram /
+    # ExecutionPlan now.  These delegate to the program path so legacy
+    # callers see the jointly-planned answers.
+    def _moe_site_decision(self, op: str, num_experts: int, top_k: int,
+                           tokens_per_rank: int, token_bytes: int,
+                           compute_s: float = 0.0):
+        payload = float(tokens_per_rank) * token_bytes
+        scen = dict(num_experts=num_experts, top_k=top_k,
+                    token_bytes=token_bytes)
+        if self.execution_plan is not None:
+            role = self.execution_plan.find_role(
+                op, payload, skew=self.moe_skew, compute_s=compute_s,
+                **scen)
+            if role is not None:
+                return self.execution_plan.decision(role)
+        if self.plan_policy != "auto":
+            return None
+        from repro.core import plan as plan_ir
+        sites = self.moe_sites("auto", num_experts=num_experts,
+                               top_k=top_k, tokens_per_rank=tokens_per_rank,
+                               token_bytes=token_bytes, compute_s=compute_s)
+        eplan = self.plan_collectives(
+            plan_ir.CollectiveProgram("moe/auto", sites))
+        role = sites[0].role if op == "dispatch" else sites[1].role
+        return eplan.decision(role)
+
     def moe_dispatch_plan(self, num_experts: int, top_k: int,
                           tokens_per_rank: int, token_bytes: int,
                           compute_s: float = 0.0):
-        """Planner decision for an MoE dispatch on this mesh (or on the
-        explicit ``fabric``), or ``None`` when ``plan_policy`` is "fixed"
-        (the explicit ``moe_scheme`` knob applies).  Called at trace
-        time; decisions are LRU-cached on (topology, payload bucket).
-        ``compute_s > 0`` (the modeled expert-FFN time) enables the
-        pipelined scoring mode — the decision's ``microbatch`` knob can
-        then come back > 1."""
-        if self.plan_policy != "auto":
-            return None
-        from repro.core.planner import moe_dispatch_decision
-        use_pod, _ = self.ep_ranks(num_experts)
-        topo, hw = self._plan_topo_hw(num_experts)
-        return moe_dispatch_decision(
-            num_pods=self.num_pods if use_pod else 1,
-            ep_per_pod=self.data_size,
-            num_experts=num_experts, top_k=top_k,
-            tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
-            topo=topo, hw=hw, skew=self.moe_skew, compute_s=compute_s)
+        """DEPRECATED shim: the per-site dispatch view of the jointly
+        planned MoE pipeline (``None`` under "fixed" with no bound
+        plan).  Use ``plan_collectives`` + ``ExecutionPlan.decision``."""
+        _deprecated("moe_dispatch_plan",
+                    "plan_collectives(program).decision(role)")
+        return self._moe_site_decision("dispatch", num_experts, top_k,
+                                       tokens_per_rank, token_bytes,
+                                       compute_s)
 
     def moe_combine_plan(self, num_experts: int, top_k: int,
                          tokens_per_rank: int, token_bytes: int,
                          compute_s: float = 0.0):
-        """Planner decision for the MoE *combine* (return path), planned
-        independently of dispatch — the return redundancy is spread over
-        the holders' rails and may face asymmetric bandwidth.  ``None``
-        under "fixed"."""
-        if self.plan_policy != "auto":
-            return None
-        from repro.core.planner import moe_combine_decision
-        use_pod, _ = self.ep_ranks(num_experts)
-        topo, hw = self._plan_topo_hw(num_experts)
-        return moe_combine_decision(
-            num_pods=self.num_pods if use_pod else 1,
-            ep_per_pod=self.data_size,
-            num_experts=num_experts, top_k=top_k,
-            tokens_per_rank=tokens_per_rank, token_bytes=token_bytes,
-            topo=topo, hw=hw, skew=self.moe_skew, compute_s=compute_s)
+        """DEPRECATED shim: the per-site combine view of the jointly
+        planned MoE pipeline (no longer planned independently of
+        dispatch — the executable-pairing constraint and the shared
+        microbatch G apply)."""
+        _deprecated("moe_combine_plan",
+                    "plan_collectives(program).decision(role)")
+        return self._moe_site_decision("combine", num_experts, top_k,
+                                       tokens_per_rank, token_bytes,
+                                       compute_s)
 
     def resolve_moe_dispatch(self, num_experts: int, top_k: int,
                              tokens_per_rank: int, token_bytes: int,
                              compute_s: float = 0.0) -> dict:
-        """The dispatch configuration moe_ffn executes:
-        ``{"moe_scheme": ..., "microbatch": G}`` — planner-chosen under
-        ``plan_policy="auto"`` (scheme AND pipeline chunk count from one
-        sweep), the declared ``moe_scheme``/``moe_microbatch`` knobs
-        otherwise."""
-        decision = self.moe_dispatch_plan(num_experts, top_k,
-                                          tokens_per_rank, token_bytes,
-                                          compute_s=compute_s)
-        if decision is None:
-            return {"moe_scheme": self.moe_scheme,
-                    "microbatch": max(1, int(self.moe_microbatch))}
-        return dict(decision.shard_map_kwargs)
+        """DEPRECATED shim: ``{"moe_scheme", "microbatch"}`` of the
+        jointly planned pipeline.  Use :meth:`moe_pipeline_kwargs`."""
+        _deprecated("resolve_moe_dispatch", "moe_pipeline_kwargs")
+        kw = self.moe_pipeline_kwargs(num_experts, top_k, tokens_per_rank,
+                                      token_bytes, compute_s=compute_s)
+        return {"moe_scheme": kw["moe_scheme"],
+                "microbatch": kw["microbatch"]}
 
     def resolve_moe_scheme(self, num_experts: int, top_k: int,
                            tokens_per_rank: int, token_bytes: int,
                            compute_s: float = 0.0) -> str:
-        """The dispatch scheme moe_ffn executes: planner-chosen under
-        ``plan_policy="auto"``, the declared knob otherwise."""
-        return self.resolve_moe_dispatch(
+        """DEPRECATED shim: the dispatch scheme of the jointly planned
+        pipeline.  Use :meth:`moe_pipeline_kwargs`."""
+        _deprecated("resolve_moe_scheme", "moe_pipeline_kwargs")
+        return self.moe_pipeline_kwargs(
             num_experts, top_k, tokens_per_rank, token_bytes,
             compute_s=compute_s)["moe_scheme"]
 
@@ -180,34 +380,53 @@ class ParallelContext:
                                tokens_per_rank: int, token_bytes: int,
                                compute_s: float = 0.0,
                                microbatch: Optional[int] = None) -> str:
-        """The combine (return-path) scheme moe_ffn executes:
-        planner-chosen under ``plan_policy="auto"`` (the "combine" op,
-        resolved independently of dispatch), else the declared
-        ``moe_combine`` knob, defaulting to following ``moe_scheme``.
+        """DEPRECATED shim: the return-path scheme of the jointly
+        planned pipeline.  ``microbatch`` is accepted for compatibility
+        and ignored — the joint sweep already chooses the combine scheme
+        at the ONE shared G the pipeline executes."""
+        _deprecated("resolve_combine_scheme", "moe_pipeline_kwargs")
+        del microbatch
+        return self.moe_pipeline_kwargs(
+            num_experts, top_k, tokens_per_rank, token_bytes,
+            compute_s=compute_s)["moe_combine"]
 
-        ``microbatch`` constrains the comparison to the pipeline depth
-        the layer actually RUNS (moe_ffn chunks the whole pipeline at
-        the dispatch decision's G): the scheme is chosen among the
-        combine candidates at that G, not at a G the execution never
-        honors."""
-        decision = self.moe_combine_plan(num_experts, top_k,
-                                         tokens_per_rank, token_bytes,
-                                         compute_s=compute_s)
-        if decision is None:
-            if self.moe_combine is not None:
-                return self.moe_combine
-            return self.moe_scheme
-        if microbatch is None:
-            return decision.shard_map_kwargs["moe_combine"]
-        from repro.core import plan as plan_ir
-        g = max(1, int(microbatch))
-        at_g = [(t, name) for name, kn, t in decision.candidates
-                if dict(kn).get("microbatch", 1) == g]
-        if not at_g:                   # G outside the grid: unconstrained
-            return decision.shard_map_kwargs["moe_combine"]
-        best_name = min(at_g)[1]
-        return plan_ir.get_plan("combine", best_name).shard_map_kwargs(
-            microbatch=g)["moe_combine"]
+
+def build_collective_program(cfg, pctx: ParallelContext, name: str,
+                             phases: dict, *, itemsize: int = 2):
+    """The declared collective program of one launch surface.
+
+    ``phases`` maps a phase name ("train" | "prefill" | "decode") to its
+    ``(global_batch, seq_len)`` workload (``seq_len == 1`` for decode).
+    Per phase this declares the coupled MoE (dispatch, combine) pair
+    (MoE archs) and the split-TP boundary gather (when the context's
+    geometry emits one) — exactly the sites the traced model will look
+    up, derived from the same shard math the trace uses.  ``itemsize``
+    must match the activation dtype the model will TRACE with (bf16
+    default; pass 4 for fp32 smoke runs) — site keys embed the payload
+    bucket, so a dtype mismatch makes every lookup miss and fall back
+    to ad-hoc planning at the wrong payload."""
+    from repro.core import plan as plan_ir
+    from repro.core.latency_model import moe_overlap_compute_s
+    sites = []
+    for phase, (global_batch, seq_len) in phases.items():
+        if getattr(cfg, "is_moe", False):
+            dp = pctx.num_pods * pctx.data_size
+            n_rank = max(1, (global_batch * seq_len) // dp)
+            d_ff = getattr(cfg, "expert_d_ff", cfg.d_model)
+            compute_s = moe_overlap_compute_s(
+                n_rank, cfg.top_k, cfg.d_model, d_ff, tp=pctx.model_size)
+            sites.extend(pctx.moe_sites(
+                phase, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                tokens_per_rank=n_rank,
+                token_bytes=cfg.d_model * itemsize,
+                compute_s=compute_s))
+        if seq_len > 1:
+            ag = pctx.split_tp_gather_site(
+                phase, global_batch=global_batch, seq_len=seq_len,
+                d_model=cfg.d_model, itemsize=itemsize)
+            if ag is not None:
+                sites.append(ag)
+    return plan_ir.CollectiveProgram(name, tuple(sites))
 
 
 def shard(x, pctx: Optional[ParallelContext], *spec):

@@ -57,45 +57,67 @@ class ServeEngine:
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
 
+    def serving_program(self, batch: int, prompt_len: int):
+        """The declared collective program of this serving shape: both
+        phases' coupled MoE (dispatch, combine) pairs — prefill at
+        batch*prompt_len tokens, decode at batch tokens — plus the
+        split-TP boundary gather when the context emits one.  This is
+        what gets jointly planned and bound; decode typically stays on
+        the unicast pair (small payload, Fig 8) while prefill crosses to
+        MultiWrite with a shared microbatch G > 1 (decode has no compute
+        to hide chunks behind).  Sites assume bf16 activations (the
+        production serving dtype; fp32 smoke launchers bind their own
+        program with the right itemsize before building the model)."""
+        from repro.parallel.context import build_collective_program
+        return build_collective_program(
+            self.model.cfg, self.pctx, "serve",
+            {"prefill": (batch, prompt_len), "decode": (batch, 1)})
+
+    def execution_plan(self, batch: int, prompt_len: int):
+        """The jointly-planned ExecutionPlan for this serving shape: the
+        context's bound plan when one covers these phases (serve.py
+        binds before building the model, so the traces consumed exactly
+        this), else a fresh ``plan_program`` on the context's fabric and
+        calibration."""
+        if self.pctx is None:
+            return None
+        bound = self.pctx.execution_plan
+        if bound is not None:
+            return bound
+        program = self.serving_program(batch, prompt_len)
+        if not program.sites or self.pctx.plan_policy != "auto":
+            return None
+        return self.pctx.plan_collectives(program)
+
     def plan_report(self, batch: int, prompt_len: int) -> dict:
-        """Planner decisions for this serving shape, per phase and per
-        direction: the prefill (batch*prompt_len tokens) and decode
-        (batch tokens) DISPATCH plus the independently-planned COMBINE
-        (return path).  These are the decisions the jitted MoE layers
-        consume at trace time under ``plan_policy="auto"`` — decode
-        typically stays on the unicast plans (small payload, Fig 8) while
-        prefill crosses to MultiWrite; on asymmetric fabrics the two
-        directions can flip at different batches."""
-        mcfg = self.model.cfg
+        """Per-phase view of the jointly-planned serving program: each
+        phase's dispatch and combine site decisions plus the JOINT
+        pipeline verdict (shared microbatch G, combined predicted
+        latency) — the decisions the jitted MoE layers consume at trace
+        time, resolved against the same bound ExecutionPlan."""
         out = {}
         if self.monitor is not None:
             # predicted-vs-measured error + last re-calibration, from the
             # telemetry drift monitor (the serving face of the loop)
             out["calibration"] = self.monitor.report()
-        if self.pctx is None or not getattr(mcfg, "is_moe", False):
+        eplan = self.execution_plan(batch, prompt_len)
+        if eplan is None:
             return out
-        from repro.core.latency_model import moe_overlap_compute_s
-        dp = self.pctx.num_pods * self.pctx.data_size
-        d_ff = getattr(mcfg, "expert_d_ff", mcfg.d_model)
-        for phase, n_tokens in (("prefill", batch * prompt_len),
-                                ("decode", batch)):
-            n_rank = max(1, n_tokens // dp)
-            kw = dict(tokens_per_rank=n_rank,
-                      token_bytes=mcfg.d_model * 2,
-                      # overlap context: pipelined scoring can pick a
-                      # microbatch G > 1 for the prefill dispatch while
-                      # decode stays unchunked (nothing to hide behind)
-                      compute_s=moe_overlap_compute_s(
-                          n_rank, mcfg.top_k, mcfg.d_model, d_ff,
-                          tp=self.pctx.model_size))
-            dispatch = self.pctx.moe_dispatch_plan(
-                mcfg.num_experts, mcfg.top_k, **kw)
-            if dispatch is None:
-                continue
-            combine = self.pctx.moe_combine_plan(
-                mcfg.num_experts, mcfg.top_k, **kw)
-            out[phase] = {"dispatch": dispatch.report(),
-                          "combine": combine.report() if combine else None}
+        out["execution_plan"] = eplan.fingerprint
+        for site in eplan.program.sites:
+            phase, _, kind = site.role.partition("/")
+            if kind == "moe_dispatch":
+                cell = out.setdefault(phase, {})
+                cell["dispatch"] = eplan.decision(site.role).report()
+                joint = eplan.joint.get(site.role)
+                if joint is not None:
+                    cell["joint"] = joint.report()
+            elif kind == "moe_combine":
+                out.setdefault(phase, {})["combine"] = \
+                    eplan.decision(site.role).report()
+            elif kind == "split_tp_gather":
+                out.setdefault(phase, {})["split_tp_gather"] = \
+                    eplan.decision(site.role).report()
         return out
 
     def generate(self, prompts: np.ndarray, max_new: Optional[int] = None,

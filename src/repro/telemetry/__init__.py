@@ -19,19 +19,20 @@ benchmarks bench_calibration.
 from .fit import (FitResult, calibrated_hw, fit_link_class,
                   fit_link_classes, fit_link_roles, fit_measurements,
                   fit_overlap_eff)
-from .monitor import DriftMonitor, startup_calibration
+from .monitor import DriftMonitor, StepAttribution, startup_calibration
 from .probe import (GroundTruth, LiveProbe, SimProbe, default_payloads,
                     ledger_class_bytes, ledger_role_bytes, link_class,
-                    link_role, probe_record, probe_sweep)
+                    link_role, probe_link_directions, probe_record,
+                    probe_sweep)
 from .store import (SCHEMA_VERSION, CalibrationStore, resolve_store,
                     topo_key)
 
 __all__ = [
     "CalibrationStore", "DriftMonitor", "FitResult", "GroundTruth",
-    "LiveProbe", "SCHEMA_VERSION", "SimProbe", "calibrated_hw",
-    "default_payloads", "fit_link_class", "fit_link_classes",
-    "fit_link_roles", "fit_measurements", "fit_overlap_eff",
-    "ledger_class_bytes", "ledger_role_bytes", "link_class", "link_role",
-    "probe_record", "probe_sweep", "resolve_store", "startup_calibration",
-    "topo_key",
+    "LiveProbe", "SCHEMA_VERSION", "SimProbe", "StepAttribution",
+    "calibrated_hw", "default_payloads", "fit_link_class",
+    "fit_link_classes", "fit_link_roles", "fit_measurements",
+    "fit_overlap_eff", "ledger_class_bytes", "ledger_role_bytes",
+    "link_class", "link_role", "probe_link_directions", "probe_record",
+    "probe_sweep", "resolve_store", "startup_calibration", "topo_key",
 ]

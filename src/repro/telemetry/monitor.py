@@ -31,7 +31,7 @@ from repro.core.planner import Planner
 from repro.core.topology import Topology
 
 from .fit import fit_measurements, fit_overlap_eff
-from .probe import DEFAULT_OPS, probe_sweep
+from .probe import DEFAULT_OPS, probe_link_directions, probe_sweep
 from .store import CalibrationStore, topo_key
 
 
@@ -115,9 +115,13 @@ class DriftMonitor:
 
     # -- the loop ------------------------------------------------------------
     def recalibrate(self, *, force: bool = False) -> Optional[dict]:
-        """Fit the store's latest records for this fabric and swap the
-        fitted model into the planner.  Returns the event dict, or None
-        when no class fit cleared the confidence floor."""
+        """Fit the store's latest records for this fabric, swap the
+        fitted model into the planner, and REPLAN every registered
+        collective program under it — re-calibration operates on whole
+        programs (the unit consumers bind), not just per-op cache
+        entries: the event carries each program's fresh fingerprint and
+        whether any jointly-planned decision moved.  Returns the event
+        dict, or None when no class fit cleared the confidence floor."""
         records = list(
             self.store.latest_by_key(fabric=topo_key(self.topo)).values())
         measurements, fits = fit_measurements(records, self.topo)
@@ -133,6 +137,7 @@ class DriftMonitor:
                   if measurements else self.base_hw)
         drift = self.drift()
         self.planner.refresh_hardware(new_hw)
+        program_events = self.planner.replan_programs()
         event = {
             "kind": "recalibrated",
             "time": time.time(),
@@ -144,12 +149,25 @@ class DriftMonitor:
             "fits": {cls: f.report() for cls, f in fits.items()},
             "measured_links": len(measurements.get("links", {})),
             "overlap_eff": measurements.get("overlap_eff"),
+            "programs": [{"program": e["program"],
+                          "fingerprint": e["fingerprint"],
+                          "changed": e["changed"]}
+                         for e in program_events],
         }
         self.events.append(event)
         self._last_recal_check = self.checks
         for dq in self._errs.values():
             dq.clear()            # judged against the new model from here
         return event
+
+    def replanned(self, program_name: str):
+        """Latest replanned ExecutionPlan for ``program_name`` (from the
+        planner's program registry), or None — what a launch surface
+        re-binds after a recalibration event reports ``changed``."""
+        for ev in self.planner.replan_programs():
+            if ev["program"] == program_name:
+                return ev["plan"]
+        return None
 
     def check(self) -> Optional[dict]:
         """Recalibrate iff drift exceeds the threshold (and the window
@@ -164,13 +182,21 @@ class DriftMonitor:
         return self.recalibrate()
 
     def run_cycle(self, executor, *, ops: Sequence[str] = DEFAULT_OPS,
-                  payloads=None, **scenario_kw) -> Optional[dict]:
-        """One full telemetry cycle: probe sweep (predicted under the
-        planner's CURRENT model) -> store -> observe -> drift check.
-        Returns the recalibration event if one fired."""
+                  payloads=None, directions: bool = True,
+                  **scenario_kw) -> Optional[dict]:
+        """One full telemetry cycle: probe sweep + directed rail
+        microbenchmarks (predicted under the planner's CURRENT model)
+        -> store -> observe -> drift check.  Returns the recalibration
+        event if one fired.  ``directions=False`` skips the per-direction
+        p2p probes (they exist so never-bottlenecking rail directions —
+        asymmetric forward rails — get fitted instead of staying
+        nominal)."""
         records = probe_sweep(self.topo, executor, ops=ops,
                               payloads=payloads, hw=self.planner.hw,
                               **scenario_kw)
+        if directions:
+            records += probe_link_directions(self.topo, executor,
+                                             hw=self.planner.hw)
         self.store.extend(records)
         for r in records:
             self.observe(r)
@@ -197,6 +223,61 @@ class DriftMonitor:
                                       "measured_links", "n_records")}),
             "store_records": len(self.store),
         }
+
+
+class StepAttribution:
+    """Feeds LIVE training-step wall times into the joint pipeline
+    decision's measurement rows (``Planner.note_measurement``), closing
+    the ROADMAP gap where only SimProbe/synthetic rows reached
+    ``fit_overlap_eff``.
+
+    A step's wall time is ``other + n_layers * t_pipe`` where ``t_pipe``
+    is the per-layer MoE round-trip time the bound joint decision
+    brackets with its (serial, ideal) endpoints.  The non-MoE remainder
+    ``other`` is either supplied by the caller (``overhead_s`` — e.g. a
+    roofline estimate, which makes the attribution unbiased) or, by
+    default, MIN-ANCHORED: the fastest observed step is assumed to have
+    achieved the predicted pipeline time, and later steps' attribution
+    measures their EXCESS over it.  The min-anchored estimator is
+    deliberately conservative — it cannot invent an efficiency better
+    than predicted, only pull the fit down when steps run consistently
+    slower — and the median inside ``fit_overlap_eff`` absorbs
+    straggler-polluted steps.  Probe timings remain the calibration
+    ground truth; these rows keep the eta fit fed between probe sweeps.
+    """
+
+    def __init__(self, planner: Planner, decision, *, n_layers: int = 1,
+                 overhead_s: Optional[float] = None,
+                 warmup: int = 3) -> None:
+        self.planner = planner
+        self.decision = decision
+        self.n_layers = max(1, int(n_layers))
+        self.overhead_s = overhead_s
+        self.warmup = int(warmup)
+        self._seen = 0
+        self._min_wall = float("inf")      # running min: O(1) for
+        #   million-step training loops
+        self.fed = 0
+
+    def observe_step(self, wall_s: float) -> Optional[dict]:
+        """Attribute one completed step's wall time; returns the decision
+        log row it landed in (or None during warmup / when the
+        attribution is non-positive)."""
+        self._seen += 1
+        if self._seen <= self.warmup:      # compile/warmup steps excluded
+            return None
+        wall_s = float(wall_s)
+        self._min_wall = min(self._min_wall, wall_s)
+        overhead = self.overhead_s
+        if overhead is None:
+            overhead = (self._min_wall
+                        - self.n_layers * self.decision.predicted_s)
+        measured = (wall_s - overhead) / self.n_layers
+        if measured <= 0:
+            return None
+        row = self.planner.note_measurement(self.decision, measured)
+        self.fed += 1
+        return row
 
 
 def startup_calibration(topo: Topology, store_path=None, *,

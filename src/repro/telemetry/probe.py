@@ -204,7 +204,48 @@ class LiveProbe:
         if op == "allgather":
             return self._measure_allgather(plan_name, payload_bytes,
                                            knobs or {})
+        if op == "linkprobe":
+            return self._measure_linkprobe(payload_bytes, scenario_kw)
         return self._measure_moe(op, plan_name, payload_bytes, scenario_kw)
+
+    def _measure_linkprobe(self, payload_bytes: float,
+                           scenario_kw: dict) -> float:
+        """Directed point-to-point transfer: every rank of the source
+        server block ppermutes its buffer to the same-index rank of the
+        destination block — one direction's rails carry traffic, nothing
+        else does.  Server blocks come from the mesh: the pod axis when
+        present, else the ep axis split into two halves."""
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.compat import shard_map
+
+        src = int(scenario_kw.get("src_server", 0))
+        dst = int(scenario_kw.get("dst_server", 1))
+        if self.pod_axis:
+            axis, n_servers = self.pod_axis, self.mesh.shape[self.pod_axis]
+            per = 1
+        else:
+            axis, n_servers = self.ep_axis, 2
+            per = self.mesh.shape[self.ep_axis] // 2
+        src %= n_servers
+        dst %= n_servers
+        if per < 1 or src == dst and n_servers > 1:
+            dst = (src + 1) % n_servers
+        perm = [(src * per + i, dst * per + i) for i in range(max(1, per))]
+        feat = 64
+        rows = max(1, int(payload_bytes) // (4 * feat))
+        n = int(np.prod([self.mesh.shape[a] for a in (axis,)]))
+        x = jnp.zeros((n * rows, feat), jnp.float32)
+        body = functools.partial(lax.ppermute, axis_name=axis, perm=perm)
+        fn = jax.jit(shard_map(body, mesh=self.mesh, in_specs=P(axis),
+                               out_specs=P(axis), check_vma=False))
+        with self.mesh:
+            return self._time(fn, x)
 
     def _measure_allgather(self, plan_name: str, payload_bytes: float,
                            knobs: dict) -> float:
@@ -368,4 +409,40 @@ def probe_sweep(topo: Topology, executor, *,
                 records.append(probe_record(
                     op, plan, payload, topo, measured, predicted, ledger,
                     getattr(executor, "source", "unknown"), knobs))
+    return records
+
+
+# payload sweep of the directed rail microbenchmark: enough distinct
+# points to clear the fitter's confidence floor per direction
+DIRECTION_SWEEP = (256 << 10, 1 << 20, 4 << 20, 16 << 20)
+
+
+def probe_link_directions(topo: Topology, executor, *,
+                          payloads: Sequence[float] = DIRECTION_SWEEP,
+                          hw: HardwareModel = DEFAULT) -> list[dict]:
+    """Directed point-to-point microbenchmark of every ordered server
+    pair that has rails (the "linkprobe"/"p2p" plan).
+
+    The collective probe sweeps only ever regress a direction that
+    BOTTLENECKS some plan — on an asymmetric fabric the fast forward
+    rails never do, so they stayed nominal forever (ROADMAP debt).
+    These records bottleneck on exactly one direction by construction,
+    so ``fit_link_roles`` gets a payload sweep for every direction and
+    the fitted model covers both sides of an asymmetric fabric."""
+    plan = plan_ir.get_plan("linkprobe", "p2p")
+    pairs = sorted({(topo.server_of(a), topo.server_of(b))
+                    for (a, b) in topo.links
+                    if topo.server_of(a) != topo.server_of(b)})
+    records: list[dict] = []
+    for sa, sb in pairs:
+        scenario = plan_ir.LinkProbeScenario(topo, sa, sb)
+        for payload in payloads:
+            ledger = plan.simulate(scenario, payload)
+            predicted = score_ledger(ledger, hw)
+            measured = executor.measure(
+                "linkprobe", "p2p", payload, topo, ledger=ledger,
+                knobs={}, src_server=sa, dst_server=sb)
+            records.append(probe_record(
+                "linkprobe", plan, payload, topo, measured, predicted,
+                ledger, getattr(executor, "source", "unknown"), {}))
     return records

@@ -140,10 +140,16 @@ class CalibrationStore:
     def latest_by_key(self, **filters) -> dict[tuple, dict]:
         """Most recent record per (op, plan, bucket) — the fitter's view:
         a re-probed payload bucket supersedes its older measurements, so
-        a degradation does not average against the healthy history."""
+        a degradation does not average against the healthy history.
+        Directed "linkprobe" records additionally key on their direction
+        (bottleneck role): the two directions of an ordered server pair
+        are distinct measurements, not re-probes of each other."""
         out: dict[tuple, dict] = {}
         for r in self.records(**filters):
-            out[(r["op"], r["plan"], r["bucket"])] = r
+            key = (r["op"], r["plan"], r["bucket"])
+            if r["op"] == "linkprobe":
+                key += (r.get("bottleneck_role"),)
+            out[key] = r
         return out
 
     def fabrics(self) -> list[str]:

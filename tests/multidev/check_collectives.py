@@ -266,6 +266,92 @@ def run_moe_pipeline_checks():
 
 
 # ===========================================================================
+# moe_ffn under a bound ExecutionPlan == the legacy knob/resolve path
+# ===========================================================================
+
+def run_execution_plan_checks():
+    import dataclasses
+    import types
+
+    from repro.core import plan as plan_ir
+    from repro.core.latency_model import moe_overlap_compute_s
+    from repro.models.moe import init_moe, moe_ffn
+    from repro.parallel.context import ParallelContext
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = types.SimpleNamespace(num_experts=8, top_k=2, act="silu",
+                                moe_capacity=4.0)
+    d_model, f = 16, 32
+    params = init_moe(jax.random.key(0), d_model, f, cfg.num_experts)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(4, 16, d_model)).astype(np.float32))
+    base = ParallelContext(mesh=mesh, pod_axis="pod", data_axis="data",
+                           model_axis="model", plan_policy="fixed")
+    # the EXACT workload moe_ffn derives at trace time (fp32 tokens)
+    n_local = (4 * 16) // (2 * 2)
+    token_bytes = d_model * 4
+    compute_s = moe_overlap_compute_s(n_local, cfg.top_k, d_model, f, tp=2)
+
+    def run(pctx):
+        with mesh:
+            out, aux = jax.jit(
+                lambda xx, p=pctx: moe_ffn(params, xx, cfg, p))(x)
+        return np.asarray(out), float(aux)
+
+    combos = [("hierarchical", "hierarchical", 4),
+              ("hierarchical", "baseline", 4),
+              ("baseline", "baseline", 2)]
+    for scheme, combine, g in combos:
+        legacy = dataclasses.replace(base, moe_scheme=scheme,
+                                     moe_combine=combine,
+                                     moe_microbatch=g)
+        sites = legacy.moe_sites("train", num_experts=cfg.num_experts,
+                                 top_k=cfg.top_k, tokens_per_rank=n_local,
+                                 token_bytes=token_bytes,
+                                 compute_s=compute_s)
+        program = plan_ir.CollectiveProgram("train", sites)
+        pinned = plan_ir.pinned_execution_plan(
+            program, {"train/moe_dispatch": {"moe_scheme": scheme,
+                                             "moe_combine": combine,
+                                             "microbatch": g}})
+        # bound context declares CONTRASTING knobs: only the plan lookup
+        # can produce the pinned configuration
+        bound = dataclasses.replace(base, moe_scheme="baseline",
+                                    moe_microbatch=1).bind(pinned)
+        got = bound.moe_pipeline_kwargs(cfg.num_experts, cfg.top_k,
+                                        tokens_per_rank=n_local,
+                                        token_bytes=token_bytes,
+                                        compute_s=compute_s)
+        check(f"bound-plan lookup hit (dispatch={scheme}, combine={combine}"
+              f", G={g})",
+              got == {"moe_scheme": scheme, "moe_combine": combine,
+                      "microbatch": g})
+        out_legacy, aux_legacy = run(legacy)
+        out_bound, aux_bound = run(bound)
+        ok = np.array_equal(out_legacy, out_bound)
+        err = float(np.max(np.abs(out_legacy - out_bound)))
+        check(f"moe_ffn bound ExecutionPlan bit-exact vs legacy knobs "
+              f"(dispatch={scheme}, combine={combine}, G={g}, "
+              f"err={err:.1e})", ok)
+        check(f"moe_ffn bound aux matches (dispatch={scheme}, "
+              f"combine={combine})", aux_legacy == aux_bound)
+
+    # a genuinely PLANNED bind agrees bit-exactly with the ad-hoc auto
+    # path (same joint decisions, different resolution mechanism)
+    auto = dataclasses.replace(base, plan_policy="auto")
+    program = plan_ir.CollectiveProgram(
+        "train", auto.moe_sites("train", num_experts=cfg.num_experts,
+                                top_k=cfg.top_k, tokens_per_rank=n_local,
+                                token_bytes=token_bytes,
+                                compute_s=compute_s))
+    eplan = auto.plan_collectives(program)
+    out_bound, _ = run(auto.bind(eplan))
+    out_auto, _ = run(auto)
+    check("moe_ffn planned bind bit-exact vs ad-hoc auto "
+          f"[{eplan.fingerprint}]", np.array_equal(out_bound, out_auto))
+
+
+# ===========================================================================
 # telemetry LiveProbe: every executable plan's lowering times on the mesh
 # ===========================================================================
 
@@ -296,6 +382,15 @@ def run_live_probe_checks():
     for op, n in executable.items():
         check(f"live probe covered all {n} executable {op} plans",
               len(by_op.get(op, [])) == n)
+
+    # directed p2p rail microbenchmark on the live mesh (per ordered
+    # server pair — the probe that fits never-bottlenecking directions)
+    from repro.telemetry import probe_link_directions
+    drecords = probe_link_directions(topo, probe, payloads=(1 << 16,))
+    roles = sorted(r["bottleneck_role"] for r in drecords)
+    check(f"live directed probes cover both rail directions ({roles})",
+          roles == ["inter:0>1", "inter:1>0"]
+          and all(r["measured_s"] > 0 for r in drecords))
 
 
 # ===========================================================================
@@ -349,6 +444,7 @@ if __name__ == "__main__":
     run_dispatch_checks("baseline")
     run_capacity_checks()
     run_moe_pipeline_checks()
+    run_execution_plan_checks()
     run_split_tp_layer_checks()
     run_split_tp_block_checks()
     run_live_probe_checks()

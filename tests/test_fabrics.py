@@ -325,26 +325,35 @@ def _mesh_pctx(**kw):
 
 
 class TestContextCombine:
-    def test_resolve_combine_fixed_follows_dispatch(self):
+    def test_combine_fixed_follows_dispatch(self):
         pctx = _mesh_pctx()
-        assert pctx.resolve_combine_scheme(64, 8, 1024, 7168) == \
-            "hierarchical"
+        assert pctx.moe_pipeline_kwargs(
+            64, 8, 1024, 7168)["moe_combine"] == "hierarchical"
         pctx2 = dataclasses.replace(pctx, moe_scheme="baseline")
-        assert pctx2.resolve_combine_scheme(64, 8, 1024, 7168) == "baseline"
+        assert pctx2.moe_pipeline_kwargs(
+            64, 8, 1024, 7168)["moe_combine"] == "baseline"
         pctx3 = dataclasses.replace(pctx, moe_combine="baseline")
-        assert pctx3.resolve_combine_scheme(64, 8, 1024, 7168) == "baseline"
+        assert pctx3.moe_pipeline_kwargs(
+            64, 8, 1024, 7168)["moe_combine"] == "baseline"
 
     def test_auto_policy_with_fabric_resolves_both(self):
         """Acceptance: under plan_policy="auto" both halves come from the
-        planner; an explicit fabric moves both decisions."""
+        planner (jointly, one shared pipeline); an explicit fabric moves
+        the decisions."""
         fabric = two_server_cluster()
         pctx = _mesh_pctx(plan_policy="auto", fabric=fabric)
-        assert pctx.resolve_moe_scheme(64, 8, 2048, 7168) == "hierarchical"
-        assert pctx.resolve_combine_scheme(64, 8, 2048, 7168) == \
-            "hierarchical"
-        assert pctx.resolve_moe_scheme(64, 8, 8, 7168) == "baseline"
-        assert pctx.resolve_combine_scheme(64, 8, 8, 7168) == "baseline"
-        d = pctx.moe_combine_plan(64, 8, 2048, 7168)
+        big = pctx.moe_pipeline_kwargs(64, 8, 2048, 7168)
+        assert big["moe_scheme"] == "hierarchical"
+        assert big["moe_combine"] == "hierarchical"
+        small = pctx.moe_pipeline_kwargs(64, 8, 8, 7168)
+        assert small["moe_scheme"] == "baseline"
+        assert small["moe_combine"] == "baseline"
+        # the per-site combine view of the joint plan
+        sites = pctx.moe_sites("t", num_experts=64, top_k=8,
+                               tokens_per_rank=2048, token_bytes=7168)
+        eplan = pctx.plan_collectives(
+            plan_ir.CollectiveProgram("t", sites))
+        d = eplan.decision("t/moe_combine")
         assert d.op == "combine"
         assert d.shard_map_kwargs["moe_combine"] == "hierarchical"
 

@@ -15,7 +15,8 @@ What is pinned here:
   * the telemetry hook: ``fit_overlap_eff`` recovers an injected true
     efficiency from measured ``Planner.decision_log`` rows, and the
     recalibrated model moves subsequent G choices;
-  * ``ParallelContext.resolve_moe_dispatch`` threading (scheme AND G).
+  * ``ParallelContext.moe_pipeline_kwargs`` threading (scheme AND G,
+    jointly with the combine half since the ExecutionPlan redesign).
 """
 
 import dataclasses
@@ -292,23 +293,30 @@ class TestContextThreading:
                                model_axis="model", plan_policy="auto",
                                fabric=TOPO)
 
-    def test_resolve_moe_dispatch_returns_scheme_and_g(self, pctx):
-        got = pctx.resolve_moe_dispatch(64, 8, tokens_per_rank=2048,
-                                        token_bytes=TOKEN,
-                                        compute_s=compute_ctx(2048))
+    def test_moe_pipeline_kwargs_returns_scheme_and_g(self, pctx):
+        got = pctx.moe_pipeline_kwargs(64, 8, tokens_per_rank=2048,
+                                       token_bytes=TOKEN,
+                                       compute_s=compute_ctx(2048))
         assert got["moe_scheme"] in ("hierarchical", "baseline")
+        assert got["moe_combine"] in ("hierarchical", "baseline")
         assert got["microbatch"] > 1
 
     def test_fixed_policy_keeps_declared_knobs(self, pctx):
         fixed = dataclasses.replace(pctx, plan_policy="fixed",
                                     moe_scheme="baseline",
                                     moe_microbatch=4)
-        got = fixed.resolve_moe_dispatch(64, 8, tokens_per_rank=2048,
-                                         token_bytes=TOKEN,
-                                         compute_s=compute_ctx(2048))
-        assert got == {"moe_scheme": "baseline", "microbatch": 4}
+        got = fixed.moe_pipeline_kwargs(64, 8, tokens_per_rank=2048,
+                                        token_bytes=TOKEN,
+                                        compute_s=compute_ctx(2048))
+        assert got == {"moe_scheme": "baseline", "moe_combine": "baseline",
+                       "microbatch": 4}
 
-    def test_no_context_resolution_stays_serial(self, pctx):
-        got = pctx.resolve_moe_dispatch(64, 8, tokens_per_rank=2048,
-                                        token_bytes=TOKEN)
+    def test_small_batch_stays_serial_without_compute(self, pctx):
+        """Alpha-dominated workloads must stay unchunked.  (A LARGE
+        batch may now chunk even without compute context: the joint
+        pipeline overlaps the dispatch wire of chunk k+1 with the
+        combine wire of chunk k — two different link directions — which
+        the old dispatch-only resolution could not see.)"""
+        got = pctx.moe_pipeline_kwargs(64, 8, tokens_per_rank=8,
+                                       token_bytes=TOKEN)
         assert got["microbatch"] == 1

@@ -252,8 +252,9 @@ class TestContextIntegration:
         pctx = ParallelContext(mesh=mesh, pod_axis=None, data_axis="model",
                                model_axis="model")
         assert pctx.plan_policy == "fixed"
-        assert pctx.moe_dispatch_plan(64, 8, 1024, 7168) is None
-        assert pctx.resolve_moe_scheme(64, 8, 1024, 7168) == "hierarchical"
+        kw = pctx.moe_pipeline_kwargs(64, 8, 1024, 7168)
+        assert kw["moe_scheme"] == "hierarchical"
+        assert kw["microbatch"] == 1
 
     def test_auto_policy_resolves_scheme(self):
         import dataclasses
@@ -268,7 +269,8 @@ class TestContextIntegration:
         pctx = ParallelContext(mesh=mesh, pod_axis=None, data_axis="model",
                                model_axis="model")
         auto = dataclasses.replace(pctx, plan_policy="auto")
-        scheme = auto.resolve_moe_scheme(64, 8, 4096, 7168)
+        kw = auto.moe_pipeline_kwargs(64, 8, 4096, 7168)
         # single-pod mesh has no slow axis: planned on the all-ICI full
         # mesh where MultiWrite cannot beat unicast -> relay-free plan
-        assert scheme == "baseline"
+        assert kw["moe_scheme"] == "baseline"
+        assert kw["moe_combine"] == "baseline"

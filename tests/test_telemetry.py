@@ -584,25 +584,28 @@ class TestContextCalibration:
     def test_calibration_store_changes_resolved_scheme(self, pctx):
         """A calibration store holding 4x-degraded measurements must flip
         the trace-time dispatch resolution for the same workload."""
-        base = pctx.resolve_moe_scheme(64, 8, tokens_per_rank=64,
-                                       token_bytes=lm.TOKEN_BYTES)
-        assert base == "baseline"          # batch 64 nominal: unicast
+        base = pctx.moe_pipeline_kwargs(64, 8, tokens_per_rank=64,
+                                        token_bytes=lm.TOKEN_BYTES)
+        assert base["moe_scheme"] == "baseline"  # batch 64 nominal: unicast
         store = CalibrationStore(":memory:")
         store.extend(degraded_records(4.0))
         cal = dataclasses.replace(pctx, calibration=store)
-        got = cal.resolve_moe_scheme(64, 8, tokens_per_rank=64,
-                                     token_bytes=lm.TOKEN_BYTES)
-        assert got == "hierarchical"
-        # combine resolves under the same fitted model
-        assert cal.resolve_combine_scheme(
-            64, 8, tokens_per_rank=64,
-            token_bytes=lm.TOKEN_BYTES) == "hierarchical"
+        got = cal.moe_pipeline_kwargs(64, 8, tokens_per_rank=64,
+                                      token_bytes=lm.TOKEN_BYTES)
+        assert got["moe_scheme"] == "hierarchical"
+        # the combine half resolves under the same fitted model, jointly
+        assert got["moe_combine"] == "hierarchical"
+
+    def _site_decision(self, pctx, tokens_per_rank):
+        from repro.core import plan as plan_ir
+        sites = pctx.moe_sites("t", num_experts=64, top_k=8,
+                               tokens_per_rank=tokens_per_rank,
+                               token_bytes=lm.TOKEN_BYTES)
+        eplan = pctx.plan_collectives(plan_ir.CollectiveProgram("t", sites))
+        return eplan.decision("t/moe_dispatch")
 
     def test_moe_skew_threads_to_planner(self, pctx):
         hot = dataclasses.replace(pctx, moe_skew=2.0)
-        d_flat = pctx.moe_dispatch_plan(64, 8, tokens_per_rank=256,
-                                        token_bytes=lm.TOKEN_BYTES)
-        d_hot = hot.moe_dispatch_plan(64, 8, tokens_per_rank=256,
-                                      token_bytes=lm.TOKEN_BYTES)
-        assert d_flat is not None and d_hot is not None
+        d_flat = self._site_decision(pctx, 256)
+        d_hot = self._site_decision(hot, 256)
         assert d_hot.predicted_s != d_flat.predicted_s
