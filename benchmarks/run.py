@@ -594,6 +594,128 @@ def bench_program(smoke: bool = False):
     return rows
 
 
+def bench_allreduce(smoke: bool = False):
+    """Gradient-sync scheme crossover: scheme x payload x fabric.
+
+    For each (fabric, payload) cell, which registered allreduce /
+    reduce_scatter scheme ``Planner.choose`` picks (executable schemes
+    only — the set a trainer may auto-bind), and where the crossover
+    between the latency-optimal tree and the bandwidth-optimal
+    relay-reduce multiwrite sits on each fabric.
+
+    CI gates (also under ``--smoke``):
+      * >= 2 distinct allreduce schemes win across the sweep (the
+        crossover is emergent, not a registry accident);
+      * every registered reduce plan simulates to a finite positive
+        score on every registered fabric;
+      * the lossy compressed plan is never auto-bound;
+      * the pipelined (chunked, overlap-aware) grad-sync decision beats
+        its own serial score AND the ring baseline on 2x8 — the backward
+        pass genuinely hides wire time.
+    Full mode emits results/BENCH_allreduce.json.
+    """
+    import json
+    import math
+    import os
+
+    from repro.core import latency_model as lm
+    from repro.core import plan as plan_ir
+    from repro.core import planner as pl
+    from repro.core.topology import FABRICS, get_fabric
+
+    fabrics = ("2x8", "tpu_2x16") if smoke else tuple(FABRICS)
+    payloads = ([1 << p for p in (16, 20, 24)] if smoke
+                else [1 << p for p in range(16, 29, 2)])
+
+    rows, table, failures = [], [], []
+    winners = set()
+    print("\n== bench_allreduce: gradient-sync scheme crossover ==")
+    print(f"{'fabric':<9} " + " ".join(f"{p >> 10:>9}K" if p < 1 << 20
+                                       else f"{p >> 20:>9}M"
+                                       for p in payloads))
+    for fname in fabrics:
+        topo = get_fabric(fname)
+        planner = pl.Planner()
+        line = []
+        for payload in payloads:
+            d = planner.choose("allreduce", float(payload), topo,
+                               executable_only=True)
+            winners.add(d.plan)
+            if d.plan == "compressed":
+                failures.append(f"{fname} {payload}: lossy compressed "
+                                f"auto-bound")
+            rs = planner.choose("reduce_scatter", float(payload), topo,
+                                executable_only=True)
+            line.append(d.plan)
+            table.append({
+                "fabric": fname, "payload_bytes": payload,
+                "allreduce": d.report(), "reduce_scatter": rs.report()})
+            rows.append({"name": f"allreduce_{fname}_{payload}_speedup",
+                         "metric": "pct",
+                         "value": 100.0 * (1 - d.predicted_s
+                                           / d.baseline_s)})
+        print(f"{fname:<9} " + " ".join(f"{s:>10}" for s in line))
+
+    # simulate-everywhere gate: every reduce plan on every fabric
+    for fname in FABRICS:
+        topo = get_fabric(fname)
+        scen = plan_ir.default_scenarios(topo)
+        for op in ("allreduce", "reduce_scatter"):
+            for p in plan_ir.plans_for(op):
+                led = p.simulate_fn(scen[op], 1 << 20, microbatch=1)
+                t = pl.score_ledger(led, lm.DEFAULT)
+                if not (t > 0 and math.isfinite(t)):
+                    failures.append(f"{fname}/{op}/{p.name}: bad score {t}")
+
+    if len(winners) < 2:
+        failures.append(f"only one allreduce scheme ever wins: {winners}")
+
+    # pipelined grad-sync gate on 2x8: a 12B-param fp32 gradient sync,
+    # TP=8, with the modeled backward tail as overlap context
+    topo = get_fabric("2x8")
+    num_params, tp = 12_000_000_000, 8
+    site = plan_ir.grad_sync_site(
+        "train", payload_bytes=num_params * 4 / tp,
+        compute_s=lm.backward_compute_s(num_params, 2048, tp=tp),
+        topo=topo)
+    eplan = pl.Planner().plan_program(
+        plan_ir.CollectiveProgram("train", (site,)), topo)
+    gs = eplan.decisions["train/grad_sync"]
+    g = gs.shard_map_kwargs["microbatch"]
+    print(f"grad_sync on 2x8: {gs.plan} G={g} serial "
+          f"{gs.predicted_serial_s * 1e3:.2f}ms -> pipelined "
+          f"{gs.predicted_s * 1e3:.2f}ms (ring baseline "
+          f"{gs.baseline_s * 1e3:.2f}ms)")
+    if g <= 1:
+        failures.append("grad_sync never chunks on 2x8 (G == 1)")
+    if not gs.predicted_s < gs.predicted_serial_s:
+        failures.append("pipelined grad_sync does not beat serial on 2x8")
+    if not gs.predicted_s < gs.baseline_s:
+        failures.append("grad_sync does not beat the ring baseline on 2x8")
+    rows.append({"name": "grad_sync_2x8_pipelined_gain", "metric": "pct",
+                 "value": 100.0 * (1 - gs.predicted_s
+                                   / gs.predicted_serial_s)})
+
+    for f in failures:
+        print(f"ALLREDUCE GATE FAIL: {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+    if not smoke:
+        out = {"fabrics": list(fabrics),
+               "payloads": payloads,
+               "winners": sorted(winners),
+               "grad_sync_2x8": gs.report(),
+               "cells": table}
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_allreduce.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
+    return rows
+
+
 def bench_train_throughput():
     """Tiny-model CPU train-step wall time (framework overhead check)."""
     import jax
@@ -628,6 +750,7 @@ MICRO_BENCHES = {
     "bench_calibration": bench_calibration,
     "bench_overlap": bench_overlap,
     "bench_program": bench_program,
+    "bench_allreduce": bench_allreduce,
     "bench_kernels": lambda smoke: bench_kernels(),
     "bench_dispatch_sim": lambda smoke: bench_dispatch_sim(),
     "bench_train_throughput": lambda smoke: bench_train_throughput(),

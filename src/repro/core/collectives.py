@@ -727,6 +727,91 @@ def baseline_combine(expert_out: jax.Array, exp_gate: jax.Array,
 
 
 # ===========================================================================
+# Planned gradient sync: AllReduce as a planner op (shard_map lowerings)
+# ===========================================================================
+
+def butterfly_psum(g: jax.Array, axis_name: str) -> jax.Array:
+    """Recursive-doubling tree AllReduce: log2(R) ppermute rounds, each
+    exchanging the full payload with the XOR partner and reducing — the
+    latency-optimal endpoint of the reduce scheme family (the ledger the
+    planner scores as the ``tree`` plan).  Returns the SUM over the
+    axis.  Requires a power-of-two axis; must run inside shard_map."""
+    n = axis_size(axis_name)
+    if n & (n - 1):
+        raise ValueError(f"butterfly_psum needs a power-of-two axis "
+                         f"(got {n})")
+    out = g
+    k = 1
+    while k < n:
+        perm = [(i, i ^ k) for i in range(n)]
+        out = out + lax.ppermute(out, axis_name, perm)
+        k <<= 1
+    return out
+
+
+def planned_psum(g: jax.Array, axis_name: str, *, num_servers: int = 1,
+                 decision=None, reduce_scheme: str = None,
+                 planner=None, hw=None, compute_s: float = 0.0) -> jax.Array:
+    """Gradient MEAN-reduce over ``axis_name`` whose schedule comes from
+    a planner decision instead of a hard-coded ``lax.psum``.
+
+    ``decision`` is the ``grad_sync`` verdict of a bound
+    :class:`~repro.core.plan.ExecutionPlan`; ``reduce_scheme`` pins a
+    scheme directly (tests / operational override).  Without either, the
+    process planner decides here from the payload and the DP fabric
+    (``num_servers`` server groups of the axis, fabric order).  Must be
+    called inside ``shard_map`` with ``axis_name`` bound.
+
+    Scheme -> lowering:
+      ring          ``lax.psum`` (XLA's own flat ring — the baseline)
+      tree          :func:`butterfly_psum` XOR-partner rounds
+      hierarchical  ``hierarchical_psum_flat`` (RS -> rail exchange -> AG)
+      multiwrite    ``hierarchical_psum_flat`` — on TPU the relay-reduce
+                    schedule lowers to the same RS/exchange/AG structure
+                    (the ledger difference is the relay engine accounting)
+      compressed    int8 error-feedback ``compressed_psum`` (LOSSY —
+                    never planner-chosen, explicit opt-in only)
+
+    All lossless schemes are numerically equivalent to
+    ``lax.psum(g) / R`` up to float summation order.
+    """
+    import math as _math
+
+    from repro.core import planner as _planner_mod
+
+    scheme = reduce_scheme
+    if scheme is None:
+        if decision is None:
+            n = axis_size(axis_name)
+            payload = _math.prod(g.shape) * g.dtype.itemsize
+            pl = planner or _planner_mod.default_planner()
+            topo = _planner_mod._ep_topology(
+                max(1, num_servers), max(1, n // max(1, num_servers)))
+            decision = pl.choose("allreduce", payload, topo, hw,
+                                 executable_only=True, compute_s=compute_s)
+        scheme = decision.shard_map_kwargs.get("reduce_scheme", "ring")
+    r = axis_size(axis_name)
+    if scheme == "ring":
+        return lax.psum(g, axis_name) / r
+    if scheme == "tree":
+        if r & (r - 1):
+            return lax.psum(g, axis_name) / r     # non-pow2: ring fallback
+        return butterfly_psum(g, axis_name) / r
+    if scheme in ("hierarchical", "multiwrite"):
+        from repro.parallel.compression import hierarchical_psum_flat
+        s = max(1, num_servers)
+        if r % s:
+            return lax.psum(g, axis_name) / r     # unfactorable: fallback
+        out = hierarchical_psum_flat(g.reshape(-1), axis_name, s)
+        return out.reshape(g.shape).astype(g.dtype)
+    if scheme == "compressed":
+        from repro.parallel.compression import compressed_psum
+        out, _ = compressed_psum(g.reshape(-1), axis_name)
+        return out.reshape(g.shape).astype(g.dtype)
+    raise ValueError(f"unknown reduce scheme {scheme!r}")
+
+
+# ===========================================================================
 # Analytic pod-axis byte accounting (feeds the paper-validation benches)
 # ===========================================================================
 

@@ -299,6 +299,23 @@ def moe_overlap_compute_s(tokens_per_rank: int, top_k: int, d_model: int,
                                  max(1, d_ff // max(1, tp)))
 
 
+def backward_compute_s(num_params: int, tokens_per_rank: int,
+                       tp: int = 1, peak_flops: float = None) -> float:
+    """Modeled per-rank backward-pass time — the compute stage a chunked
+    gradient sync hides behind (gradient buckets become ready
+    back-to-front as backprop proceeds, so chunk k's wire time overlaps
+    the backward compute of the layers before it).
+
+    Dense-transformer backward is ~2x the forward's ``2 * params *
+    tokens`` matmul FLOPs; TP shards the parameter matmuls ``tp``
+    ways."""
+    from .topology import TPU_PEAK_FLOPS
+    if peak_flops is None:
+        peak_flops = TPU_PEAK_FLOPS
+    flops = 4.0 * float(num_params) * float(tokens_per_rank)
+    return flops / (float(peak_flops) * max(1, tp))
+
+
 def ledger_latency(sim: MultiWriteSimulator | Ledger,
                    hw: HardwareModel = DEFAULT) -> float:
     """Latency of a simulator run (or a pre-built Ledger)."""

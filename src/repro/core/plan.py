@@ -246,6 +246,29 @@ class LinkProbeScenario:
         return ("linkprobe", self.src_server, self.dst_server)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReduceScenario:
+    """Gradient synchronization over the data-parallel replicas: every
+    node holds a full gradient of ``payload_bytes`` and the collective
+    produces the elementwise sum — on every node for ``allreduce``, as
+    1/R shards for ``reduce_scatter``.
+
+    ``compute_s`` is the overlap context: the BACKWARD-pass compute time
+    remaining when gradient sync of this payload can start.  Gradient
+    buckets become ready back-to-front as the backward pass proceeds, so
+    a chunked (microbatch > 1) sync overlaps earlier chunks' wire time
+    with later layers' backward compute — the same pipelined scoring
+    mode the MoE dispatch path uses.  0 = score the sync in isolation
+    (G == 1 always wins then: per-chunk alpha with nothing to hide
+    behind)."""
+
+    topo: Topology
+    compute_s: float = 0.0
+
+    def cache_key(self):
+        return ("reduce", self.compute_s)
+
+
 def default_scenarios(topo: Topology) -> dict:
     """One representative scenario per op for ``topo`` — the grid the CI
     fabric smoke iterates (every registered plan must simulate on every
@@ -254,7 +277,9 @@ def default_scenarios(topo: Topology) -> dict:
             "dispatch": DispatchScenario(topo=topo),
             "combine": CombineScenario(topo=topo),
             "linkprobe": LinkProbeScenario(
-                topo, 0, 1 if topo.meta.num_servers > 1 else 0)}
+                topo, 0, 1 if topo.meta.num_servers > 1 else 0),
+            "allreduce": ReduceScenario(topo=topo),
+            "reduce_scatter": ReduceScenario(topo=topo)}
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +335,12 @@ BASELINE_PLAN = {"allgather": "baseline", "dispatch": "unicast",
                  # directed point-to-point link microbenchmark (telemetry):
                  # pure serialization, so its records feed the alpha/beta
                  # regression like the real baselines do
-                 "linkprobe": "p2p"}
+                 "linkprobe": "p2p",
+                 # gradient sync: the flat bandwidth-optimal ring is what
+                 # GSPMD lowers an unannotated psum to — the thing the
+                 # smarter schemes must beat
+                 "allreduce": "ring",
+                 "reduce_scatter": "ring"}
 
 
 def register_plan(plan: CollectivePlan) -> CollectivePlan:
@@ -436,6 +466,21 @@ def allgather_site(phase: str, *, frag_bytes: float, num_domains: int = 2,
         op="allgather", role=f"{phase}/split_tp_gather",
         payload_bytes=float(frag_bytes),
         scenario_kw=(("num_domains", int(num_domains)),), topo=topo)
+
+
+def grad_sync_site(phase: str, *, payload_bytes: float,
+                   compute_s: float = 0.0,
+                   topo: Optional[Topology] = None) -> CollectiveSite:
+    """The per-step gradient AllReduce site of one training phase.
+
+    Uncoupled: gradient sync shares no chunk pipeline with the MoE round
+    trip (it runs after the backward pass produces each bucket), so
+    ``plan_program`` sweeps it alone — but under the same pipelined
+    scorer, with the tail of the backward pass as overlap context."""
+    return CollectiveSite(
+        op="allreduce", role=f"{phase}/grad_sync",
+        payload_bytes=float(payload_bytes), compute_ctx=float(compute_s),
+        topo=topo)
 
 
 @dataclasses.dataclass(frozen=True)

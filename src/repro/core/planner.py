@@ -230,6 +230,11 @@ class Planner:
                 topo, scenario_kw.get("src_server", 0),
                 scenario_kw.get("dst_server",
                                 1 if topo.meta.num_servers > 1 else 0))
+        if op in ("allreduce", "reduce_scatter"):
+            return plan_ir.ReduceScenario(
+                topo=topo,
+                compute_s=bucket_compute_s(
+                    scenario_kw.get("compute_s", 0.0)))
         raise ValueError(f"unknown collective op {op!r}")
 
     # -- the decision --------------------------------------------------------

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Callable, Sequence
 
 import numpy as np
@@ -664,6 +665,309 @@ plan_ir.register_plan(plan_ir.CollectivePlan(
     knobs={"microbatch": MICROBATCH_GRID},
     simulate_fn=_simulate_combine(multiwrite=True),
     kwargs_fn=_combine_kwargs("hierarchical")))
+
+
+# ---------------------------------------------------------------------------
+# Gradient-sync schedules: AllReduce / ReduceScatter as planner ops
+# ---------------------------------------------------------------------------
+#
+# Unlike the MoE ops (whose routing is data-dependent, so their ledgers
+# come from the packet simulator), reduce collectives are fully regular:
+# every node holds the same payload and the schedule is a fixed
+# communication pattern.  The ledgers below are therefore built
+# ANALYTICALLY — closed-form per-link byte loads charged onto the real
+# fabric links (via ``topo.path`` so missing direct links store-and-
+# forward exactly like the packet oracle would) — which keeps the
+# planner sweep free of per-payload simulation.  Byte loads and step
+# counts follow the classic scheme family (ring, recursive-doubling
+# tree, hierarchical RS->exchange->AG; cf. "Network-Offloaded
+# Bandwidth-Optimal Broadcast and Allgather" / "In-Network Collective
+# Operations", PAPERS.md), plus a multiwrite variant that reuses the
+# combine-wire reduce-direction accounting (relay-side reduction, one
+# copy per rail, software-engine egress serialization).
+
+# Per-ring/tree-step launch cost beyond the generic per-stage alpha_base
+# (one step is covered by alpha_base itself; the rest land here).  A
+# fraction of alpha_base: steps within one fused collective don't re-pay
+# the full operator launch, just the per-round synchronization.
+REDUCE_STEP_ALPHA_S = 5e-6
+
+
+def _reduce_step_alpha(steps: int) -> float:
+    return max(0, int(steps) - 1) * REDUCE_STEP_ALPHA_S
+
+
+def _charge_path(topo: Topology, link_bytes: dict, flow_counts: dict,
+                 relay_bytes: dict, src: int, dst: int,
+                 nbytes: float) -> None:
+    """Charge ``nbytes`` from src to dst along the fabric's forwarding
+    path; intermediate hops pay store-and-forward relay processing."""
+    path = topo.path(src, dst)
+    for a, b in zip(path, path[1:]):
+        link_bytes[(a, b)] = link_bytes.get((a, b), 0.0) + nbytes
+        flow_counts[(a, b)] = flow_counts.get((a, b), 0) + 1
+    for mid in path[1:-1]:
+        relay_bytes[mid] = relay_bytes.get(mid, 0.0) + 2.0 * nbytes
+
+
+def _ring_order(topo: Topology) -> list[int]:
+    """Serpentine node order: ascend even servers, descend odd ones, so
+    every intra hop is a full-mesh link and every server boundary is
+    crossed at a matching NPU index (a direct rail link)."""
+    meta = topo.meta
+    order: list[int] = []
+    for s in range(meta.num_servers):
+        idx = (range(meta.npus_per_server) if s % 2 == 0
+               else range(meta.npus_per_server - 1, -1, -1))
+        order.extend(s * meta.npus_per_server + i for i in idx)
+    return order
+
+
+def reduce_ring_ledger(topo: Topology, nbytes: float,
+                       phases: int = 2) -> plan_ir.Ledger:
+    """Flat bandwidth-optimal ring: ``phases == 2`` is AllReduce
+    (reduce-scatter pass + allgather pass), ``phases == 1`` is
+    ReduceScatter alone.  Every directed ring edge carries
+    ``phases * (R-1)/R * N``; the whole load crosses every server
+    boundary — which is exactly why the flat ring (what an unannotated
+    GSPMD psum lowers to) is the scheme to beat on multi-server
+    fabrics."""
+    R = topo.num_nodes
+    if R < 2:
+        return plan_ir.Ledger(topo=topo, link_bytes={}, relay_bytes={},
+                              flow_counts={})
+    per_edge = float(phases) * nbytes * (R - 1) / R
+    order = _ring_order(topo)
+    link_bytes: dict = {}
+    flows: dict = {}
+    relay: dict = {}
+    for u, v in zip(order, order[1:] + order[:1]):
+        _charge_path(topo, link_bytes, flows, relay, u, v, per_edge)
+    return plan_ir.Ledger(
+        topo=topo, link_bytes=link_bytes, relay_bytes=relay,
+        flow_counts=flows, relayed=bool(relay),
+        alpha_extra_s=_reduce_step_alpha(phases * (R - 1)))
+
+
+def reduce_tree_depth(topo: Topology) -> int:
+    """Rounds of the dimension-ordered recursive-doubling tree:
+    ``ceil(log2 P)`` intra rounds then ``ceil(log2 S)`` inter rounds
+    (non-power-of-two counts round up — stragglers fold in)."""
+    meta = topo.meta
+    intra = (int(math.ceil(math.log2(meta.npus_per_server)))
+             if meta.npus_per_server > 1 else 0)
+    inter = (int(math.ceil(math.log2(meta.num_servers)))
+             if meta.num_servers > 1 else 0)
+    return intra + inter
+
+
+def reduce_tree_ledger(topo: Topology, nbytes: float) -> plan_ir.Ledger:
+    """Recursive-doubling butterfly tree: every round each node
+    exchanges the FULL payload with its XOR partner and reduces —
+    log-depth, so it is the latency-optimal endpoint of the scheme
+    family (the bandwidth-optimal halving/doubling variant coincides
+    with ``hierarchical``'s byte accounting on these fabrics).  Rounds
+    serialize through each node's NIC, so the cumulative per-class load
+    (``intra_rounds * N`` intra, ``inter_rounds * N`` on the rails) is
+    charged onto one representative link per class."""
+    meta = topo.meta
+    S, P = meta.num_servers, meta.npus_per_server
+    intra_rounds = int(math.ceil(math.log2(P))) if P > 1 else 0
+    inter_rounds = int(math.ceil(math.log2(S))) if S > 1 else 0
+    link_bytes: dict = {}
+    flows: dict = {}
+    relay: dict = {}
+    for s in range(S):
+        for i in range(P):
+            u = s * P + i
+            if intra_rounds:
+                v = s * P + (i + 1) % P
+                _charge_path(topo, link_bytes, flows, relay, u, v,
+                             intra_rounds * nbytes)
+            if inter_rounds:
+                v = ((s + 1) % S) * P + i
+                _charge_path(topo, link_bytes, flows, relay, u, v,
+                             inter_rounds * nbytes)
+    return plan_ir.Ledger(
+        topo=topo, link_bytes=link_bytes, relay_bytes=relay,
+        flow_counts=flows, relayed=bool(relay),
+        alpha_extra_s=_reduce_step_alpha(reduce_tree_depth(topo)))
+
+
+def reduce_hierarchical_ledger(topo: Topology, nbytes: float,
+                               phases: int = 2) -> plan_ir.Ledger:
+    """Hierarchical reduce: intra-server ring ReduceScatter, inter-server
+    ring exchange of the 1/P shard over same-index rail peers, then
+    (``phases == 2``) intra-server ring AllGather.  Rail links carry only
+    ``2 (S-1)/S * N/P`` — the P-fold cross-server saving over the flat
+    ring.  Degrades to the intra ring alone on single-server fabrics."""
+    meta = topo.meta
+    S, P = meta.num_servers, meta.npus_per_server
+    link_bytes: dict = {}
+    flows: dict = {}
+    relay: dict = {}
+    steps = 0
+    shard = nbytes / P if P > 1 else nbytes
+    if P > 1:
+        per_edge = float(phases) * nbytes * (P - 1) / P
+        for s in range(S):
+            order = [s * P + i for i in range(P)]
+            for u, v in zip(order, order[1:] + order[:1]):
+                _charge_path(topo, link_bytes, flows, relay, u, v, per_edge)
+        steps += phases * (P - 1)
+    if S > 1:
+        per_edge = 2.0 * shard * (S - 1) / S
+        for i in range(P):
+            order = [s * P + i for s in range(S)]
+            for u, v in zip(order, order[1:] + order[:1]):
+                _charge_path(topo, link_bytes, flows, relay, u, v, per_edge)
+        steps += 2 * (S - 1)
+    return plan_ir.Ledger(
+        topo=topo, link_bytes=link_bytes, relay_bytes=relay,
+        flow_counts=flows, relayed=bool(relay),
+        alpha_extra_s=_reduce_step_alpha(steps))
+
+
+def reduce_multiwrite_ledger(topo: Topology, nbytes: float,
+                             scatter_only: bool = False) -> plan_ir.Ledger:
+    """MultiWrite reduce: the combine-wire reduce-direction accounting
+    applied to gradient sync.  The payload is sliced 1/P by NPU index;
+    slice ``i``'s peers funnel it intra-server to relay ``i``, the relay
+    REDUCES (AICPU software data plane, like combine_multiwrite) and
+    exchanges ONE reduced copy per rail with its same-index peers, then
+    replicates the global slice back intra-server (AllReduce) or
+    scatters the 1/R sub-slices (ReduceScatter).  Relay rx processing
+    lands in ``relay_bytes``; relay egress serializes through one
+    forwarding engine (``engine_serial``), and the schedule pays the
+    Fig 8 relay-pipeline establishment cost."""
+    from .latency_model import RELAY_SETUP_S
+    meta = topo.meta
+    S, P = meta.num_servers, meta.npus_per_server
+    R = topo.num_nodes
+    slice_b = nbytes / P
+    link_bytes: dict = {}
+    flows: dict = {}
+    relay: dict = {}
+    engine: dict = {}
+
+    def charge(u, v, b):
+        _charge_path(topo, link_bytes, flows, relay, u, v, b)
+
+    for s in range(S):
+        for i in range(P):
+            r = s * P + i                      # relay owning slice i
+            for j in range(P):                 # intra funnel j -> relay
+                if j != i:
+                    charge(s * P + j, r, slice_b)
+            relay[r] = relay.get(r, 0.0) + (P - 1) * slice_b
+            if S > 1:                          # rail exchange, one copy each
+                for s2 in range(S):
+                    if s2 != s:
+                        charge(r, s2 * P + i, slice_b)
+                relay[r] += (S - 1) * slice_b
+            egress = (S - 1) * slice_b
+            if scatter_only:                   # scatter 1/R sub-slices back
+                for j in range(P):
+                    if j != i:
+                        charge(r, s * P + j, nbytes / R)
+                egress += (P - 1) * nbytes / R
+            else:                              # replicate global slice back
+                for j in range(P):
+                    if j != i:
+                        charge(r, s * P + j, slice_b)
+                egress += (P - 1) * slice_b
+            engine[r] = engine.get(r, 0.0) + egress
+    return plan_ir.Ledger(
+        topo=topo, link_bytes=link_bytes, relay_bytes=relay,
+        flow_counts=flows, relayed=True, alpha_extra_s=RELAY_SETUP_S,
+        engine_serial=engine)
+
+
+def reduce_scatter_a2a_ledger(topo: Topology, nbytes: float
+                              ) -> plan_ir.Ledger:
+    """Direct AlltoAll ReduceScatter: every node sends each peer its
+    1/R shard in one step (latency-optimal; redundant-free by
+    construction).  Cross-server transfers to non-matching indices
+    store-and-forward through the rail-first table, and the per-link
+    flow fan-in drives the interference derate."""
+    R = topo.num_nodes
+    link_bytes: dict = {}
+    flows: dict = {}
+    relay: dict = {}
+    shard = nbytes / R
+    for u in range(R):
+        for v in range(R):
+            if u != v:
+                _charge_path(topo, link_bytes, flows, relay, u, v, shard)
+    return plan_ir.Ledger(
+        topo=topo, link_bytes=link_bytes, relay_bytes=relay,
+        flow_counts=flows, relayed=bool(relay))
+
+
+_REDUCE_LEDGERS: dict[tuple[str, str], Callable] = {
+    # (op, scheme) -> builder(topo, nbytes)
+    ("allreduce", "ring"):
+        lambda topo, n: reduce_ring_ledger(topo, n, phases=2),
+    ("allreduce", "tree"): reduce_tree_ledger,
+    ("allreduce", "hierarchical"):
+        lambda topo, n: reduce_hierarchical_ledger(topo, n, phases=2),
+    ("allreduce", "multiwrite"):
+        lambda topo, n: reduce_multiwrite_ledger(topo, n),
+    ("allreduce", "compressed"):
+        # int8 error-feedback ring (compression.compressed_psum): wire
+        # bytes quartered, same step structure.  Lossy — registered for
+        # comparison sweeps, never auto-bound (executable=False).
+        lambda topo, n: reduce_ring_ledger(topo, n / 4.0, phases=2),
+    ("reduce_scatter", "ring"):
+        lambda topo, n: reduce_ring_ledger(topo, n, phases=1),
+    ("reduce_scatter", "a2a"): reduce_scatter_a2a_ledger,
+    ("reduce_scatter", "multiwrite"):
+        lambda topo, n: reduce_multiwrite_ledger(topo, n,
+                                                 scatter_only=True),
+}
+
+
+def _simulate_reduce(op: str, scheme: str):
+    builder = _REDUCE_LEDGERS[(op, scheme)]
+
+    def simulate(scenario, payload_bytes: float,
+                 *, microbatch: int = 1) -> plan_ir.Ledger:
+        ledger = builder(scenario.topo, float(payload_bytes))
+        g = max(1, int(microbatch))
+        # G > 1 chunks the gradient into G buckets synced back-to-front
+        # as the backward pass produces them (overlap=True): the
+        # pipelined scoring mode hides earlier chunks' wire time behind
+        # the scenario's remaining backward compute, exactly like the
+        # MoE dispatch pipeline.
+        return dataclasses.replace(
+            ledger, stages=g, overlap=g > 1,
+            compute_s=float(getattr(scenario, "compute_s", 0.0)))
+    return simulate
+
+
+def _reduce_kwargs(scheme: str):
+    def kwargs_fn(*, microbatch: int = 1) -> dict:
+        # what collectives.planned_psum consumes
+        return {"reduce_scheme": scheme, "microbatch": int(microbatch)}
+    return kwargs_fn
+
+
+for _op, _scheme, _exec in [
+        ("allreduce", "ring", True),          # lax.psum's own lowering
+        ("allreduce", "tree", True),          # ppermute butterfly
+        ("allreduce", "hierarchical", True),  # hierarchical_psum
+        ("allreduce", "multiwrite", True),    # hierarchical_psum lowering
+        ("allreduce", "compressed", False),   # lossy: explicit opt-in only
+        ("reduce_scatter", "ring", True),     # lax.psum_scatter
+        ("reduce_scatter", "a2a", True),      # lax.psum_scatter tiled
+        ("reduce_scatter", "multiwrite", False),   # accounting-only
+]:
+    plan_ir.register_plan(plan_ir.CollectivePlan(
+        name=_scheme, op=_op,
+        knobs={"microbatch": MICROBATCH_GRID},
+        simulate_fn=_simulate_reduce(_op, _scheme),
+        kwargs_fn=_reduce_kwargs(_scheme),
+        executable=_exec))
 
 
 class _SchemeView(dict):

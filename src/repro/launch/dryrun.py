@@ -257,6 +257,7 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
     out = {"policy": pctx.plan_policy}
     n_local = _cell_tokens_per_rank(shape, pctx)
     cell_compute_s = _cell_compute_s(cfg, shape, pctx)
+    eplan = None
     if cfg.is_moe:
         eplan = _cell_execution_plan(arch, shape, pctx)
         role_d = f"{shape.kind}/moe_dispatch"
@@ -280,6 +281,14 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
             "planned": planned_g,
             "compute_s": cell_compute_s,
         }
+    if shape.kind == "train":
+        # gradient sync rides in the same cell program (train phase only)
+        if eplan is None:
+            eplan = _cell_execution_plan(arch, shape, pctx)
+            out["execution_plan"] = eplan.fingerprint
+        gs = eplan.decisions.get("train/grad_sync")
+        if gs is not None:
+            out["grad_sync"] = gs.report()
     # Reference decision on the paper's §3.1 fixture (8-NPU split-TP full
     # mesh) at this cell's per-chip activation fragment — a what-if the
     # table carries alongside every cell, NOT a collective the traced

@@ -159,6 +159,22 @@ def main(argv=None):
                     "(serial %.1fus -> %.1fus predicted)",
                     joint.microbatch, joint.predicted_serial_s * 1e6,
                     joint.predicted_s * 1e6)
+            gs = eplan.decisions.get("train/grad_sync")
+            if gs is not None:
+                g = gs.shard_map_kwargs.get("microbatch", 1)
+                # executed reduction: under plain jit AD inserts the DP
+                # mean implicitly, which GSPMD lowers to the flat ring
+                # the "ring" plan models; non-ring verdicts need the
+                # shard_map planned_psum lowering (core/collectives.py)
+                note = ("matches the implicit GSPMD ring this jit step "
+                        "executes" if gs.plan == "ring" else
+                        "needs the shard_map planned_psum lowering; this "
+                        "jit step executes the implicit ring")
+                logging.info(
+                    "planner gradient sync: %s G=%d (serial %.2fms -> "
+                    "%.2fms pipelined; ring baseline %.2fms) — %s",
+                    gs.plan, g, gs.predicted_serial_s * 1e3,
+                    gs.predicted_s * 1e3, gs.baseline_s * 1e3, note)
         elif pctx.plan_policy == "auto":
             logging.info("planner auto: no collective sites to declare "
                          "for this config (dense, no split-TP gather)")

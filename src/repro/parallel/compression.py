@@ -96,6 +96,12 @@ def hierarchical_psum(g: jax.Array, pod_axis: str, data_axis: str):
     DCN bytes per chip: N/D (vs N for a flat all-reduce ring crossing pods
     D times per chip-position) — the §3.3 bottleneck-link principle applied
     to the reduction direction.
+
+    Requires a mesh that already factors the replicas into two named
+    axes.  When the replicas live on ONE flat mesh axis (the trainer's
+    ``data`` axis), use :func:`hierarchical_psum_flat`, which derives
+    the same two-level schedule from the fabric's server grouping via
+    ``axis_index_groups``.
     """
     d = axis_size(data_axis)
     n = g.shape[0]
@@ -109,6 +115,43 @@ def hierarchical_psum(g: jax.Array, pod_axis: str, data_axis: str):
     # all-gather intra-pod
     full = lax.all_gather(mine, data_axis).reshape(-1)[:n]
     return full / (d * axis_size(pod_axis))
+
+
+def hierarchical_psum_flat(g: jax.Array, axis: str, num_servers: int):
+    """:func:`hierarchical_psum` on a single flat mesh axis, with the
+    two-level factorization derived from the FABRIC rather than
+    hard-coded into the mesh shape: ranks on the axis are grouped
+    ``num_servers`` x ``npus_per_server`` in fabric order (server-major,
+    matching ``ClusterSpec.build``'s node numbering), so the schedule is
+    correct on ``4x8`` / ``tpu_2x16``-class shapes, not just 2-server
+    meshes.
+
+    Reduce-scatter within each server group (fast links), exchange the
+    pre-reduced 1/P shard across same-index rail peers, all-gather back
+    within the server group.  Returns the MEAN over the axis.
+    """
+    r = axis_size(axis)
+    s = max(1, int(num_servers))
+    if r % s:
+        raise ValueError(
+            f"axis size {r} does not factor into {s} servers")
+    p = r // s
+    n = g.shape[0]
+    gf = g.astype(jnp.float32)
+    if p == 1 or s == 1:
+        # degenerate grouping: one level is trivial — a flat psum IS the
+        # hierarchical schedule then
+        return lax.psum(gf, axis) / r
+    intra = [list(range(sv * p, (sv + 1) * p)) for sv in range(s)]
+    inter = [[sv * p + i for sv in range(s)] for i in range(p)]
+    pad = (-n) % p
+    gp = jnp.pad(gf, (0, pad))
+    mine = lax.psum_scatter(gp.reshape(p, -1), axis, scatter_dimension=0,
+                            tiled=False, axis_index_groups=intra)
+    mine = lax.psum(mine, axis, axis_index_groups=inter)
+    full = lax.all_gather(mine, axis,
+                          axis_index_groups=intra).reshape(-1)[:n]
+    return full / r
 
 
 def tree_compressed_psum(grads, axis: str, err_tree=None):

@@ -173,6 +173,31 @@ class ParallelContext:
         return plan_ir.allgather_site(phase, frag_bytes=frag,
                                       num_domains=nd, topo=topo)
 
+    def grad_sync_site(self, phase: str, *, num_params: int,
+                       tokens_per_rank: int):
+        """The per-step gradient AllReduce site of one training phase,
+        or ``None`` when there are no data-parallel replicas to sync.
+
+        Payload: fp32 gradients of the TP-sharded parameters.  Overlap
+        context: the modeled backward-pass time — gradient buckets
+        become ready back-to-front during backprop, so a chunked sync
+        (microbatch > 1) hides earlier chunks' wire time behind later
+        layers' backward compute.  Fabric: the full DP span — gradient
+        sync always crosses the pod axis (unlike EP, which stays
+        intra-pod for small expert counts)."""
+        dp = self.num_pods * self.data_size
+        if dp <= 1:
+            return None
+        from repro.core import plan as plan_ir
+        from repro.core.latency_model import backward_compute_s
+        from repro.core.planner import _ep_topology
+        payload = float(num_params) * 4.0 / max(1, self.model_size)
+        compute = backward_compute_s(num_params, tokens_per_rank,
+                                     tp=self.model_size)
+        topo = _ep_topology(self.num_pods, self.data_size, self.fabric)
+        return plan_ir.grad_sync_site(phase, payload_bytes=payload,
+                                      compute_s=compute, topo=topo)
+
     def plan_collectives(self, program):
         """Jointly plan a declared program on this context's fabric and
         calibration: the launch-surface entry point
@@ -426,6 +451,18 @@ def build_collective_program(cfg, pctx: ParallelContext, name: str,
                 d_model=cfg.d_model, itemsize=itemsize)
             if ag is not None:
                 sites.append(ag)
+        if phase == "train":
+            # every optimizer step ends in a gradient AllReduce over the
+            # DP replicas — declare it so the planner sweeps its scheme
+            # and chunking jointly with the phase's other collectives
+            from repro.models.api import param_count_shape_only
+            dp = pctx.num_pods * pctx.data_size
+            n_rank = max(1, (global_batch * seq_len) // dp)
+            gs = pctx.grad_sync_site(
+                phase, num_params=param_count_shape_only(cfg),
+                tokens_per_rank=n_rank)
+            if gs is not None:
+                sites.append(gs)
     return plan_ir.CollectiveProgram(name, tuple(sites))
 
 

@@ -64,12 +64,21 @@ jax.tree_util.register_pytree_node(
 
 def make_train_step(model, optimizer: Optimizer, *, grad_accum: int = 1,
                     max_grad_norm: float = 1.0, donate: bool = True,
+                    grad_sync: Optional[Callable[[Any], Any]] = None,
                     jit_kwargs: dict | None = None):
     """Build the jitted train step: grad-accum microbatching, clip, update.
 
     batch leaves must have a leading microbatch dim [grad_accum, ...] when
     grad_accum > 1.  ``jit_kwargs`` (e.g. out_shardings) are forwarded to
     jax.jit.
+
+    ``grad_sync`` is the planner-routed gradient reduction hook: a
+    callable applied to the grad pytree *before* clipping (e.g. a
+    ``planned_psum`` closure over a shard_map data axis, or a compressed
+    variant).  Under plain ``jax.jit`` the DP mean is already inserted
+    implicitly by AD — which lowers to the flat ring the planner's
+    "ring" decision models — so leave it ``None`` there; pass a hook
+    only when the step runs inside shard_map with a bindable axis.
     """
 
     def step_fn(state: TrainState, batch):
@@ -95,6 +104,8 @@ def make_train_step(model, optimizer: Optimizer, *, grad_accum: int = 1,
             grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
             loss = lsum / grad_accum
             metrics = {}
+        if grad_sync is not None:
+            grads = grad_sync(grads)
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         updates, opt_state = optimizer.update(grads, state.opt_state,
                                               state.params, state.step)

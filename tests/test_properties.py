@@ -180,6 +180,105 @@ class TestLatencyModelProperties:
             lm.dispatch_cross_server_time(batch, False)
 
 
+class TestReduceLedgerProperties:
+    """Closed-form invariants of the gradient-sync (reduce) ledgers on
+    arbitrary generated fabrics: byte conservation, ring step counts,
+    log-depth trees, and the hierarchical/multiwrite schedules never
+    store-and-forwarding (every hop they charge is a direct link on
+    ClusterSpec fabrics)."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(spec=cluster_specs(), nbytes=st.integers(1024, 2 ** 24),
+           phases=st.sampled_from([1, 2]))
+    def test_ring_bytes_and_step_count(self, spec, nbytes, phases):
+        topo = spec.build()
+        R = topo.num_nodes
+        led = sch.reduce_ring_ledger(topo, float(nbytes), phases=phases)
+        per_edge = phases * nbytes * (R - 1) / R
+        total = sum(led.link_bytes.values())
+        # R ring hops, each charging per_edge on every link of its path:
+        # equality iff no hop store-and-forwards (odd server counts may
+        # forward the closing edge)
+        assert total >= R * per_edge - 1e-6
+        if not led.relayed:
+            assert total == pytest.approx(R * per_edge)
+        # phases*(R-1) rounds; one is covered by alpha_base
+        assert led.alpha_extra_s == pytest.approx(
+            (phases * (R - 1) - 1) * sch.REDUCE_STEP_ALPHA_S)
+
+    @settings(max_examples=40, deadline=None)
+    @given(spec=cluster_specs())
+    def test_tree_depth_is_ceil_log2(self, spec):
+        import math
+        topo = spec.build()
+        S, P = spec.num_servers, spec.npus_per_server
+        want = ((math.ceil(math.log2(P)) if P > 1 else 0)
+                + (math.ceil(math.log2(S)) if S > 1 else 0))
+        assert sch.reduce_tree_depth(topo) == want
+        led = sch.reduce_tree_ledger(topo, 4096.0)
+        assert led.alpha_extra_s == pytest.approx(
+            max(0, want - 1) * sch.REDUCE_STEP_ALPHA_S)
+
+    @settings(max_examples=40, deadline=None)
+    @given(spec=cluster_specs(), nbytes=st.integers(1024, 2 ** 24))
+    def test_hierarchical_conserves_bytes(self, spec, nbytes):
+        topo = spec.build()
+        S, P = spec.num_servers, spec.npus_per_server
+        led = sch.reduce_hierarchical_ledger(topo, float(nbytes), phases=2)
+        shard = nbytes / P if P > 1 else nbytes
+        want = 0.0
+        if P > 1:
+            want += S * P * 2.0 * nbytes * (P - 1) / P
+        if S > 1:
+            want += P * S * 2.0 * shard * (S - 1) / S
+        if spec.rails_per_npu <= 1:
+            # intra rings run on full-mesh links, the inter ring on
+            # same-index rail links: no hop ever forwards
+            assert not led.relayed and not led.relay_bytes
+            assert sum(led.link_bytes.values()) == pytest.approx(want)
+        else:
+            # multi-rail striping (dst index jd routes via rail jd % r)
+            # can add an intra forwarding hop per rail transfer — the
+            # ledger charges it, so bytes only grow
+            assert sum(led.link_bytes.values()) >= want - 1e-6
+
+    @settings(max_examples=40, deadline=None)
+    @given(spec=cluster_specs(), nbytes=st.integers(1024, 2 ** 24))
+    def test_multiwrite_conserves_bytes_and_relay_work(self, spec, nbytes):
+        topo = spec.build()
+        S, P = spec.num_servers, spec.npus_per_server
+        led = sch.reduce_multiwrite_ledger(topo, float(nbytes))
+        slice_b = nbytes / P
+        inter = (S - 1) if S > 1 else 0
+        # per relay: (P-1) funnel-in + inter rail copies + (P-1) replicate
+        want_wire = S * P * (2 * (P - 1) + inter) * slice_b
+        # relay rx processing: local partials + remote pre-reduced copies
+        want_relay = S * P * ((P - 1) + inter) * slice_b
+        if spec.rails_per_npu <= 1:
+            assert sum(led.link_bytes.values()) == pytest.approx(want_wire)
+            assert sum(led.relay_bytes.values()) == pytest.approx(want_relay)
+            # bottleneck rail link carries exactly ONE slice per
+            # (server pair, index)
+            for (a, b), v in led.link_bytes.items():
+                if topo.server_of(a) != topo.server_of(b):
+                    assert v == pytest.approx(slice_b)
+        else:
+            # striped forwarding adds hops: charges only grow
+            assert sum(led.link_bytes.values()) >= want_wire - 1e-6
+            assert sum(led.relay_bytes.values()) >= want_relay - 1e-6
+
+    @settings(max_examples=30, deadline=None)
+    @given(spec=cluster_specs(), nbytes=st.integers(1024, 2 ** 22))
+    def test_scatter_conserves_bytes_on_full_mesh(self, spec, nbytes):
+        n = spec.npus_per_server
+        topo = full_mesh(n)
+        led = sch.reduce_scatter_a2a_ledger(topo, float(nbytes))
+        # every ordered pair moves N/R once, all single-hop
+        assert not led.relayed
+        assert sum(led.link_bytes.values()) == pytest.approx(
+            (n - 1) * nbytes)
+
+
 class TestCheckpointProperties:
     @settings(max_examples=20, deadline=None)
     @given(shapes=st.lists(
