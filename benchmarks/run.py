@@ -716,6 +716,219 @@ def bench_allreduce(smoke: bool = False):
     return rows
 
 
+def bench_contention(smoke: bool = False):
+    """Contention-aware whole-program planning vs independent per-site
+    planning, plus the beam-search cost/quality envelope.
+
+    Part 1 — flip sweep: for each (fabric, MoE batch, grad payload) cell
+    a single ``train`` phase declares the coupled MoE (dispatch, combine)
+    pair AND the gradient-sync allreduce on the SAME fabric.  The greedy
+    assignment (every group's own contention-free best — exactly what
+    independent per-site planning binds) is re-scored under the shared
+    -link phase scorer and compared against ``plan_program``'s jointly
+    searched combination.  A cell "flips" when the joint search picks a
+    different (scheme, G) set with a strictly better contended score.
+
+    Part 2 — beam envelope: a 3-group ``tpu_2x16`` program (MoE pair +
+    grad sync + split-TP gather in one phase) whose candidate product
+    exceeds ``Planner.EXHAUSTIVE_LIMIT``.  Beam search must enumerate
+    < 10% of the exhaustive product while landing within 2% of the
+    forced-exhaustive oracle score, inside a planning wall-time budget.
+
+    CI gates (also under ``--smoke``):
+      * joint search never loses to the greedy assignment;
+      * >= 1 cell flips with a strict modeled win;
+      * the tpu_2x16 program's product forces beam under ``auto``;
+      * beam scores < 10% of the product and lands within 2% of the
+        oracle;
+      * beam planning wall time stays under the regression threshold.
+    Full mode emits results/BENCH_contention.json.
+    """
+    import json
+    import os
+
+    from repro.core import latency_model as lm
+    from repro.core import plan as plan_ir
+    from repro.core import planner as pl
+    from repro.core.topology import get_fabric
+
+    top_k, d_model, f_shard = 8, 7168, 2048   # DeepSeek-class expert FFN
+    tp, seq = 8, 2048
+    fabrics = (("2x8", "tpu_2x16") if smoke
+               else ("2x8", "2x8@50", "2x8asym", "4x8", "tpu_2x16"))
+    batches = (1024, 4096) if smoke else (256, 1024, 2048, 4096)
+    # grad payloads from LoRA-scale to 12B dense: the flips live where
+    # gradient traffic is COMPARABLE to the MoE round trip (a 12B sync
+    # dwarfs everything and the same scheme wins solo and contended)
+    grad_params = ((100_000_000, 1_000_000_000) if smoke
+                   else (10_000_000, 100_000_000, 1_000_000_000,
+                         12_000_000_000))
+    PLAN_TIME_BUDGET_S = 3.0   # beam wall-time regression threshold
+
+    def train_program(batch, n_params, extra=()):
+        compute_s = lm.expert_compute_time_s(batch, top_k, d_model,
+                                             f_shard)
+        d, c = plan_ir.moe_sites(
+            "train", num_experts=64, top_k=top_k, tokens_per_rank=batch,
+            token_bytes=lm.TOKEN_BYTES, compute_s=compute_s)
+        gs = plan_ir.grad_sync_site(
+            "train", payload_bytes=n_params * 4 / tp,
+            compute_s=lm.backward_compute_s(n_params, seq, tp=tp))
+        return plan_ir.CollectiveProgram("bench_contention",
+                                         (d, c, gs) + tuple(extra))
+
+    def greedy_view(planner, program, topo):
+        """Independent per-site planning: each group's own best row,
+        re-scored under the shared-link phase model."""
+        groups = program.phases()["train"]
+        bundles = [planner._group_candidates(g, topo, planner.hw, True)
+                   for g in groups]
+        entries = [(b["cands"][0]["score_s"], b["cands"][0]["ledgers"])
+                   for b in bundles]
+        labels = []
+        for b in bundles:
+            r = b["rows"][0]
+            if b["kind"] == "single":
+                labels.append(f"{r[2].name}@G"
+                              f"{dict(r[3]).get('microbatch', 1)}")
+            else:
+                labels.append(f"{r[2].name}+{r[5].name}@G"
+                              f"{dict(r[3]).get('microbatch', 1)}")
+        return lm.score_phase(entries, planner.hw), tuple(labels)
+
+    def joint_labels(eplan):
+        d = eplan.decisions["train/moe_dispatch"]
+        c = eplan.decisions["train/moe_combine"]
+        g = eplan.decisions["train/grad_sync"]
+        return (f"{d.plan}+{c.plan}@G{d.microbatch}",
+                f"{g.plan}@G{g.microbatch}")
+
+    rows, table, failures, flips = [], [], [], 0
+    print("\n== bench_contention: joint vs independent phase planning ==")
+    print(f"{'fabric':<10} {'batch':>6} {'params':>6} "
+          f"{'independent (greedy)':<34} {'joint':<34} "
+          f"{'greedy us':>10} {'joint us':>9} {'win%':>6}")
+    for fname in fabrics:
+        topo = get_fabric(fname)
+        planner = pl.Planner()
+        for batch in batches:
+            for n_params in grad_params:
+                program = train_program(batch, n_params)
+                greedy_s, g_labels = greedy_view(planner, program, topo)
+                eplan = planner.plan_program(program, topo)
+                joint_s = eplan.phase_report["train"]["score_s"]
+                j_labels = joint_labels(eplan)
+                moved = j_labels != g_labels
+                win = 100.0 * (1.0 - joint_s / greedy_s)
+                if joint_s > greedy_s * (1 + 1e-9):
+                    failures.append(
+                        f"{fname} b{batch} p{n_params}: joint "
+                        f"{joint_s:.3e}s lost to greedy {greedy_s:.3e}s")
+                if moved and not joint_s < greedy_s:
+                    failures.append(
+                        f"{fname} b{batch} p{n_params}: decision flipped "
+                        f"without a contended win")
+                flips += moved and joint_s < greedy_s
+                gl = " ".join(g_labels)
+                jl = " ".join(j_labels) + (" *" if moved else "")
+                print(f"{fname:<10} {batch:>6} "
+                      f"{f'{n_params / 1e9:g}B':>6} "
+                      f"{gl:<34} {jl:<34} {greedy_s * 1e6:>10.1f} "
+                      f"{joint_s * 1e6:>9.1f} {win:>6.2f}")
+                table.append({
+                    "fabric": fname, "batch": batch,
+                    "grad_params": n_params,
+                    "independent": {"labels": g_labels,
+                                    "phase_us": greedy_s * 1e6},
+                    "joint": {"labels": j_labels,
+                              "phase_us": joint_s * 1e6,
+                              "contention_us":
+                                  eplan.phase_report["train"]
+                                  ["contention_s"] * 1e6},
+                    "flipped": moved, "win_pct": win})
+                rows.append({"name": f"contention_{fname}_b{batch}"
+                                     f"_p{n_params // 10**6}m_win",
+                             "metric": "pct", "value": win})
+    print(f"cells where joint contention scoring flipped the decision: "
+          f"{flips}/{len(table)}")
+    rows.append({"name": "contention_cells_flipped", "metric": "count",
+                 "value": flips})
+    if not flips:
+        failures.append("joint contention scoring never flipped a "
+                        "decision vs independent per-site planning")
+
+    # ---- part 2: beam search envelope on the wide tpu_2x16 program ----
+    topo = get_fabric("tpu_2x16")
+    wide = train_program(
+        2048, 12_000_000_000,
+        extra=(plan_ir.allgather_site("train", frag_bytes=8 << 20),))
+    e_beam = pl.Planner(search="beam").plan_program(wide, topo)
+    e_oracle = pl.Planner(search="exhaustive").plan_program(wide, topo)
+    e_auto = pl.Planner().plan_program(wide, topo)
+    sb, so = e_beam.planner_stats, e_oracle.planner_stats
+    beam_s = e_beam.phase_report["train"]["score_s"]
+    oracle_s = e_oracle.phase_report["train"]["score_s"]
+    gap = 100.0 * (beam_s - oracle_s) / oracle_s
+    frac = sb["combos_scored"] / max(1, sb["product"])
+    print(f"\ntpu_2x16 wide program (3 groups): product {sb['product']}, "
+          f"beam scored {sb['combos_scored']} ({100 * frac:.1f}%) in "
+          f"{sb['planning_wall_s'] * 1e3:.1f}ms; oracle scored "
+          f"{so['combos_scored']} in {so['planning_wall_s'] * 1e3:.1f}ms; "
+          f"beam {beam_s * 1e6:.1f}us vs oracle {oracle_s * 1e6:.1f}us "
+          f"(gap {gap:+.2f}%)")
+    if sb["product"] <= pl.Planner.EXHAUSTIVE_LIMIT:
+        failures.append(f"wide program product {sb['product']} does not "
+                        f"exceed EXHAUSTIVE_LIMIT "
+                        f"{pl.Planner.EXHAUSTIVE_LIMIT}")
+    if e_auto.planner_stats["search"] != ["beam"]:
+        failures.append(f"auto mode did not pick beam on the wide "
+                        f"program: {e_auto.planner_stats['search']}")
+    if not frac < 0.10:
+        failures.append(f"beam scored {100 * frac:.1f}% of the product "
+                        f"(gate: < 10%)")
+    if not gap <= 2.0:
+        failures.append(f"beam landed {gap:.2f}% off the oracle "
+                        f"(gate: <= 2%)")
+    if not sb["planning_wall_s"] < PLAN_TIME_BUDGET_S:
+        failures.append(f"beam planning took "
+                        f"{sb['planning_wall_s']:.2f}s (budget "
+                        f"{PLAN_TIME_BUDGET_S}s) on tpu_2x16")
+    rows.append({"name": "contention_beam_scored_frac", "metric": "ratio",
+                 "value": frac})
+    rows.append({"name": "contention_beam_oracle_gap", "metric": "pct",
+                 "value": gap})
+    rows.append({"name": "contention_beam_wall_ms", "metric": "ms",
+                 "value": sb["planning_wall_s"] * 1e3})
+
+    for f in failures:
+        print(f"CONTENTION GATE FAIL: {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+    if not smoke:
+        out = {"token_bytes": lm.TOKEN_BYTES, "top_k": top_k,
+               "d_model": d_model, "f_shard": f_shard, "tp": tp,
+               "cells": table, "cells_flipped": flips,
+               "beam_envelope": {
+                   "fabric": "tpu_2x16",
+                   "product": sb["product"],
+                   "combos_scored": sb["combos_scored"],
+                   "scored_frac": frac,
+                   "beam_us": beam_s * 1e6,
+                   "oracle_us": oracle_s * 1e6,
+                   "gap_pct": gap,
+                   "beam_wall_ms": sb["planning_wall_s"] * 1e3,
+                   "oracle_wall_ms": so["planning_wall_s"] * 1e3,
+                   "wall_budget_s": PLAN_TIME_BUDGET_S}}
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_contention.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
+    return rows
+
+
 def bench_train_throughput():
     """Tiny-model CPU train-step wall time (framework overhead check)."""
     import jax
@@ -751,6 +964,7 @@ MICRO_BENCHES = {
     "bench_overlap": bench_overlap,
     "bench_program": bench_program,
     "bench_allreduce": bench_allreduce,
+    "bench_contention": bench_contention,
     "bench_kernels": lambda smoke: bench_kernels(),
     "bench_dispatch_sim": lambda smoke: bench_dispatch_sim(),
     "bench_train_throughput": lambda smoke: bench_train_throughput(),

@@ -248,6 +248,117 @@ def score_pipeline(ledgers, hw: HardwareModel = DEFAULT) -> float:
     return (1.0 - eta) * serial + eta * pipelined
 
 
+# ---------------------------------------------------------------------------
+# Phase-level contention: the multi-commodity-flow view of one program phase
+# ---------------------------------------------------------------------------
+#
+# Sites declared concurrent within one program phase (the MoE round trip
+# and the grad-sync AllReduce of a training step; the collectives of one
+# serving phase) put their bytes on the SAME physical links.  Scoring each
+# site on its private ledger treats every rail as dedicated — two plans
+# that each look fastest alone can saturate one shared rail together.
+# The flow formulation ("Rethinking ML Collective Communication as a
+# Multi-Commodity Flow Problem"): per-link demand SUMS across concurrent
+# flows, and the phase pays the bottleneck of the summed demand.
+
+def merge_ledgers(ledgers) -> tuple[Ledger, ...]:
+    """Phase ledger(s): per-link bytes, flow counts, relay bytes and
+    forwarding-engine bytes SUMMED across ``ledgers`` — the joint demand
+    of sites concurrent in one phase.  Ledgers merge per fabric (one
+    merged ledger per distinct topology fingerprint): sites on disjoint
+    fabrics (the split-TP gather's model-axis mesh vs the EP cluster)
+    share no physical link, so their demands never add.  The merged
+    ledgers are pure demand accounting (``stages=1``, no overlap/compute
+    context) — score them with :func:`ledger_wire_s`, not
+    :func:`score_ledger`."""
+    acc: dict[tuple, list] = {}
+    order: list[tuple] = []
+    for led in ledgers:
+        if not led.link_bytes:
+            continue
+        fp = led.topo.fingerprint()
+        if fp not in acc:
+            acc[fp] = [led.topo, {}, {}, {}, {}]
+            order.append(fp)
+        _, lb, rb, fc, es = acc[fp]
+        for k, v in led.link_bytes.items():
+            lb[k] = lb.get(k, 0.0) + v
+        for k, v in led.relay_bytes.items():
+            rb[k] = rb.get(k, 0.0) + v
+        for k, v in led.flow_counts.items():
+            fc[k] = fc.get(k, 0) + v
+        for k, v in led.engine_serial.items():
+            es[k] = es.get(k, 0.0) + v
+    return tuple(
+        Ledger(topo=acc[fp][0], link_bytes=acc[fp][1],
+               relay_bytes=acc[fp][2], flow_counts=acc[fp][3],
+               engine_serial=acc[fp][4])
+        for fp in order)
+
+
+def phase_wire_s(ledgers, hw: HardwareModel = DEFAULT) -> float:
+    """Shared-link serialization floor of concurrently executing
+    ledgers: the bottleneck over the per-fabric MERGED demand
+    (:func:`merge_ledgers`).  Disjoint fabrics proceed in parallel — the
+    slowest sets the pace."""
+    return max((ledger_wire_s(m, hw) for m in merge_ledgers(ledgers)),
+               default=0.0)
+
+
+def score_phase(entries, hw: HardwareModel = DEFAULT,
+                background=()) -> float:
+    """Contention-aware latency of one program phase.
+
+    ``entries``: one ``(score_s, ledgers)`` pair per jointly-planned
+    group executing concurrently in the phase — ``score_s`` the group's
+    own (contention-free) combined score, ``ledgers`` its site ledgers.
+    ``background``: extra ledgers whose bytes contend for the phase's
+    links without contributing a latency term of their own (another
+    phase's traffic under a continuous-batching SLO check).
+
+    The model: concurrent groups overlap, so the phase pays its SLOWEST
+    group — plus the EXCESS serialization of the shared rails.  The
+    summed-demand bottleneck (:func:`phase_wire_s` over all ledgers) is
+    compared against the largest single group's own wire floor; any
+    excess is contention no overlap can hide and is charged on top:
+
+        t_phase = max_g score_g + max(0, wire(sum of demands)
+                                         - max_g wire(demands_g))
+
+    With disjoint links the merged bottleneck equals the largest own
+    bottleneck and the penalty vanishes — the phase scores exactly like
+    independent planning.  Shared links make the penalty positive, and a
+    scheme that routes around the shared rail can win jointly even when
+    it loses on its private ledger.  Background demand only counts on
+    fabrics the phase's OWN ledgers touch: traffic on a disjoint fabric
+    shares no link with this phase and cannot slow it."""
+    solo, contention = _phase_terms(entries, hw, background)[:2]
+    return solo + contention
+
+
+def phase_breakdown(entries, hw: HardwareModel = DEFAULT,
+                    background=()) -> dict:
+    """Reporting view of :func:`score_phase`: the solo (slowest-group)
+    term, the merged shared-link wire floor and the contention excess,
+    plus the final phase score."""
+    solo, contention, merged = _phase_terms(entries, hw, background)
+    return {"score_s": solo + contention, "solo_s": solo,
+            "phase_wire_s": merged, "contention_s": contention}
+
+
+def _phase_terms(entries, hw, background):
+    """(solo_s, contention_s, merged_wire_s) of one phase."""
+    entries = list(entries)
+    solo = max((s for s, _ in entries), default=0.0)
+    own_ledgers = [l for _, ls in entries for l in ls]
+    own = max((phase_wire_s(ls, hw) for _, ls in entries), default=0.0)
+    own_fps = {l.topo.fingerprint() for l in own_ledgers if l.link_bytes}
+    merged = phase_wire_s(
+        own_ledgers + [l for l in background
+                       if l.topo.fingerprint() in own_fps], hw)
+    return solo, max(0.0, merged - own), merged
+
+
 def pipeline_overlap_endpoints(ledgers, hw: HardwareModel = DEFAULT
                                ) -> tuple[float, float]:
     """(serial_s, ideal_s) endpoints of a coupled pipeline's overlap

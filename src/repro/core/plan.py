@@ -412,6 +412,12 @@ class CollectiveSite:
     coupled_with: Optional[str] = None
     topo: Optional[Topology] = None
 
+    @property
+    def phase(self) -> str:
+        """Phase prefix of the role ("train/grad_sync" -> "train"); sites
+        sharing a phase execute concurrently and contend for links."""
+        return self.role.partition("/")[0]
+
     def scenario_args(self) -> dict:
         """kwargs for ``Planner._scenario`` (skew/compute folded in)."""
         return {**dict(self.scenario_kw), "skew": self.skew,
@@ -491,12 +497,29 @@ class CollectiveProgram:
     sites carry their phase in the role prefix ("prefill/moe_dispatch").
     Roles must be unique; ``coupled_with`` references must resolve and
     must not chain (a group is one pipeline).
+
+    ``phase_budgets`` optionally caps a phase's contention-aware latency
+    (phase name -> seconds): a decode SLO declared here constrains the
+    OTHER phases' plans during the joint sweep — their candidate
+    combinations are rejected when their background traffic would push
+    the budgeted phase past its cap (see ``Planner.plan_program``).
     """
 
     name: str
     sites: tuple[CollectiveSite, ...]
+    phase_budgets: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def __post_init__(self):
+        phases = {s.phase for s in self.sites}
+        for ph, budget in self.phase_budgets.items():
+            if ph not in phases:
+                raise ValueError(
+                    f"budget for unknown phase {ph!r} in program "
+                    f"{self.name!r}; have {sorted(phases)}")
+            if not budget > 0:
+                raise ValueError(
+                    f"phase budget must be positive: {ph!r} -> {budget!r}")
         roles = [s.role for s in self.sites]
         if len(set(roles)) != len(roles):
             dup = sorted({r for r in roles if roles.count(r) > 1})
@@ -538,8 +561,19 @@ class CollectiveProgram:
             out.append((s, *by_anchor.get(s.role, [])))
         return out
 
+    def phases(self) -> dict[str, list[tuple[CollectiveSite, ...]]]:
+        """Jointly-planned groups partitioned by phase (declaration
+        order preserved): groups within one phase execute concurrently
+        and are scored under the merged phase ledger; distinct phases
+        never overlap (except through an explicit budget constraint)."""
+        out: dict[str, list[tuple[CollectiveSite, ...]]] = {}
+        for group in self.groups():
+            out.setdefault(group[0].phase, []).append(group)
+        return out
+
     def cache_key(self) -> tuple:
         return (self.name,
+                tuple(sorted(self.phase_budgets.items())),
                 tuple((s.role, s.key(), s.coupled_with,
                        None if s.topo is None else s.topo.fingerprint())
                       for s in self.sites))
@@ -558,6 +592,12 @@ class ExecutionPlan:
                     row step-time telemetry measures against);
     ``group_of``    role -> anchor role of its coupled group (anchors
                     map to themselves; uncoupled sites are absent).
+    ``phase_report``  phase -> contention breakdown of the chosen
+                    combination (solo/merged-wire/contention seconds,
+                    budget verdict, per-phase search statistics).
+    ``planner_stats``  whole-program sweep statistics (candidates
+                    enumerated, combinations scored vs the exhaustive
+                    product, search mode, planning wall-time).
 
     Bound into a :class:`~repro.parallel.context.ParallelContext` via
     ``pctx.bind(plan)``; consumers resolve their site by
@@ -570,6 +610,10 @@ class ExecutionPlan:
     decisions: Mapping[str, object]
     joint: Mapping[str, object] = dataclasses.field(default_factory=dict)
     group_of: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    phase_report: Mapping[str, dict] = dataclasses.field(
+        default_factory=dict)
+    planner_stats: Mapping[str, object] = dataclasses.field(
+        default_factory=dict)
 
     # -- identity ------------------------------------------------------------
     @property
@@ -626,6 +670,11 @@ class ExecutionPlan:
             out["sites"][role] = self.decisions[role].report()
         for anchor in sorted(self.joint):
             out["joint"][anchor] = self.joint[anchor].report()
+        if self.phase_report:
+            out["phases"] = {ph: dict(rep)
+                             for ph, rep in self.phase_report.items()}
+        if self.planner_stats:
+            out["planner"] = dict(self.planner_stats)
         return out
 
     def summary(self) -> str:
@@ -637,6 +686,15 @@ class ExecutionPlan:
         for role in sorted(self.decisions):
             if role not in done:
                 lines.append(f"  {role}: {self.decisions[role].summary()}")
+        for ph, rep in self.phase_report.items():
+            if rep.get("contention_s", 0.0) > 0 or rep.get("budget_s"):
+                line = (f"  phase {ph}: {rep['score_s'] * 1e6:.0f}us"
+                        f" (contention +{rep['contention_s'] * 1e6:.0f}us)")
+                if rep.get("budget_s"):
+                    verdict = "ok" if rep.get("budget_ok") else "VIOLATED"
+                    line += (f", budget {rep['budget_s'] * 1e6:.0f}us"
+                             f" {verdict}")
+                lines.append(line)
         return "\n".join(lines)
 
 

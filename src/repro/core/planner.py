@@ -22,15 +22,17 @@ layer can consult the planner at every trace without re-simulating.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
+import time
 from collections import OrderedDict
 from typing import Optional
 
 from . import plan as plan_ir
 from . import schedules as _schedules  # noqa: F401  (registers the plans)
 from .latency_model import (DEFAULT, HardwareModel, overlap_endpoints,
-                            pipeline_overlap_endpoints, score_ledger,
-                            score_pipeline)
+                            phase_breakdown, pipeline_overlap_endpoints,
+                            score_ledger, score_phase, score_pipeline)
 # bucketing lives next to the CollectiveSite keys it must agree with;
 # re-exported here because this module defined it historically
 from .plan import bucket_compute_s, bucket_payload  # noqa: F401
@@ -122,9 +124,22 @@ class Planner:
 
     PROGRAM_CACHE_SIZE = 64
 
+    # largest per-phase candidate product the exhaustive oracle sweeps;
+    # above it "auto" program planning switches to beam search (the
+    # product grows multiplicatively with every op that joins a phase —
+    # a 3-group tpu_2x16 train phase is already ~2000 combinations)
+    EXHAUSTIVE_LIMIT = 512
+
     def __init__(self, hw: HardwareModel = DEFAULT,
-                 cache_size: int = 256) -> None:
+                 cache_size: int = 256, *, beam_width: int = 6,
+                 shortlist_k: int = 6, search: str = "auto") -> None:
+        if search not in ("auto", "beam", "exhaustive"):
+            raise ValueError(f"unknown search mode {search!r}; expected "
+                             f"'auto' | 'beam' | 'exhaustive'")
         self.hw = hw
+        self.beam_width = int(beam_width)
+        self.shortlist_k = int(shortlist_k)
+        self.search = search
         self.cache_size = int(cache_size)
         self._cache: OrderedDict[tuple, PlanDecision] = OrderedDict()
         self.cache_hits = 0
@@ -268,8 +283,11 @@ class Planner:
             self._cache.popitem(last=False)
         return decision
 
-    def _sweep(self, op: str, scenario, bucket: int, hw: HardwareModel,
-               executable_only: bool) -> PlanDecision:
+    def _site_rows(self, op: str, scenario, bucket: int, hw: HardwareModel,
+                   executable_only: bool) -> list[tuple]:
+        """Every (plan, knobs) candidate of one uncoupled site, simulated
+        and scored on its own ledger; sorted by (own score, registration
+        order).  Rows are ``(t, order, plan, knobs, ledger)``."""
         plans = plan_ir.plans_for(op, executable_only=executable_only)
         if not plans:
             raise ValueError(f"no plans registered for op {op!r}")
@@ -280,7 +298,13 @@ class Planner:
                 t = score_ledger(ledger, hw)
                 scored.append((t, order, p, knobs, ledger))
         scored.sort(key=lambda s: (s[0], s[1]))
-        best_t, _, best, best_knobs, best_ledger = scored[0]
+        return scored
+
+    def _site_decision(self, op: str, scored: list, chosen: tuple,
+                       bucket: int, hw: HardwareModel) -> PlanDecision:
+        """PlanDecision for ``chosen`` (any row of ``scored`` — the
+        contention-aware program search may pick a non-first row)."""
+        best_t, _, best, best_knobs, best_ledger = chosen
         base_name = plan_ir.BASELINE_PLAN[op]
         # the baseline reference is the SERIAL (G == 1) baseline cell —
         # what a fixed-policy baseline deployment actually executes —
@@ -299,6 +323,11 @@ class Planner:
             candidates=tuple((p.name, tuple(sorted(kn.items())), t)
                              for t, _, p, kn, _ in scored),
             predicted_serial_s=serial_t, predicted_ideal_s=ideal_t)
+
+    def _sweep(self, op: str, scenario, bucket: int, hw: HardwareModel,
+               executable_only: bool) -> PlanDecision:
+        scored = self._site_rows(op, scenario, bucket, hw, executable_only)
+        return self._site_decision(op, scored, scored[0], bucket, hw)
 
     # -- whole-program planning ----------------------------------------------
     def plan_program(self, program: "plan_ir.CollectiveProgram",
@@ -319,53 +348,119 @@ class Planner:
         pipeline pays dispatch + combine startup per chunk and its
         bottleneck stage is the max over three stages, not two).
 
+        Groups CONCURRENT within one phase contend for shared links:
+        each phase's candidate combinations are scored with
+        :func:`~repro.core.latency_model.score_phase` (per-link demand
+        summed across the phase's sites, the summed bottleneck charged
+        jointly), searched exhaustively when the candidate product is
+        small (the oracle) and by beam search over per-group shortlists
+        past :data:`EXHAUSTIVE_LIMIT`.  Phases carrying a latency budget
+        (``program.phase_budgets``) are planned first and then constrain
+        the remaining phases — a combination whose background traffic
+        pushes a budgeted phase past its cap is rejected.
+
         Sites may carry their own fabric (``site.topo``); everything
         else is scored on ``topo``.  Plans are memoized on
-        (program, topo, hw) and the (program, topo) pair is registered
-        so :meth:`replan_programs` can re-derive every known program
-        after a re-calibration.
+        (program, topo, hw, search knobs) and the (program, topo) pair
+        is registered so :meth:`replan_programs` can re-derive every
+        known program after a re-calibration.
         """
         hw = hw or self.hw
         pkey = (program.cache_key(), topology_fingerprint(topo),
                 executable_only)
-        key = (*pkey, hw.fingerprint())
+        key = (*pkey, hw.fingerprint(), self.search, self.beam_width,
+               self.shortlist_k)
         hit = self._program_cache.get(key)
         if hit is not None:
             self.cache_hits += 1
             self._program_cache.move_to_end(key)
             return hit
         self.cache_misses += 1
+        t_start = time.perf_counter()
         decisions: dict = {}
         joint: dict = {}
         group_of: dict = {}
-        for group in program.groups():
-            if len(group) == 1:
-                site = group[0]
-                decisions[site.role] = self.choose(
-                    site.op, site.payload_bytes, site.topo or topo, hw,
-                    executable_only=executable_only, **site.scenario_args())
-            elif (len(group) == 2 and group[0].op == "dispatch"
-                  and group[1].op == "combine"):
-                dsite, csite = group
-                d_dec, c_dec, j_dec = self._joint_moe_sweep(
-                    dsite, csite, dsite.topo or topo, hw,
-                    executable_only=executable_only)
-                decisions[dsite.role] = d_dec
-                decisions[csite.role] = c_dec
-                joint[dsite.role] = j_dec
-                group_of[dsite.role] = dsite.role
-                group_of[csite.role] = dsite.role
-                self._log_decision(j_dec, (dsite.topo or topo).name)
-            else:
-                raise ValueError(
-                    f"unsupported coupled group "
-                    f"{[(s.role, s.op) for s in group]}: joint sweeps are "
-                    f"defined for a (dispatch, combine) pair")
+        budgets = dict(program.phase_budgets)
+        # budgeted phases plan FIRST: their chosen ledgers then act as
+        # the fixed background every later phase is constrained against
+        phase_order = sorted(program.phases().items(),
+                             key=lambda kv: kv[0] not in budgets)
+        chosen_entries: dict[str, list] = {}   # phase -> [(score, ledgers)]
+        phase_search: dict[str, dict] = {}
+        for phase_name, groups in phase_order:
+            bundles = [self._group_candidates(g, topo, hw, executable_only)
+                       for g in groups]
+            constraints = [(chosen_entries[ph], budgets[ph])
+                           for ph in budgets
+                           if ph != phase_name and ph in chosen_entries]
+            combo, stats = self._search_phase(
+                bundles, hw, budget=budgets.get(phase_name),
+                constraints=constraints)
+            phase_search[phase_name] = stats
+            entries = []
+            for bundle, j in zip(bundles, combo):
+                cand = bundle["cands"][j]
+                entries.append((cand["score_s"], cand["ledgers"]))
+                row = cand["row"]
+                if bundle["kind"] == "single":
+                    site = bundle["site"]
+                    dec = self._site_decision(
+                        site.op, bundle["rows"], row, bundle["bucket"], hw)
+                    decisions[site.role] = dec
+                    self._log_decision(dec, bundle["topo"].name)
+                else:
+                    dsite, csite = bundle["sites"]
+                    d_bucket, c_bucket = bundle["buckets"]
+                    d_dec, c_dec, j_dec = self._moe_pair_decisions(
+                        bundle["rows"], row, d_bucket, c_bucket, hw)
+                    decisions[dsite.role] = d_dec
+                    decisions[csite.role] = c_dec
+                    joint[dsite.role] = j_dec
+                    group_of[dsite.role] = dsite.role
+                    group_of[csite.role] = dsite.role
+                    self._log_decision(j_dec, bundle["topo"].name)
+            chosen_entries[phase_name] = entries
+        phase_report: dict[str, dict] = {}
+        for phase_name, _ in phase_order:
+            entries = chosen_entries[phase_name]
+            rep = phase_breakdown(entries, hw)
+            rep["groups"] = len(entries)
+            rep["budget_s"] = budgets.get(phase_name)
+            if phase_name in budgets:
+                # the SLO verdict is checked under CONTENDED conditions:
+                # every other phase's chosen traffic as background (the
+                # continuous-batching regime the budget models)
+                background = [led for ph, ents in chosen_entries.items()
+                              if ph != phase_name
+                              for _, ledgers in ents for led in ledgers]
+                rep["contended_score_s"] = score_phase(
+                    entries, hw, background=background)
+                rep["budget_ok"] = (rep["contended_score_s"]
+                                    <= budgets[phase_name])
+            rep["search"] = phase_search[phase_name]
+            phase_report[phase_name] = rep
+        planner_stats = {
+            "search": sorted({s["search"]
+                              for s in phase_search.values()}),
+            "phases": len(phase_search),
+            "candidates": sum(s["candidates"]
+                              for s in phase_search.values()),
+            "product": sum(s["product"] for s in phase_search.values()),
+            "combos_scored": sum(s["combos_scored"]
+                                 for s in phase_search.values()),
+            "combos_pruned": sum(s["combos_pruned"]
+                                 for s in phase_search.values()),
+            "beam_width": self.beam_width,
+            "budget_violated": any(s.get("budget_violated")
+                                   for s in phase_search.values()),
+            "planning_wall_s": time.perf_counter() - t_start}
         eplan = plan_ir.ExecutionPlan(
             program=program,
             topo_fingerprint=topology_fingerprint(topo),
             hw_fingerprint=hw.fingerprint(),
-            decisions=decisions, joint=joint, group_of=group_of)
+            decisions=decisions, joint=joint, group_of=group_of,
+            phase_report=phase_report, planner_stats=planner_stats)
+        self._log_program(program, topo, eplan)
         self._program_cache[key] = eplan
         while len(self._program_cache) > self.PROGRAM_CACHE_SIZE:
             self._program_cache.popitem(last=False)
@@ -373,6 +468,179 @@ class Planner:
         while len(self._programs) > self.PROGRAM_CACHE_SIZE:
             self._programs.popitem(last=False)
         return eplan
+
+    def _log_program(self, program, topo: Topology, eplan) -> None:
+        """Program-level decision_log row: planner COST introspection
+        (candidates, combinations, wall-time) rides the same audit trail
+        the per-op rows use.  ``predicted_serial_s`` stays 0 so
+        fit_overlap_eff never mistakes it for a measurable op row."""
+        stats = dict(eplan.planner_stats)
+        total = sum(rep.get("score_s", 0.0)
+                    for rep in eplan.phase_report.values())
+        self.decision_log.append(
+            {"op": "program", "plan": program.name, "knobs": {},
+             "topo": topo.name, "payload_bytes": 0,
+             "predicted_s": total, "predicted_serial_s": 0.0,
+             "predicted_ideal_s": 0.0, "measured_s": None,
+             "planner": stats})
+        if len(self.decision_log) > self.DECISION_LOG_MAX:
+            del self.decision_log[:-self.DECISION_LOG_MAX]
+
+    def _group_candidates(self, group, topo: Topology, hw: HardwareModel,
+                          executable_only: bool) -> dict:
+        """Candidate bundle of one jointly-planned group: every scored
+        row plus a uniform ``cands`` view ``{score_s, ledgers, row}``
+        (sorted by own contention-free score) the phase search consumes."""
+        if len(group) == 1:
+            site = group[0]
+            site_topo = site.topo or topo
+            scenario = self._scenario(site.op, site_topo,
+                                      site.scenario_args())
+            bucket = bucket_payload(site.payload_bytes)
+            rows = self._site_rows(site.op, scenario, bucket, hw,
+                                   executable_only)
+            cands = [{"score_s": r[0], "ledgers": (r[4],), "row": r}
+                     for r in rows]
+            return {"kind": "single", "site": site, "topo": site_topo,
+                    "bucket": bucket, "rows": rows, "cands": cands}
+        if (len(group) == 2 and group[0].op == "dispatch"
+                and group[1].op == "combine"):
+            dsite, csite = group
+            pair_topo = dsite.topo or topo
+            rows, d_bucket, c_bucket = self._moe_pair_rows(
+                dsite, csite, pair_topo, hw,
+                executable_only=executable_only)
+            cands = [{"score_s": r[0], "ledgers": (r[4], r[7]), "row": r}
+                     for r in rows]
+            return {"kind": "pair", "sites": (dsite, csite),
+                    "topo": pair_topo, "buckets": (d_bucket, c_bucket),
+                    "rows": rows, "cands": cands}
+        raise ValueError(
+            f"unsupported coupled group "
+            f"{[(s.role, s.op) for s in group]}: joint sweeps are "
+            f"defined for a (dispatch, combine) pair")
+
+    def _search_phase(self, bundles: list, hw: HardwareModel, *,
+                      budget: Optional[float] = None,
+                      constraints=()) -> tuple[tuple, dict]:
+        """Pick one candidate per group minimizing the phase's
+        contention-aware score (:func:`score_phase`).
+
+        ``budget``       cap on this phase's own score (its SLO);
+        ``constraints``  [(entries, budget_s), ...] of already-planned
+                         budgeted phases: a combination is infeasible
+                         when its ledgers as BACKGROUND push such a
+                         phase past its cap.
+
+        Search mode resolves from ``self.search``: the exhaustive
+        oracle when the candidate product is within
+        :data:`EXHAUSTIVE_LIMIT` (or forced), else beam search — per
+        group the top ``shortlist_k`` candidates by own score, partial
+        combinations re-scored jointly and pruned to ``beam_width``.
+        The greedy all-own-best combination is always evaluated too, so
+        beam search can never do worse than independent per-site
+        planning.  Infeasible-everywhere falls back to the best
+        unconstrained combination with ``budget_violated`` set.
+
+        Ties break toward the lowest sum of own scores, then the
+        lexicographically first combination — with zero contention (all
+        groups on disjoint fabrics) that reproduces per-group
+        independent planning exactly.
+        """
+        cand_lists = [b["cands"] for b in bundles]
+        product = 1
+        for cl in cand_lists:
+            product *= len(cl)
+        n_candidates = sum(len(cl) for cl in cand_lists)
+        mode = self.search
+        if mode == "auto":
+            mode = ("exhaustive" if product <= self.EXHAUSTIVE_LIMIT
+                    else "beam")
+        stats = {"search": mode, "groups": len(cand_lists),
+                 "candidates": n_candidates, "product": product,
+                 "beam_width": (self.beam_width if mode == "beam"
+                                else None),
+                 "shortlist_k": (self.shortlist_k if mode == "beam"
+                                 else None),
+                 "budget_violated": False}
+        constrained = budget is not None or bool(constraints)
+        if len(cand_lists) == 1 and not constrained:
+            # a lone group cannot contend with itself beyond what its
+            # own scorer already charges: its own best is the optimum
+            stats.update(combos_scored=0, combos_pruned=0)
+            return (0,), stats
+
+        def entries_of(combo):
+            return [(cand_lists[i][j]["score_s"],
+                     cand_lists[i][j]["ledgers"])
+                    for i, j in enumerate(combo)]
+
+        def feasible(combo, phase_s):
+            if budget is not None and phase_s > budget:
+                return False
+            if constraints:
+                bg = [led for _, ledgers in entries_of(combo)
+                      for led in ledgers]
+                for ents, cap in constraints:
+                    if score_phase(ents, hw, background=bg) > cap:
+                        return False
+            return True
+
+        def own_sum(combo):
+            return sum(cand_lists[i][j]["score_s"]
+                       for i, j in enumerate(combo))
+
+        scored_count = 0
+        finalists: list[tuple] = []     # (phase_s, own_sum, combo)
+        if mode == "exhaustive":
+            for combo in itertools.product(
+                    *(range(len(cl)) for cl in cand_lists)):
+                phase_s = score_phase(entries_of(combo), hw)
+                scored_count += 1
+                finalists.append((phase_s, own_sum(combo), combo))
+        else:
+            k = max(1, self.shortlist_k)
+            width = max(1, self.beam_width)
+            beams: list[tuple] = [((), 0.0, 0.0)]
+            for cl in cand_lists:
+                grown = []
+                for combo, _, _ in beams:
+                    for j in range(min(k, len(cl))):
+                        c2 = combo + (j,)
+                        phase_s = score_phase(entries_of(c2), hw)
+                        scored_count += 1
+                        grown.append((c2, phase_s, own_sum(c2)))
+                grown.sort(key=lambda b: (b[1], b[2], b[0]))
+                beams = grown[:width]
+            finalists = [(s, o, c) for c, s, o in beams]
+            greedy = tuple(0 for _ in cand_lists)
+            if greedy not in {c for _, _, c in finalists}:
+                phase_s = score_phase(entries_of(greedy), hw)
+                scored_count += 1
+                finalists.append((phase_s, own_sum(greedy), greedy))
+        finalists.sort()
+        best = finalists[0]
+        if constrained:
+            for cand in finalists:
+                if feasible(cand[2], cand[0]):
+                    best = cand
+                    break
+            else:
+                stats["budget_violated"] = True
+        stats["combos_scored"] = scored_count
+        stats["combos_pruned"] = max(0, product - scored_count)
+        return best[2], stats
+
+    def plan_is_stale(self, eplan) -> Optional[bool]:
+        """Whether a bound ExecutionPlan has been superseded by a replan
+        of the same (program, fabric) under newer calibration — True
+        (stale), False (current), or None (this planner has no record,
+        e.g. a pinned plan or a foreign planner's product)."""
+        for pkey, (_, _, fp) in self._programs.items():
+            if (pkey[0] == eplan.program.cache_key()
+                    and pkey[1] == eplan.topo_fingerprint):
+                return fp != eplan.fingerprint
+        return None
 
     def replan_programs(self) -> list[dict]:
         """Re-plan every registered (program, topo) under the CURRENT
@@ -390,22 +658,13 @@ class Planner:
                            "plan": eplan})
         return events
 
-    def _joint_moe_sweep(self, dsite, csite, topo: Topology,
-                         hw: HardwareModel, *, executable_only: bool):
-        """The coupled (dispatch, combine) product sweep.
-
-        Every (dispatch plan, dispatch knobs) x (combine plan, combine
-        knobs) cell whose microbatch knobs AGREE (the executed pipeline
-        chunks both halves at one shared G) and whose pair is executable
-        (a unicast dispatch leaves no relay state for a relay-reduced
-        combine to consume) is scored with :func:`score_pipeline`.
-        Returns (dispatch decision, combine decision, joint decision):
-        the per-site views carry marginal candidates (best joint score
-        per own configuration) and their own-ledger predicted times so
-        existing per-op reports keep their meaning; the joint view
-        carries the combined score, merged execution kwargs and the
-        joint serial/ideal endpoints telemetry fits overlap efficiency
-        against."""
+    def _moe_pair_rows(self, dsite, csite, topo: Topology,
+                       hw: HardwareModel, *, executable_only: bool
+                       ) -> tuple[list, int, int]:
+        """Every executable (dispatch config) x (combine config) cell of
+        the coupled MoE pair, scored with the shared-pipeline scorer;
+        sorted by (joint score, registration order).  Rows are
+        ``(t, (d_ord, c_ord), pd, kn_d, ld, pc, kn_c, lc)``."""
         d_scenario = self._scenario("dispatch", topo, dsite.scenario_args())
         c_scenario = self._scenario("combine", topo, csite.scenario_args())
         d_bucket = bucket_payload(dsite.payload_bytes)
@@ -447,7 +706,36 @@ class Planner:
                         scored.append((t, (d_ord, c_ord), pd, kn_d, ld,
                                        pc, kn_c, lc))
         scored.sort(key=lambda s: (s[0], s[1]))
-        best_t, _, pd, kn_d, ld, pc, kn_c, lc = scored[0]
+        return scored, d_bucket, c_bucket
+
+    def _joint_moe_sweep(self, dsite, csite, topo: Topology,
+                         hw: HardwareModel, *, executable_only: bool):
+        """The coupled (dispatch, combine) product sweep.
+
+        Every (dispatch plan, dispatch knobs) x (combine plan, combine
+        knobs) cell whose microbatch knobs AGREE (the executed pipeline
+        chunks both halves at one shared G) and whose pair is executable
+        (a unicast dispatch leaves no relay state for a relay-reduced
+        combine to consume) is scored with :func:`score_pipeline`.
+        Returns (dispatch decision, combine decision, joint decision):
+        the per-site views carry marginal candidates (best joint score
+        per own configuration) and their own-ledger predicted times so
+        existing per-op reports keep their meaning; the joint view
+        carries the combined score, merged execution kwargs and the
+        joint serial/ideal endpoints telemetry fits overlap efficiency
+        against."""
+        scored, d_bucket, c_bucket = self._moe_pair_rows(
+            dsite, csite, topo, hw, executable_only=executable_only)
+        return self._moe_pair_decisions(scored, scored[0], d_bucket,
+                                        c_bucket, hw)
+
+    def _moe_pair_decisions(self, scored: list, chosen: tuple,
+                            d_bucket: int, c_bucket: int,
+                            hw: HardwareModel):
+        """(dispatch, combine, joint) decisions for ``chosen`` (any row
+        of ``scored`` — the program search may pick a non-first row when
+        phase contention shifts the optimum)."""
+        best_t, _, pd, kn_d, ld, pc, kn_c, lc = chosen
         g = kn_d.get("microbatch", 1)
         # joint baseline: what a fixed unicast/unicast serial deployment
         # pays for the whole round trip

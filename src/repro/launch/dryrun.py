@@ -237,7 +237,7 @@ DEFAULT_REPORT_FABRICS = ("2x8", "4x8", "2x8r2")
 
 def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
                         fabrics=DEFAULT_REPORT_FABRICS,
-                        calibration=None) -> dict:
+                        calibration=None, budget_s=None) -> dict:
     """Which plan the planner picks for this cell, and the predicted
     delta vs the baseline plan (the quantity the dry-run table reports
     next to the roofline terms).  The cell's collective sites are
@@ -247,7 +247,10 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
     what-if axis: the same cell's per-op decisions on each named fabric.
     ``calibration`` (a telemetry store or path) adds a second what-if
     axis: the same decisions under the store's FITTED hardware model —
-    'what would the planner do on the fabric we actually measured'."""
+    'what would the planner do on the fabric we actually measured'.
+    ``budget_s`` declares a latency budget for the cell's phase
+    (--phase-budget-us): the contention-aware sweep then reports whether
+    any feasible combination met it."""
     from repro.core import planner as pl
     cal_store = None
     if calibration is not None:
@@ -259,7 +262,7 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
     cell_compute_s = _cell_compute_s(cfg, shape, pctx)
     eplan = None
     if cfg.is_moe:
-        eplan = _cell_execution_plan(arch, shape, pctx)
+        eplan = _cell_execution_plan(arch, shape, pctx, budget_s=budget_s)
         role_d = f"{shape.kind}/moe_dispatch"
         out["execution_plan"] = eplan.fingerprint
         out["moe_dispatch"] = eplan.decision(role_d).report()
@@ -284,11 +287,19 @@ def planner_cell_report(arch: str, shape: ShapeSpec, pctx,
     if shape.kind == "train":
         # gradient sync rides in the same cell program (train phase only)
         if eplan is None:
-            eplan = _cell_execution_plan(arch, shape, pctx)
+            eplan = _cell_execution_plan(arch, shape, pctx,
+                                         budget_s=budget_s)
             out["execution_plan"] = eplan.fingerprint
         gs = eplan.decisions.get("train/grad_sync")
         if gs is not None:
             out["grad_sync"] = gs.report()
+    if eplan is not None:
+        # contention breakdown + sweep-cost introspection of the cell's
+        # phase (solo vs merged shared-link wire, beam/oracle statistics,
+        # budget verdict when --phase-budget-us is in play)
+        out["phases"] = {ph: dict(rep)
+                         for ph, rep in eplan.phase_report.items()}
+        out["planner_stats"] = dict(eplan.planner_stats)
     # Reference decision on the paper's §3.1 fixture (8-NPU split-TP full
     # mesh) at this cell's per-chip activation fragment — a what-if the
     # table carries alongside every cell, NOT a collective the traced
@@ -350,24 +361,27 @@ def _cell_tokens_per_rank(shape: ShapeSpec, pctx) -> int:
     return max(1, tokens // (pctx.num_pods * pctx.data_size))
 
 
-def _cell_program(arch: str, shape: ShapeSpec, pctx):
+def _cell_program(arch: str, shape: ShapeSpec, pctx, budget_s=None):
     """The ONE declared collective program of this cell (phase ==
     shape.kind), shared by the "plan" preset derivation, the auto-policy
     binding and the cell report — so the G a preset executes is always
     derived from the same joint decision the report displays as
-    'planned'."""
+    'planned'.  ``budget_s`` caps the phase's contention-aware latency
+    (the --phase-budget-us what-if)."""
     from repro.parallel.context import build_collective_program
     cfg = get_config(arch)
     seq = shape.seq_len if shape.kind != "decode" else 1
     return build_collective_program(
-        cfg, pctx, "dryrun", {shape.kind: (shape.global_batch, seq)})
+        cfg, pctx, "dryrun", {shape.kind: (shape.global_batch, seq)},
+        phase_budgets={shape.kind: budget_s} if budget_s else None)
 
 
-def _cell_execution_plan(arch: str, shape: ShapeSpec, pctx):
+def _cell_execution_plan(arch: str, shape: ShapeSpec, pctx, budget_s=None):
     """Jointly-planned ExecutionPlan of this cell's program (planned
     regardless of policy: the fixed-policy cells still REPORT what the
     planner would bind)."""
-    return pctx.plan_collectives(_cell_program(arch, shape, pctx))
+    return pctx.plan_collectives(
+        _cell_program(arch, shape, pctx, budget_s=budget_s))
 
 
 def _cell_compute_s(cfg, shape: ShapeSpec, pctx) -> float:
@@ -421,7 +435,8 @@ def _cell_pctx(arch: str, shape: ShapeSpec, multi_pod: bool, variant: str):
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              variant: str = "mw", verbose: bool = True,
-             fabrics=DEFAULT_REPORT_FABRICS, calibration=None) -> dict:
+             fabrics=DEFAULT_REPORT_FABRICS, calibration=None,
+             budget_s=None) -> dict:
     skip = cell_is_skipped(arch, shape_name)
     if skip:
         return {"arch": arch, "shape": shape_name,
@@ -498,7 +513,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "num_ops": coll.num_ops,
         },
         "planner": planner_cell_report(arch, shape, pctx, fabrics=fabrics,
-                                       calibration=calibration),
+                                       calibration=calibration,
+                                       budget_s=budget_s),
         "roofline": {
             "compute_term_s": compute_term,
             "memory_term_s": memory_term,
@@ -538,6 +554,18 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         if mb:
             print(f"  planner[microbatch]: executed={mb['executed']} "
                   f"planned={mb['planned']}")
+        for ph, rep in result["planner"].get("phases", {}).items():
+            line = (f"  planner[phase {ph}]: {rep['score_s'] * 1e6:.1f}us "
+                    f"(contention +{rep['contention_s'] * 1e6:.1f}us)")
+            if rep.get("budget_s"):
+                line += (f", budget {rep['budget_s'] * 1e6:.0f}us "
+                         f"{'ok' if rep.get('budget_ok') else 'VIOLATED'}")
+            print(line)
+        st = result["planner"].get("planner_stats")
+        if st:
+            print(f"  planner[search]: {'/'.join(st['search'])}, "
+                  f"{st['combos_scored']}/{st['product']} combination(s) "
+                  f"scored in {st['planning_wall_s'] * 1e3:.1f}ms")
     return result
 
 
@@ -556,30 +584,31 @@ def cell_path(arch, shape_name, multi_pod, variant):
 
 def run_and_save(arch, shape_name, multi_pod, variant="mw",
                  force=False, fabrics=DEFAULT_REPORT_FABRICS,
-                 calibration=None) -> dict:
+                 calibration=None, budget_s=None) -> dict:
     path = cell_path(arch, shape_name, multi_pod, variant)
     if os.path.exists(path) and not force:
         with open(path) as f:
             result = json.load(f)
         # the compiled cell is fabric-independent, but the planner
         # what-if axes are not: refresh them (cheap — no recompile) when
-        # the cached cell was computed with a different fabric set, or
-        # when a calibration store is in play (its fits move with every
-        # probe run)
+        # the cached cell was computed with a different fabric set, when
+        # a calibration store is in play (its fits move with every probe
+        # run), or when a phase budget changes the feasibility filter
         cached = set(result.get("planner", {}).get("fabrics", {}))
         if "planner" in result and (cached != set(fabrics or ())
-                                    or calibration is not None):
+                                    or calibration is not None
+                                    or budget_s is not None):
             pctx = _cell_pctx(arch, SHAPES[shape_name], multi_pod, variant)
             result["planner"] = planner_cell_report(
                 arch, SHAPES[shape_name], pctx, fabrics=fabrics,
-                calibration=calibration)
+                calibration=calibration, budget_s=budget_s)
             with open(path, "w") as f:
                 json.dump(result, f, indent=1)
         return result
     try:
         result = run_cell(arch, shape_name, multi_pod=multi_pod,
                           variant=variant, fabrics=fabrics,
-                          calibration=calibration)
+                          calibration=calibration, budget_s=budget_s)
     except Exception as e:  # record failures — they are bugs to fix
         result = {"arch": arch, "shape": shape_name,
                   "mesh": "multi" if multi_pod else "single",
@@ -607,6 +636,10 @@ def main(argv=None):
                          "cell's planner section additionally reports the "
                          "decisions under the store's FITTED hardware "
                          "model — the measured-fabric what-if axis")
+    ap.add_argument("--phase-budget-us", type=float, default=None,
+                    help="latency budget (us) for each cell's phase: the "
+                         "contention-aware sweep reports whether any "
+                         "feasible plan combination met it")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape x mesh) cell")
     ap.add_argument("--force", action="store_true")
@@ -626,10 +659,13 @@ def main(argv=None):
         for mp in meshes:
             cells.append((args.arch, args.shape, mp, args.variant))
 
+    budget_s = (args.phase_budget_us * 1e-6
+                if args.phase_budget_us else None)
     failures = 0
     for arch, shape, mp, variant in cells:
         r = run_and_save(arch, shape, mp, variant, force=args.force,
-                         fabrics=fabrics, calibration=args.calibration)
+                         fabrics=fabrics, calibration=args.calibration,
+                         budget_s=budget_s)
         if "error" in r:
             failures += 1
     print(f"\n{len(cells) - failures}/{len(cells)} cells OK")

@@ -41,6 +41,11 @@ def main(argv=None):
     ap.add_argument("--calibration-store", default=None,
                     help="calibration JSONL path (default "
                          "results/calibration/calibration.jsonl)")
+    ap.add_argument("--decode-slo-us", type=float, default=None,
+                    help="decode-phase latency budget (us): the planner "
+                         "rejects prefill plan combinations whose shared-"
+                         "link traffic would push the decode round trip "
+                         "past this cap (contention-aware sweep)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -102,14 +107,24 @@ def main(argv=None):
         from repro.parallel.context import build_collective_program
         # itemsize must match the activation dtype build_model uses
         # below (site keys embed the payload bucket)
+        budgets = ({"decode": args.decode_slo_us * 1e-6}
+                   if args.decode_slo_us else None)
         program = build_collective_program(
             cfg, pctx, "serve", {"prefill": (args.prompts, args.prompt_len),
                                  "decode": (args.prompts, 1)},
-            itemsize=4 if args.smoke else 2)
+            itemsize=4 if args.smoke else 2, phase_budgets=budgets)
         if program.sites:
             eplan = pctx.plan_collectives(program)
             pctx = pctx.bind(eplan)
             print(eplan.summary())
+            dec = eplan.phase_report.get("decode", {})
+            if dec.get("budget_s"):
+                verdict = ("met" if dec.get("budget_ok")
+                           else "VIOLATED (no feasible combination; "
+                                "best-effort plan bound)")
+                print(f"decode SLO {dec['budget_s'] * 1e6:.0f}us: "
+                      f"{verdict} — contended decode "
+                      f"{dec.get('contended_score_s', 0.0) * 1e6:.1f}us")
     model = build_model(cfg, pctx, dtype=jnp.float32 if args.smoke
                         else jnp.bfloat16)
     params = model.init(jax.random.key(args.seed))
@@ -126,6 +141,24 @@ def main(argv=None):
     for phase, per_op in engine.stats.get("plans", {}).items():
         if phase == "execution_plan":
             print(f"execution plan fingerprint: {per_op}")
+            continue
+        if phase == "stale":
+            print(f"bound plan stale: {per_op}")
+            continue
+        if phase == "planner":
+            print(f"planner: {'/'.join(per_op['search'])} search, "
+                  f"{per_op['combos_scored']}/{per_op['product']} "
+                  f"combination(s) scored across {per_op['phases']} "
+                  f"phase(s) in {per_op['planning_wall_s'] * 1e3:.1f}ms")
+            continue
+        if phase == "phases":
+            for ph, rep in per_op.items():
+                line = (f"phase[{ph}]: {rep['score_s'] * 1e6:.1f}us "
+                        f"(contention +{rep['contention_s'] * 1e6:.1f}us)")
+                if rep.get("budget_s"):
+                    line += (f", budget {rep['budget_s'] * 1e6:.0f}us "
+                             f"{'ok' if rep.get('budget_ok') else 'VIOLATED'}")
+                print(line)
             continue
         if phase == "calibration":
             last = per_op.get("last_recalibration")

@@ -214,6 +214,8 @@ def main(argv=None):
 
     step_hook = None
     if attribution is not None or args.calibrate == "online":
+        stale_warned = [False]
+
         def step_hook(step, row, _every=max(1, args.calibrate_every)):
             if attribution is not None:
                 attribution.observe_step(row["wall"])
@@ -229,6 +231,15 @@ def main(argv=None):
                     100 * monitor.threshold, event["measured_links"],
                     event.get("overlap_eff"),
                     len(event.get("programs", [])))
+                if (pctx is not None and not stale_warned[0]
+                        and pctx.bound_plan_stale()):
+                    stale_warned[0] = True
+                    logging.warning(
+                        "step %d: bound ExecutionPlan %s is now STALE — "
+                        "the replan under the refit calibration chose "
+                        "different decisions; training keeps executing "
+                        "the old plan until re-trace (hot re-bind not "
+                        "wired yet)", step, eplan.fingerprint)
 
     trainer = Trainer(model, opt,
                       lambda s: batch_for_model(cfg, data.batch(s)),

@@ -208,6 +208,20 @@ class ParallelContext:
         topo, hw = self._plan_topo_hw(num_experts)
         return default_planner().plan_program(program, topo, hw)
 
+    def bound_plan_stale(self, planner=None) -> Optional[bool]:
+        """Whether the bound ExecutionPlan has been superseded by a
+        replan of its program under newer calibration (True), is still
+        current (False), or cannot be judged (None: nothing bound, a
+        pinned plan, or a program the planner never saw).  The minimal
+        observable slice of hot re-binding: until plans swap in-place,
+        drift at least becomes VISIBLE at every launch surface."""
+        if self.execution_plan is None:
+            return None
+        if planner is None:
+            from repro.core.planner import default_planner
+            planner = default_planner()
+        return planner.plan_is_stale(self.execution_plan)
+
     # -- trace-time site resolution ------------------------------------------
     def moe_pipeline_kwargs(self, num_experts: int, top_k: int,
                             tokens_per_rank: int, token_bytes: int,
@@ -417,7 +431,8 @@ class ParallelContext:
 
 
 def build_collective_program(cfg, pctx: ParallelContext, name: str,
-                             phases: dict, *, itemsize: int = 2):
+                             phases: dict, *, itemsize: int = 2,
+                             phase_budgets: Optional[dict] = None):
     """The declared collective program of one launch surface.
 
     ``phases`` maps a phase name ("train" | "prefill" | "decode") to its
@@ -429,7 +444,12 @@ def build_collective_program(cfg, pctx: ParallelContext, name: str,
     must match the activation dtype the model will TRACE with (bf16
     default; pass 4 for fp32 smoke runs) — site keys embed the payload
     bucket, so a dtype mismatch makes every lookup miss and fall back
-    to ad-hoc planning at the wrong payload."""
+    to ad-hoc planning at the wrong payload.
+
+    ``phase_budgets`` (phase name -> seconds) declares per-phase latency
+    caps — a decode SLO here constrains the OTHER phases' plans during
+    the planner's contention-aware sweep (``--decode-slo-us`` on the
+    serve CLI)."""
     from repro.core import plan as plan_ir
     from repro.core.latency_model import moe_overlap_compute_s
     sites = []
@@ -463,7 +483,8 @@ def build_collective_program(cfg, pctx: ParallelContext, name: str,
                 tokens_per_rank=n_rank)
             if gs is not None:
                 sites.append(gs)
-    return plan_ir.CollectiveProgram(name, tuple(sites))
+    return plan_ir.CollectiveProgram(name, tuple(sites),
+                                     phase_budgets=dict(phase_budgets or {}))
 
 
 def shard(x, pctx: Optional[ParallelContext], *spec):

@@ -56,6 +56,7 @@ class ServeEngine:
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+        self._stale_warned = False
 
     def serving_program(self, batch: int, prompt_len: int):
         """The declared collective program of this serving shape: both
@@ -104,6 +105,25 @@ class ServeEngine:
         if eplan is None:
             return out
         out["execution_plan"] = eplan.fingerprint
+        if self.pctx is not None and self.pctx.execution_plan is eplan:
+            # a replan (drift recalibration) may have superseded the
+            # bound plan's fingerprint; the traces still execute the OLD
+            # plan until a re-bind — surface that instead of hiding it
+            stale = self.pctx.bound_plan_stale()
+            if stale is not None:
+                out["stale"] = stale
+                if stale and not self._stale_warned:
+                    self._stale_warned = True
+                    print(f"WARNING: bound ExecutionPlan "
+                          f"{eplan.fingerprint} is stale — a replan "
+                          f"chose different decisions for this program; "
+                          f"serving continues on the old plan until "
+                          f"re-bind/re-trace")
+        if eplan.phase_report:
+            out["phases"] = {ph: dict(rep)
+                             for ph, rep in eplan.phase_report.items()}
+        if eplan.planner_stats:
+            out["planner"] = dict(eplan.planner_stats)
         for site in eplan.program.sites:
             phase, _, kind = site.role.partition("/")
             if kind == "moe_dispatch":
