@@ -18,6 +18,29 @@ import time
 import numpy as np
 
 
+def run_metadata(fabric=None):
+    """Provenance stamped into every BENCH_*.json: commit, time, fabric,
+    JAX version and telemetry schema — without it the perf trajectory
+    across PRs is not attributable to anything."""
+    import os
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    from repro.telemetry.store import SCHEMA_VERSION
+    return {"git_sha": sha, "ts": time.time(), "fabric": fabric,
+            "jax_version": jax_version, "schema_version": SCHEMA_VERSION}
+
+
 def bench_kernels():
     """Micro-bench the Pallas kernels (interpret mode — CORRECTNESS path
     timing only; TPU perf comes from the dry-run roofline)."""
@@ -295,6 +318,7 @@ def bench_calibration(smoke: bool = False):
     ]
     if not smoke:
         out = {
+            "run_meta": run_metadata(topo.name),
             "fabric": topo.name,
             "probe_batch": probe_batch,
             "healthy": {"fits_gbps": bw1, "dispatch_plan": d_pre.plan,
@@ -425,7 +449,8 @@ def bench_overlap(smoke: bool = False):
         raise SystemExit(1)
 
     if not smoke:
-        out = {"fabric": topo.name, "token_bytes": lm.TOKEN_BYTES,
+        out = {"run_meta": run_metadata(topo.name),
+               "fabric": topo.name, "token_bytes": lm.TOKEN_BYTES,
                "top_k": top_k, "d_model": d_model, "f_shard": f_shard,
                "crossover_batch": crossover, "cells": table,
                "overlap_eff_fit": {"fitted": eta_fit, "true": true_eta,
@@ -581,7 +606,8 @@ def bench_program(smoke: bool = False):
         raise SystemExit(1)
 
     if not smoke:
-        out = {"token_bytes": lm.TOKEN_BYTES, "top_k": top_k,
+        out = {"run_meta": run_metadata(),
+               "token_bytes": lm.TOKEN_BYTES, "top_k": top_k,
                "d_model": d_model, "f_shard": f_shard,
                "cells": table, "cells_changed": changed,
                "fingerprint_deterministic": True}
@@ -702,7 +728,8 @@ def bench_allreduce(smoke: bool = False):
         raise SystemExit(1)
 
     if not smoke:
-        out = {"fabrics": list(fabrics),
+        out = {"run_meta": run_metadata(",".join(fabrics)),
+               "fabrics": list(fabrics),
                "payloads": payloads,
                "winners": sorted(winners),
                "grad_sync_2x8": gs.report(),
@@ -906,7 +933,8 @@ def bench_contention(smoke: bool = False):
         raise SystemExit(1)
 
     if not smoke:
-        out = {"token_bytes": lm.TOKEN_BYTES, "top_k": top_k,
+        out = {"run_meta": run_metadata("tpu_2x16"),
+               "token_bytes": lm.TOKEN_BYTES, "top_k": top_k,
                "d_model": d_model, "f_shard": f_shard, "tp": tp,
                "cells": table, "cells_flipped": flips,
                "beam_envelope": {

@@ -38,6 +38,19 @@ from .latency_model import (DEFAULT, HardwareModel, overlap_endpoints,
 from .plan import bucket_compute_s, bucket_payload  # noqa: F401
 from .topology import TPU_ICI_LINK_BW, Topology, full_mesh, tpu_pods
 
+_METRICS = None
+
+
+def _metrics_registry():
+    """The process metrics plane, resolved lazily: ``repro.telemetry``
+    imports this module (the monitor drives the planner), so the import
+    must happen at call time, not module load."""
+    global _METRICS
+    if _METRICS is None:
+        from repro.telemetry import metrics as _m
+        _METRICS = _m.default_registry()
+    return _METRICS
+
 
 # ---------------------------------------------------------------------------
 # cache keys
@@ -120,7 +133,13 @@ class Planner:
     layer; tests construct their own to control the cache.
     """
 
-    DECISION_LOG_MAX = 1024
+    # decision_log ring-buffer cap: long-lived servers append a row per
+    # fresh decision AND per cache-served measurement forever — without a
+    # cap a week-long serve leaks unboundedly.  10k rows keeps far more
+    # history than fit_overlap_eff's median needs while bounding memory;
+    # evictions are counted (decision_log_dropped /
+    # repro_planner_decision_log_dropped_total).
+    DECISION_LOG_MAX = 10_000
 
     PROGRAM_CACHE_SIZE = 64
 
@@ -132,7 +151,8 @@ class Planner:
 
     def __init__(self, hw: HardwareModel = DEFAULT,
                  cache_size: int = 256, *, beam_width: int = 6,
-                 shortlist_k: int = 6, search: str = "auto") -> None:
+                 shortlist_k: int = 6, search: str = "auto",
+                 decision_log_max: Optional[int] = None) -> None:
         if search not in ("auto", "beam", "exhaustive"):
             raise ValueError(f"unknown search mode {search!r}; expected "
                              f"'auto' | 'beam' | 'exhaustive'")
@@ -147,8 +167,17 @@ class Planner:
         self.recalibrations = 0
         # (plan, predicted, measured) rows: one per fresh sweep (measured
         # None until telemetry fills it via note_measurement) — the audit
-        # trail the drift monitor and serve reports read.
+        # trail the drift monitor and serve reports read.  Ring-buffered
+        # at decision_log_max; evictions counted in decision_log_dropped.
         self.decision_log: list[dict] = []
+        self.decision_log_max = int(self.DECISION_LOG_MAX
+                                    if decision_log_max is None
+                                    else decision_log_max)
+        self.decision_log_dropped = 0
+        # last winning scheme per (op, fabric, bucket) cell — flips
+        # (scheme changes after a recalibration) are an SLO-bearing
+        # production event, counted in repro_planner_decision_flips_total
+        self._last_scheme: dict[tuple, str] = {}
         # whole-program planning: memoized ExecutionPlans plus a registry
         # of every (program, topo) planned through this planner, so a
         # re-calibration can replan PROGRAMS (the unit consumers bind)
@@ -178,6 +207,17 @@ class Planner:
         self._program_cache.clear()
         self.recalibrations += 1
 
+    def _trim_decision_log(self) -> None:
+        """Ring-buffer eviction for every decision_log append path (fresh
+        decisions, program rows AND note_measurement's fallback append —
+        the path that used to leak on long-lived servers)."""
+        overflow = len(self.decision_log) - self.decision_log_max
+        if overflow > 0:
+            del self.decision_log[:overflow]
+            self.decision_log_dropped += overflow
+            _metrics_registry()[
+                "repro_planner_decision_log_dropped_total"].inc(overflow)
+
     def _log_decision(self, decision: PlanDecision, topo_name: str) -> None:
         self.decision_log.append(
             {"op": decision.op, "plan": decision.plan,
@@ -190,8 +230,17 @@ class Planner:
              "predicted_serial_s": decision.predicted_serial_s,
              "predicted_ideal_s": decision.predicted_ideal_s,
              "measured_s": None})
-        if len(self.decision_log) > self.DECISION_LOG_MAX:
-            del self.decision_log[:-self.DECISION_LOG_MAX]
+        self._trim_decision_log()
+        reg = _metrics_registry()
+        labels = dict(op=decision.op, fabric=topo_name,
+                      payload_bucket=str(decision.payload_bytes))
+        reg["repro_planner_decisions_total"].inc(scheme=decision.plan,
+                                                 **labels)
+        cell = (decision.op, topo_name, decision.payload_bytes)
+        prev = self._last_scheme.get(cell)
+        if prev is not None and prev != decision.plan:
+            reg["repro_planner_decision_flips_total"].inc(**labels)
+        self._last_scheme[cell] = decision.plan
 
     def note_measurement(self, decision: PlanDecision,
                          measured_s: float) -> dict:
@@ -221,6 +270,7 @@ class Planner:
                "predicted_ideal_s": decision.predicted_ideal_s,
                "measured_s": float(measured_s)}
         self.decision_log.append(row)
+        self._trim_decision_log()
         return row
 
     # -- scenario construction ----------------------------------------------
@@ -273,9 +323,11 @@ class Planner:
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
+            _metrics_registry()["repro_planner_cache_hits_total"].inc()
             self._cache.move_to_end(key)
             return hit
         self.cache_misses += 1
+        _metrics_registry()["repro_planner_cache_misses_total"].inc()
         decision = self._sweep(op, scenario, bucket, hw, executable_only)
         self._cache[key] = decision
         self._log_decision(decision, topo.name)
@@ -373,9 +425,11 @@ class Planner:
         hit = self._program_cache.get(key)
         if hit is not None:
             self.cache_hits += 1
+            _metrics_registry()["repro_planner_cache_hits_total"].inc()
             self._program_cache.move_to_end(key)
             return hit
         self.cache_misses += 1
+        _metrics_registry()["repro_planner_cache_misses_total"].inc()
         t_start = time.perf_counter()
         decisions: dict = {}
         joint: dict = {}
@@ -454,6 +508,15 @@ class Planner:
             "budget_violated": any(s.get("budget_violated")
                                    for s in phase_search.values()),
             "planning_wall_s": time.perf_counter() - t_start}
+        reg = _metrics_registry()
+        reg["repro_planner_planning_wall_seconds"].observe(
+            planner_stats["planning_wall_s"], program=program.name)
+        reg["repro_planner_search_combos_scored"].set(
+            planner_stats["combos_scored"], program=program.name)
+        reg["repro_planner_search_combos_pruned"].set(
+            planner_stats["combos_pruned"], program=program.name)
+        reg["repro_planner_search_product"].set(
+            planner_stats["product"], program=program.name)
         eplan = plan_ir.ExecutionPlan(
             program=program,
             topo_fingerprint=topology_fingerprint(topo),
@@ -483,8 +546,7 @@ class Planner:
              "predicted_s": total, "predicted_serial_s": 0.0,
              "predicted_ideal_s": 0.0, "measured_s": None,
              "planner": stats})
-        if len(self.decision_log) > self.DECISION_LOG_MAX:
-            del self.decision_log[:-self.DECISION_LOG_MAX]
+        self._trim_decision_log()
 
     def _group_candidates(self, group, topo: Topology, hw: HardwareModel,
                           executable_only: bool) -> dict:
@@ -649,12 +711,17 @@ class Planner:
         Returns one event per program: its fresh plan and whether any
         decision changed (fingerprint moved)."""
         events = []
+        reg = _metrics_registry()
         for pkey, (program, topo, old_fp) in list(self._programs.items()):
             eplan = self.plan_program(program, topo,
                                       executable_only=pkey[-1])
+            changed = eplan.fingerprint != old_fp
+            reg["repro_plan_replan_total"].inc(
+                program=program.name,
+                changed="true" if changed else "false")
             events.append({"program": program.name,
                            "fingerprint": eplan.fingerprint,
-                           "changed": eplan.fingerprint != old_fp,
+                           "changed": changed,
                            "plan": eplan})
         return events
 

@@ -643,7 +643,12 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape x mesh) cell")
     ap.add_argument("--force", action="store_true")
+    from repro.telemetry.exporter import (add_metrics_args,
+                                          finish_exporter_from_args,
+                                          start_exporter_from_args)
+    add_metrics_args(ap)
     args = ap.parse_args(argv)
+    exporter = start_exporter_from_args(args)
     fabrics = tuple(f for f in args.fabric.split(",") if f)
 
     meshes = {"single": [False], "multi": [True],
@@ -669,6 +674,7 @@ def main(argv=None):
         if "error" in r:
             failures += 1
     print(f"\n{len(cells) - failures}/{len(cells)} cells OK")
+    finish_exporter_from_args(args, exporter)
     return 1 if failures else 0
 
 

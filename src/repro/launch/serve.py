@@ -47,7 +47,12 @@ def main(argv=None):
                          "link traffic would push the decode round trip "
                          "past this cap (contention-aware sweep)")
     ap.add_argument("--seed", type=int, default=0)
+    from repro.telemetry.exporter import (add_metrics_args,
+                                          finish_exporter_from_args,
+                                          start_exporter_from_args)
+    add_metrics_args(ap)
     args = ap.parse_args(argv)
+    exporter = start_exporter_from_args(args)
 
     from repro.configs.base import get_config
     from repro.models.api import build_model
@@ -176,6 +181,7 @@ def main(argv=None):
                   f"vs baseline={rep['baseline_us']:.1f}us "
                   f"({rep['speedup_pct']:+.1f}%)")
     print(out[:, :16])
+    finish_exporter_from_args(args, exporter)
     return 0
 
 

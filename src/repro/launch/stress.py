@@ -1,0 +1,395 @@
+"""Long-term soak harness: scripted degradations against the live loop.
+
+The paper's headline evidence is "long-term stress tests on commercially
+deployed devices" — this driver is our equivalent, built on SimProbe's
+injectable :class:`GroundTruth`.  One bound collective program serves
+for N simulated hours while the harness mutates the fabric truth on a
+scripted schedule (rail slowdowns, asymmetric single-direction
+slowdowns, recoveries), runs one full telemetry cycle per epoch, and
+scrapes its own Prometheus exporter over real HTTP each epoch — the
+same bytes an operator's scrape job would pull.
+
+End-to-end assertions over the whole run:
+
+    detection     every injected event trips a recalibration within
+                  ``--detect-within`` epochs
+    convergence   after a class-uniform event, the trusted "inter" fit
+                  lands within 20% of the injected true rail bandwidth
+    flips         the planner's post-cycle decision for the monitored
+                  dispatch cell equals a fresh ORACLE planner scored on
+                  the hidden truth (grace window while drift is being
+                  detected), and at least one genuine scheme flip occurs
+    stale         stale-bound-plan warnings fire EXACTLY once per
+                  changed-program recalibration (re-bind resets the
+                  one-shot)
+    slo           the scraped per-cell SLO classification transitions
+                  good -> poor (stale model at the degradation epoch)
+                  -> good (post-recalibration)
+
+Writes ``results/STRESS_soak.json`` with the full timeline.
+
+    PYTHONPATH=src python -m repro.launch.stress            # full soak
+    PYTHONPATH=src python -m repro.launch.stress --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+from repro.core.planner import Planner, bucket_payload
+from repro.core.topology import get_fabric
+from repro.telemetry import (CalibrationStore, DriftMonitor, GroundTruth,
+                             MetricsExporter, SimProbe, parse_text,
+                             reset_default_registry, scrape)
+from repro.telemetry.probe import link_class
+
+TOKEN_BYTES = 7168
+FLIP_BATCH = 64            # the Fig 8 cell bench_calibration validates:
+#   unicast healthy, multiwrite under a 4x rail slowdown (2x8)
+SLO_BATCH = 512            # large-payload cell whose SLO the scrape tracks
+
+
+# ---------------------------------------------------------------------------
+# truth mutations (the degradation schedule's vocabulary)
+# ---------------------------------------------------------------------------
+
+def apply_event(truth: GroundTruth, topo, event: dict) -> GroundTruth:
+    kind = event["kind"]
+    if kind == "degrade":
+        return truth.degraded(topo, event.get("factor", 4.0))
+    if kind == "recover":
+        # drop every per-link override: the fabric is healthy again
+        return dataclasses.replace(truth, link_bw=())
+    if kind == "asym":
+        # one rail DIRECTION slows down (src_server -> everyone else);
+        # the return direction stays healthy — the per-role fit case
+        factor = float(event.get("factor", 4.0))
+        src_server = int(event.get("src_server", 0))
+        cur = dict(truth.link_bw)
+        links = {}
+        for key, ln in topo.links.items():
+            if (link_class(topo, *key) == "inter"
+                    and topo.server_of(key[0]) == src_server):
+                links[key] = cur.get(key, ln.bw) / factor
+        return truth.with_links(links)
+    raise ValueError(f"unknown stress event kind {event['kind']!r}")
+
+
+def true_inter_bw(truth: GroundTruth, topo) -> float:
+    """Mean bandwidth the truth's inter-server links actually deliver."""
+    cur = dict(truth.link_bw)
+    bws = [cur.get(key, ln.bw) for key, ln in topo.links.items()
+           if link_class(topo, *key) == "inter"]
+    return sum(bws) / len(bws) if bws else 0.0
+
+
+def build_schedule(epochs: int, smoke: bool) -> list[dict]:
+    """Scripted degradation schedule over ``epochs`` probe cycles."""
+    if smoke:
+        return [{"epoch": 1, "kind": "degrade", "factor": 4.0},
+                {"epoch": max(3, epochs - 2), "kind": "recover"}]
+    marks = [(0.12, {"kind": "degrade", "factor": 4.0}),
+             (0.33, {"kind": "recover"}),
+             (0.55, {"kind": "asym", "factor": 4.0, "src_server": 0}),
+             (0.78, {"kind": "recover"})]
+    return [{"epoch": max(1, int(frac * epochs)), **ev}
+            for frac, ev in marks]
+
+
+# ---------------------------------------------------------------------------
+# the soak loop
+# ---------------------------------------------------------------------------
+
+def _metric(parsed: dict, name: str, **labels) -> float:
+    """One scraped sample, 0.0 when the series has no samples yet."""
+    want = tuple(sorted((k, str(v)) for k, v in labels.items()))
+    for (n, lbls), v in parsed.items():
+        if n == name and tuple(l for l in lbls
+                               if l[0] in labels) == want:
+            return v
+    return 0.0
+
+
+def run_soak(*, fabric: str = "2x8", epochs: int = 48,
+             epoch_minutes: float = 10.0, noise: float = 0.01,
+             seed: int = 0, detect_within: int = 2,
+             smoke: bool = False, out_path: str | None = None,
+             port: int = 0) -> dict:
+    reset_default_registry()
+    topo = get_fabric(fabric)
+    planner = Planner()
+    store = CalibrationStore(":memory:")
+    monitor = DriftMonitor(planner, store, topo)
+    truth = GroundTruth(noise=noise, seed=seed)
+    schedule = build_schedule(epochs, smoke)
+    by_epoch = {ev["epoch"]: ev for ev in schedule}
+
+    # the bound program: a prefill/decode serving shape — prefill sits at
+    # the Fig 8 flip cell (scheme changes under a rail slowdown), decode
+    # stays small-payload unicast
+    from repro.core import plan as plan_ir
+    program = plan_ir.CollectiveProgram(
+        name="stress_serve",
+        sites=(*plan_ir.moe_sites("prefill", num_experts=64, top_k=8,
+                                  tokens_per_rank=FLIP_BATCH,
+                                  token_bytes=TOKEN_BYTES),
+               *plan_ir.moe_sites("decode", num_experts=64, top_k=8,
+                                  tokens_per_rank=4,
+                                  token_bytes=TOKEN_BYTES)))
+    eplan = planner.plan_program(program, topo)
+    flip_payload = float(FLIP_BATCH) * TOKEN_BYTES
+    slo_bucket = bucket_payload(float(SLO_BATCH) * TOKEN_BYTES)
+
+    exporter = MetricsExporter(port).start()
+    stale_warned = [False]
+    stale_warnings: list[int] = []
+
+    def check_stale(epoch: int) -> bool:
+        """The launcher-style one-shot stale check (run twice per epoch
+        to PROVE the warning cannot double-fire)."""
+        stale = planner.plan_is_stale(eplan)
+        if stale and not stale_warned[0]:
+            stale_warned[0] = True
+            stale_warnings.append(epoch)
+            from repro.telemetry import default_registry
+            default_registry()["repro_plan_stale_total"].inc(
+                program=program.name, fingerprint=eplan.fingerprint)
+            print(f"epoch {epoch}: WARNING bound plan "
+                  f"{eplan.fingerprint} is stale (replan chose "
+                  f"different decisions)")
+        return bool(stale)
+
+    timeline: list[dict] = []
+    recal_epochs: list[int] = []
+    changed_recals: list[int] = []
+    prev_scrape: dict = {}
+    prev_plan: str | None = None
+    t_wall = time.monotonic()
+    try:
+        for epoch in range(epochs):
+            event = by_epoch.get(epoch)
+            if event is not None:
+                truth = apply_event(truth, topo, event)
+                print(f"epoch {epoch}: injected {event['kind']} "
+                      f"(true inter bw now "
+                      f"{true_inter_bw(truth, topo) / 1e9:.2f} GB/s)")
+            # fresh probe rng per epoch: run-to-run jitter, not one
+            # frozen noise draw replayed forever
+            probe = SimProbe(dataclasses.replace(truth,
+                                                 seed=seed + 1000 + epoch))
+            recal = monitor.run_cycle(probe)
+            if recal is not None:
+                recal_epochs.append(epoch)
+                if any(p["changed"] for p in recal.get("programs", [])):
+                    changed_recals.append(epoch)
+            # one-shot stale surface + hot re-bind (checked twice: the
+            # second call must never warn again)
+            was_stale = check_stale(epoch)
+            check_stale(epoch)
+            if was_stale:
+                eplan = monitor.replanned(program.name) or \
+                    planner.plan_program(program, topo)
+                stale_warned[0] = False
+            # post-cycle planner verdict vs a fresh oracle on the truth
+            decision = planner.choose("dispatch", flip_payload, topo)
+            oracle = Planner(hw=truth.true_hw()).choose(
+                "dispatch", flip_payload, topo)
+            # the operator's view: scrape our own exporter over HTTP
+            parsed = parse_text(scrape(exporter.url))
+            slo_deltas = {
+                cls: (_metric(parsed, "repro_slo_class_total",
+                              op="dispatch", payload_bucket=slo_bucket,
+                              slo=cls)
+                      - _metric(prev_scrape, "repro_slo_class_total",
+                                op="dispatch", payload_bucket=slo_bucket,
+                                slo=cls))
+                for cls in ("good", "acceptable", "poor")}
+            # epoch class = WORST class observed this epoch (SLOs report
+            # the tail, not the mode — one poor probe among good ones
+            # makes the cell poor)
+            slo_class = next((cls for cls in ("poor", "acceptable", "good")
+                              if slo_deltas.get(cls, 0) > 0), None)
+            row = {
+                "epoch": epoch,
+                "sim_time_h": round(epoch * epoch_minutes / 60.0, 3),
+                "event": event,
+                "true_inter_gbps": true_inter_bw(truth, topo) / 1e9,
+                "drift_pct": round(100 * monitor.drift(), 2),
+                "recalibrated": recal is not None,
+                "fits": recal["fits"] if recal else None,
+                "planner_plan": decision.plan,
+                "oracle_plan": oracle.plan,
+                "flipped": (prev_plan is not None
+                            and decision.plan != prev_plan),
+                "bound_fingerprint": eplan.fingerprint,
+                "stale_warned": was_stale,
+                "slo_class": slo_class,
+                "scrape": {
+                    "drift_ratio": _metric(parsed, "repro_drift_ratio",
+                                           op="dispatch"),
+                    "recalibrations": _metric(
+                        parsed, "repro_recalibrations_total"),
+                    "decision_flips": sum(
+                        v for (n, lbls), v in parsed.items()
+                        if n == "repro_planner_decision_flips_total"),
+                    "slo_deltas": slo_deltas,
+                },
+            }
+            timeline.append(row)
+            prev_scrape = parsed
+            prev_plan = decision.plan
+    finally:
+        exporter.stop()
+
+    # -- the five end-to-end assertions -------------------------------------
+    failures: list[str] = []
+
+    def check(name: str, ok: bool, detail: str) -> dict:
+        if not ok:
+            failures.append(f"{name}: {detail}")
+        return {"name": name, "ok": bool(ok), "detail": detail}
+
+    # 1. detection latency: every event trips a recal within the window
+    latencies = {}
+    for ev in schedule:
+        hit = next((r for r in recal_epochs
+                    if ev["epoch"] <= r <= ev["epoch"] + detect_within),
+                   None)
+        latencies[ev["epoch"]] = (None if hit is None
+                                  else hit - ev["epoch"])
+    a_detect = check(
+        "detection",
+        all(v is not None for v in latencies.values()),
+        f"recal latency per event epoch: {latencies} "
+        f"(window {detect_within})")
+
+    # 2. convergence: after a class-uniform event, the trusted inter fit
+    #    lands within 20% of the injected truth
+    conv = []
+    for ev in schedule:
+        if ev["kind"] not in ("degrade", "recover"):
+            continue
+        rows = [r for r in timeline
+                if r["recalibrated"] and r["fits"]
+                and ev["epoch"] <= r["epoch"] <= ev["epoch"]
+                + detect_within]
+        if not rows:
+            conv.append((ev["epoch"], None, None, False))
+            continue
+        fit = rows[-1]["fits"].get("inter", {})
+        fitted = fit.get("bw_gbps", 0.0) * 1e9
+        true_bw = (rows[-1]["true_inter_gbps"]) * 1e9
+        ok = (fit.get("trusted", False) and true_bw > 0
+              and abs(fitted - true_bw) / true_bw <= 0.20)
+        conv.append((ev["epoch"], round(fitted / 1e9, 2),
+                     round(true_bw / 1e9, 2), ok))
+    a_conv = check(
+        "convergence", all(c[-1] for c in conv),
+        f"(event_epoch, fitted_gbps, true_gbps, ok): {conv}")
+
+    # 3. decision flips match the oracle: outside detection grace
+    #    windows the fitted planner and the truth oracle must agree,
+    #    and at least one genuine scheme flip must have happened
+    grace = {e for ev in schedule
+             for e in range(ev["epoch"],
+                            ev["epoch"] + detect_within + 1)}
+    mismatches = [r["epoch"] for r in timeline
+                  if r["epoch"] not in grace
+                  and r["planner_plan"] != r["oracle_plan"]]
+    n_flips = sum(1 for r in timeline if r["flipped"])
+    a_flips = check(
+        "flips", not mismatches and n_flips >= 1,
+        f"planner-vs-oracle mismatches at epochs {mismatches}; "
+        f"{n_flips} genuine flip(s) observed")
+
+    # 4. stale warnings: exactly once per changed-program recalibration
+    a_stale = check(
+        "stale", stale_warnings == changed_recals,
+        f"stale warnings at {stale_warnings}, changed-program recals "
+        f"at {changed_recals}")
+
+    # 5. SLO transition good -> poor -> good around the first degrade
+    deg = next(ev["epoch"] for ev in schedule if ev["kind"] == "degrade")
+    classes = [r["slo_class"] for r in timeline]
+    pre = [c for c in classes[:deg] if c]
+    post = [c for c in classes[deg + 1:] if c]
+    a_slo = check(
+        "slo",
+        bool(pre) and pre[-1] == "good"
+        and classes[deg] == "poor"
+        and "good" in post,
+        f"classes around degrade@{deg}: pre={pre[-2:]} "
+        f"at={classes[deg]} post={post[:3]}")
+
+    result = {
+        "config": {"fabric": fabric, "epochs": epochs,
+                   "epoch_minutes": epoch_minutes,
+                   "sim_hours": round(epochs * epoch_minutes / 60.0, 2),
+                   "noise": noise, "seed": seed, "smoke": smoke,
+                   "detect_within": detect_within,
+                   "flip_batch": FLIP_BATCH, "slo_batch": SLO_BATCH},
+        "ts": time.time(),
+        "wall_s": round(time.monotonic() - t_wall, 2),
+        "schedule": schedule,
+        "assertions": [a_detect, a_conv, a_flips, a_stale, a_slo],
+        "ok": not failures,
+        "timeline": timeline,
+    }
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(__file__), "..", "..",
+                                "..", "results", "STRESS_soak.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    for a in result["assertions"]:
+        print(f"[{'ok' if a['ok'] else 'FAIL'}] {a['name']}: {a['detail']}")
+    print(f"soak: {epochs} epoch(s) over "
+          f"{result['config']['sim_hours']}h simulated, "
+          f"{len(recal_epochs)} recalibration(s), "
+          f"{len(stale_warnings)} stale warning(s) -> {out_path}")
+    if failures:
+        for fmsg in failures:
+            print(f"STRESS FAILURE: {fmsg}", file=sys.stderr)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fabric", default="2x8")
+    ap.add_argument("--hours", type=float, default=8.0,
+                    help="simulated soak duration")
+    ap.add_argument("--epoch-minutes", type=float, default=10.0,
+                    help="simulated probe cadence (one telemetry cycle "
+                         "per epoch)")
+    ap.add_argument("--noise", type=float, default=0.01,
+                    help="lognormal measurement jitter sigma")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--detect-within", type=int, default=2,
+                    help="max epochs between an injected event and its "
+                         "recalibration")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: 6-epoch soak with one degradation + "
+                         "recovery")
+    ap.add_argument("--out", default=None,
+                    help="result JSON path (default "
+                         "results/STRESS_soak.json)")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="exporter port the soak scrapes (0 = ephemeral)")
+    args = ap.parse_args(argv)
+    epochs = (6 if args.smoke
+              else max(4, int(args.hours * 60 / args.epoch_minutes)))
+    result = run_soak(fabric=args.fabric, epochs=epochs,
+                      epoch_minutes=args.epoch_minutes, noise=args.noise,
+                      seed=args.seed, detect_within=args.detect_within,
+                      smoke=args.smoke, out_path=args.out,
+                      port=args.metrics_port)
+    return 0 if result["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -69,8 +69,13 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    from repro.telemetry.exporter import (add_metrics_args,
+                                          finish_exporter_from_args,
+                                          start_exporter_from_args)
+    add_metrics_args(ap)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
+    exporter = start_exporter_from_args(args)
 
     if os.environ.get("JAX_COORDINATOR"):
         jax.distributed.initialize()          # multi-host entry
@@ -234,6 +239,10 @@ def main(argv=None):
                 if (pctx is not None and not stale_warned[0]
                         and pctx.bound_plan_stale()):
                     stale_warned[0] = True
+                    from repro.telemetry import default_registry
+                    default_registry()["repro_plan_stale_total"].inc(
+                        program=eplan.program.name,
+                        fingerprint=eplan.fingerprint)
                     logging.warning(
                         "step %d: bound ExecutionPlan %s is now STALE — "
                         "the replan under the refit calibration chose "
@@ -257,6 +266,7 @@ def main(argv=None):
     if attribution is not None:
         print(f"overlap feedback: {attribution.fed} step timing(s) fed "
               f"into the joint pipeline decision's measurement rows")
+    finish_exporter_from_args(args, exporter)
     return 0
 
 

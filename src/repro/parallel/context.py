@@ -140,6 +140,12 @@ class ParallelContext:
                     f"{plan.topo_fingerprint[0]!r}, but this context's "
                     f"fabric is {fp[0]!r} — replan the program for the "
                     f"active fabric before binding")
+        if plan is not None:
+            # lazy: repro.telemetry transitively imports the planner this
+            # module feeds, so the metrics plane resolves at call time
+            from repro.telemetry import metrics as _m
+            _m.default_registry()["repro_plan_bind_total"].inc(
+                program=plan.program.name, fingerprint=plan.fingerprint)
         return dataclasses.replace(self, execution_plan=plan)
 
     def moe_sites(self, phase: str, *, num_experts: int, top_k: int,

@@ -18,6 +18,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _metrics():
+    """Lazy: the metrics plane lives in repro.telemetry, which must not
+    be a hard import of the runtime layer."""
+    from repro.telemetry import metrics as _m
+    return _m.default_registry()
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_new_tokens: int = 32
@@ -114,6 +121,9 @@ class ServeEngine:
                 out["stale"] = stale
                 if stale and not self._stale_warned:
                     self._stale_warned = True
+                    _metrics()["repro_plan_stale_total"].inc(
+                        program=eplan.program.name,
+                        fingerprint=eplan.fingerprint)
                     print(f"WARNING: bound ExecutionPlan "
                           f"{eplan.fingerprint} is stale — a replan "
                           f"chose different decisions for this program; "
@@ -122,6 +132,18 @@ class ServeEngine:
         if eplan.phase_report:
             out["phases"] = {ph: dict(rep)
                              for ph, rep in eplan.phase_report.items()}
+            # phase-budget SLO verdicts, scrape-visible: 1/0 for budgeted
+            # phases, plus every phase's predicted (contended) score
+            reg = _metrics()
+            for ph, rep in eplan.phase_report.items():
+                score = rep.get("contended_score_s", rep.get("score_s"))
+                if score is not None:
+                    reg["repro_phase_predicted_seconds"].set(
+                        score, phase=ph, fingerprint=eplan.fingerprint)
+                if rep.get("budget_s") is not None:
+                    reg["repro_phase_budget_ok"].set(
+                        1.0 if rep.get("budget_ok") else 0.0,
+                        phase=ph, fingerprint=eplan.fingerprint)
         if eplan.planner_stats:
             out["planner"] = dict(eplan.planner_stats)
         for site in eplan.program.sites:
@@ -156,7 +178,9 @@ class ServeEngine:
             cfg, {"tokens": prompts, "labels": prompts})
         batch.pop("labels", None)
         logits, cache = self._prefill(self.params, batch, cache)
-        self.stats["prefill_s"] += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        self.stats["prefill_s"] += dt
+        _metrics()["repro_step_wall_seconds"].observe(dt, phase="prefill")
         out = np.zeros((b, max_new), np.int32)
         done = np.zeros((b,), bool)
         key = jax.random.key(seed)
@@ -176,7 +200,9 @@ class ServeEngine:
                     break
             dec_in = self._decode_batch(nxt[:, None])
             logits, cache = self._decode(self.params, dec_in, cache)
-        self.stats["decode_s"] += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        self.stats["decode_s"] += dt
+        _metrics()["repro_step_wall_seconds"].observe(dt, phase="decode")
         self.stats["tokens"] += int((~done).sum()) * max_new
         return out
 

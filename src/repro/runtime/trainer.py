@@ -245,6 +245,9 @@ class Trainer:
             row = {"step": step, "wall": dt,
                    **{k: float(v) for k, v in metrics.items()}}
             self.metrics_history.append(row)
+            from repro.telemetry import metrics as _metrics
+            _metrics.default_registry()["repro_step_wall_seconds"].observe(
+                dt, phase="train")
             if self.step_hook:
                 self.step_hook(step, row)
             if step % self.cfg.log_every == 0:

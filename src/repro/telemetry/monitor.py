@@ -30,7 +30,9 @@ from repro.core.latency_model import HardwareModel
 from repro.core.planner import Planner
 from repro.core.topology import Topology
 
+from . import slo as _slo
 from .fit import fit_measurements, fit_overlap_eff
+from .metrics import default_registry
 from .probe import DEFAULT_OPS, probe_link_directions, probe_sweep
 from .store import CalibrationStore, topo_key
 
@@ -69,6 +71,10 @@ class DriftMonitor:
     # -- observations --------------------------------------------------------
     def observe(self, record: dict) -> None:
         """Feed one probe record's (predicted, measured) pair."""
+        reg = default_registry()
+        reg["repro_probe_observations_total"].inc(
+            op=str(record.get("op", "?")), fabric=self.topo.name)
+        _slo.observe_record(record, registry=reg)
         p = float(record["predicted_s"])
         m = float(record["measured_s"])
         if p <= 0:
@@ -122,9 +128,15 @@ class DriftMonitor:
         entries: the event carries each program's fresh fingerprint and
         whether any jointly-planned decision moved.  Returns the event
         dict, or None when no class fit cleared the confidence floor."""
+        t_start = time.perf_counter()
+        reg = default_registry()
         records = list(
             self.store.latest_by_key(fabric=topo_key(self.topo)).values())
         measurements, fits = fit_measurements(records, self.topo)
+        rejected = sum(1 for f in fits.values() if not f.trusted)
+        if rejected:
+            reg["repro_fit_rejected_total"].inc(rejected,
+                                                fabric=self.topo.name)
         # overlap-efficiency hook: measured pipelined decisions in the
         # planner's log calibrate hw.overlap_eff alongside the link fits
         eta = fit_overlap_eff(self.planner.decision_log)
@@ -158,6 +170,9 @@ class DriftMonitor:
         self._last_recal_check = self.checks
         for dq in self._errs.values():
             dq.clear()            # judged against the new model from here
+        reg["repro_recalibrations_total"].inc(fabric=self.topo.name)
+        reg["repro_recalibration_seconds"].observe(
+            time.perf_counter() - t_start, fabric=self.topo.name)
         return event
 
     def replanned(self, program_name: str):
@@ -173,6 +188,10 @@ class DriftMonitor:
         """Recalibrate iff drift exceeds the threshold (and the window
         holds enough observations, and the cooldown elapsed)."""
         self.checks += 1
+        reg = default_registry()
+        reg["repro_drift_checks_total"].inc(fabric=self.topo.name)
+        for op, v in self.drift_by_op().items():
+            reg["repro_drift_ratio"].set(v, op=op, fabric=self.topo.name)
         if self._n_observations() < self.min_observations:
             return None
         if self.checks - self._last_recal_check < self.cooldown:
