@@ -985,8 +985,162 @@ def bench_train_throughput():
              "value": (time.monotonic() - t0) / 5}]
 
 
+def bench_failover(smoke: bool = False):
+    """Fault-tolerance latency: how fast the detect -> replan -> hot
+    re-bind arc turns a dark rail into a feasible running plan, and what
+    the degraded fabric costs against the healthy one.
+
+    Two tables:
+
+    1. Time-to-reroute — one rail of the 2x8 fabric goes dark (both
+       directions); a ``FailureDetector``-equipped ``DriftMonitor``
+       scans, declares the rail dead after ``strikes`` consecutive
+       timeouts, retargets the bound program, and a ``PlanBinder``
+       stages the replacement off the step path.  Measured: scan cycles
+       to declare, wall time of the declaring cycle, a cold
+       ``plan_program`` replan on the degraded fabric, stage (build)
+       time and the swap (pointer-flip) time.
+
+    2. Degraded vs healthy — planner-predicted latency per op x payload
+       on the healthy fabric vs the one-rail-dark fabric, with the
+       winning scheme on each side (reroutes show up as plan flips, the
+       ratio is the multicast capacity the dark rail took with it).
+
+    CI gates (also under ``--smoke``):
+
+      - detection happens in exactly ``strikes`` scan cycles;
+      - every site ledger of the retargeted plan is feasible under the
+        injected failure state (nothing charges the dark rail);
+      - the staged swap performs zero cold retraces;
+      - no degraded op gets *faster* than healthy (ratio >= 1 - 1e-9).
+
+    Full mode emits results/BENCH_failover.json.
+    """
+    import json
+    import os
+
+    from repro.core import plan as plan_ir
+    from repro.core import planner as pl
+    from repro.core import schedules  # noqa: F401 — registers plans
+    from repro.core.topology import FailureState, get_fabric
+    from repro.parallel.context import PlanBinder
+    from repro.telemetry import (CalibrationStore, DriftMonitor,
+                                 FailureDetector, GroundTruth,
+                                 ProbePolicy, SimProbe,
+                                 reset_default_registry)
+
+    reset_default_registry()
+    topo = get_fabric("2x8")
+    planner = pl.Planner()
+    program = plan_ir.CollectiveProgram(
+        "bench_failover",
+        sites=plan_ir.moe_sites("prefill", num_experts=64, top_k=8,
+                                tokens_per_rank=64, token_bytes=7168))
+
+    # -- arc: dark rail -> declared -> retargeted -> staged -> swapped --
+    policy = ProbePolicy(retries=0, backoff_s=0.0, jitter=0.0,
+                         sleep=lambda s: None)
+    detector = FailureDetector(topo, strikes=2, policy=policy)
+    monitor = DriftMonitor(planner, CalibrationStore(":memory:"), topo,
+                           detector=detector)
+    eplan = planner.plan_program(program, topo)
+    binder = PlanBinder(lambda plan: ("lowered", plan.fingerprint),
+                        plan=eplan)
+    rail = detector.rails[0]
+    dark = SimProbe(GroundTruth(seed=3).with_dead(
+        [rail, (rail[1], rail[0])]))
+    cycles = 0
+    t_detect = 0.0
+    while not detector.dead_links():
+        t0 = time.monotonic()
+        monitor.run_cycle(dark)
+        t_detect = time.monotonic() - t0      # the declaring cycle
+        cycles += 1
+        assert cycles <= 8, "detector never declared the dark rail"
+    assert cycles == detector.strikes, (
+        f"declared after {cycles} cycles, strikes={detector.strikes}")
+
+    staged = monitor.staged_plan(program.name)
+    assert staged is not None and staged.fingerprint != eplan.fingerprint
+    failures = FailureState(dead_links=detector.dead_links())
+    for role, led in pl.plan_site_ledgers(staged, monitor.topo).items():
+        reason = pl.ledger_infeasible(led, failures)
+        assert reason is None, f"{role}: {reason}"
+
+    t0 = time.monotonic()
+    replanner = pl.Planner()
+    replanner.plan_program(program, monitor.topo)
+    t_replan = time.monotonic() - t0          # cold replan, empty cache
+
+    t0 = time.monotonic()
+    binder.stage(staged)
+    t_stage = time.monotonic() - t0           # off the step path
+    t0 = time.monotonic()
+    binder.swap_if_pending()
+    t_swap = time.monotonic() - t0            # ON the step path
+    assert binder.cold_retraces == 0, "swap traced at the step boundary"
+
+    rows = [
+        {"name": "failover_detect_cycles", "metric": "cycles",
+         "value": cycles},
+        {"name": "failover_detect_cycle_s", "metric": "s",
+         "value": t_detect},
+        {"name": "failover_replan_s", "metric": "s", "value": t_replan},
+        {"name": "failover_stage_s", "metric": "s", "value": t_stage},
+        {"name": "failover_swap_s", "metric": "s", "value": t_swap},
+    ]
+
+    # -- degraded vs healthy predicted-latency table --------------------
+    degraded_topo = topo.with_failures(FailureState(
+        dead_links={rail, (rail[1], rail[0])}))
+    payloads = [8 << 20] if smoke else [1 << 20, 8 << 20, 64 << 20]
+    table = []
+    for op in ("dispatch", "allreduce", "reduce_scatter"):
+        for nbytes in payloads:
+            healthy = planner.choose(op, nbytes, topo,
+                                     executable_only=True)
+            hurt = planner.choose(op, nbytes, degraded_topo,
+                                  executable_only=True)
+            ratio = hurt.predicted_s / healthy.predicted_s
+            assert ratio >= 1.0 - 1e-9, (
+                f"{op}@{nbytes}: degraded beat healthy ({ratio:.3f})")
+            table.append({
+                "op": op, "payload_bytes": nbytes,
+                "healthy_plan": healthy.plan,
+                "healthy_s": healthy.predicted_s,
+                "degraded_plan": hurt.plan,
+                "degraded_s": hurt.predicted_s,
+                "slowdown": ratio,
+            })
+            rows.append({"name": f"failover_{op}_{nbytes >> 20}mb_slowdown",
+                         "metric": "x", "value": ratio})
+
+    if not smoke:
+        out = {
+            "run_meta": run_metadata(topo.name),
+            "fabric": topo.name,
+            "dark_rail": list(rail),
+            "time_to_reroute": {
+                "detect_cycles": cycles,
+                "detect_cycle_s": t_detect,
+                "replan_s": t_replan,
+                "stage_s": t_stage,
+                "swap_s": t_swap,
+            },
+            "degraded_vs_healthy": table,
+        }
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_failover.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
+    return rows
+
+
 MICRO_BENCHES = {
     "bench_planner": lambda smoke: bench_planner(),
+    "bench_failover": bench_failover,
     "bench_fabrics": bench_fabrics,
     "bench_calibration": bench_calibration,
     "bench_overlap": bench_overlap,

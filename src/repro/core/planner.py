@@ -53,6 +53,74 @@ def _metrics_registry():
 
 
 # ---------------------------------------------------------------------------
+# feasibility under failures
+# ---------------------------------------------------------------------------
+
+class NoFeasiblePlanError(RuntimeError):
+    """Every candidate of an op was masked as infeasible under the
+    topology's :class:`~repro.core.topology.FailureState` — the fabric is
+    effectively partitioned for this collective.  Raised instead of
+    scoring garbage on links that cannot carry traffic; callers (serving
+    tier, stress harness) treat it as "shed or hold traffic", never as a
+    plan."""
+
+    def __init__(self, op: str, fabric: str, masked: list[str]):
+        self.op = op
+        self.fabric = fabric
+        self.masked = list(masked)
+        detail = "; ".join(self.masked[:4])
+        if len(self.masked) > 4:
+            detail += f"; ... ({len(self.masked)} candidates)"
+        super().__init__(
+            f"no feasible {op!r} plan on {fabric}: every candidate was "
+            f"masked by the fabric's failure state [{detail}]")
+
+
+def ledger_infeasible(ledger, failures) -> Optional[str]:
+    """Why a simulated ledger cannot execute under ``failures`` (None =
+    feasible).  Two checks, straight from the failure model:
+
+    - any charged link is dead (or touches a lost NPU) — no scheme can
+      serialize bytes over a dark rail;
+    - any *software forwarding engine* the plan relies on
+      (``ledger.engine_serial`` — populated only by multiwrite/relayed
+      schedules) sits on a dead relay.  Plain unicast store-and-forward
+      charges ``relay_bytes`` but no engine, so it survives a relay-engine
+      loss — the multiwrite → hierarchical → unicast degradation ladder.
+    """
+    for key in ledger.link_bytes:
+        if failures.link_is_dead(key):
+            return f"dead link {key[0]}->{key[1]}"
+    for node in ledger.engine_serial:
+        if failures.relay_is_dead(node):
+            return f"dead relay engine on node {node}"
+    return None
+
+
+def plan_site_ledgers(eplan, topo: Topology) -> dict:
+    """Re-simulate each site decision of ``eplan`` on ``topo`` and
+    return ``role -> Ledger`` — the byte ledgers the bound plan actually
+    executes.  This is the post-hoc feasibility audit surface: the
+    stress harness asserts that no ledger of a serving plan charges a
+    link the hidden ground truth has killed (the "never execute an
+    infeasible plan" invariant, checked against TRUTH rather than
+    against the detector's belief)."""
+    out = {}
+    for role in sorted(eplan.decisions):
+        site = next((s for s in eplan.program.sites if s.role == role),
+                    None)
+        if site is None:
+            continue
+        d = eplan.decisions[role]
+        scheme = plan_ir.get_plan(site.op, d.plan)
+        scenario = Planner._scenario(site.op, site.topo or topo,
+                                     site.scenario_args())
+        out[role] = scheme.simulate(scenario, d.payload_bytes,
+                                    **dict(d.knobs))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # cache keys
 # ---------------------------------------------------------------------------
 
@@ -343,12 +411,34 @@ class Planner:
         plans = plan_ir.plans_for(op, executable_only=executable_only)
         if not plans:
             raise ValueError(f"no plans registered for op {op!r}")
+        topo = scenario.topo
+        failures = topo.failures if topo.failures else None
         scored: list[tuple] = []        # (t, order, plan, knobs, ledger)
+        masked: list[str] = []
         for order, p in enumerate(plans):
             for knobs in p.knob_grid():
-                ledger = p.simulate(scenario, bucket, **knobs)
-                t = score_ledger(ledger, hw)
+                try:
+                    ledger = p.simulate(scenario, bucket, **knobs)
+                    reason = (ledger_infeasible(ledger, failures)
+                              if failures is not None else None)
+                    if reason is None:
+                        t = score_ledger(ledger, hw)
+                except (ValueError, KeyError, RuntimeError) as e:
+                    # on a degraded fabric a candidate may not even
+                    # simulate (no route / missing link); that IS the
+                    # feasibility verdict, not an error
+                    if failures is None:
+                        raise
+                    reason = str(e)
+                if reason is not None:
+                    masked.append(f"{p.name}: {reason}")
+                    continue
                 scored.append((t, order, p, knobs, ledger))
+        if masked:
+            _metrics_registry()["repro_plan_infeasible_total"].inc(
+                len(masked), op=op, fabric=topo.name)
+        if not scored:
+            raise NoFeasiblePlanError(op, topo.name, masked)
         scored.sort(key=lambda s: (s[0], s[1]))
         return scored
 
@@ -697,12 +787,58 @@ class Planner:
         """Whether a bound ExecutionPlan has been superseded by a replan
         of the same (program, fabric) under newer calibration — True
         (stale), False (current), or None (this planner has no record,
-        e.g. a pinned plan or a foreign planner's product)."""
+        e.g. a pinned plan or a foreign planner's product).  A program
+        that was RETARGETED to a different topology (failover /
+        failback via :meth:`retarget_programs`) makes any plan bound on
+        the old fabric stale by construction."""
+        program_seen = False
         for pkey, (_, _, fp) in self._programs.items():
-            if (pkey[0] == eplan.program.cache_key()
-                    and pkey[1] == eplan.topo_fingerprint):
+            if pkey[0] != eplan.program.cache_key():
+                continue
+            if pkey[1] == eplan.topo_fingerprint:
                 return fp != eplan.fingerprint
+            program_seen = True
+        if program_seen:
+            return True
         return None
+
+    def retarget_programs(self, old_topo: Topology,
+                          new_topo: Topology) -> list[dict]:
+        """Move every registered program from ``old_topo`` to
+        ``new_topo`` and re-plan it there — the planner half of a
+        failover (or failback): routing recomputes from the surviving
+        capacity graph, and plans bound on the old fabric become stale
+        (:meth:`plan_is_stale`) so the runtime re-binds.
+
+        Returns one event per moved program, shaped like
+        :meth:`replan_programs` events.  A program whose collectives are
+        unplannable on the degraded fabric surfaces the typed
+        :class:`NoFeasiblePlanError` in the event (``plan=None``) rather
+        than silently keeping the old, infeasible plan registered.
+        """
+        old_fp = topology_fingerprint(old_topo)
+        events = []
+        reg = _metrics_registry()
+        for pkey, (program, _, old_plan_fp) in list(self._programs.items()):
+            if pkey[1] != old_fp:
+                continue
+            del self._programs[pkey]
+            try:
+                eplan = self.plan_program(program, new_topo,
+                                          executable_only=pkey[-1])
+            except NoFeasiblePlanError as e:
+                events.append({"program": program.name, "fingerprint": None,
+                               "changed": True, "plan": None, "error": e})
+                continue
+            changed = eplan.fingerprint != old_plan_fp
+            reg["repro_plan_replan_total"].inc(
+                program=program.name,
+                changed="true" if changed else "false")
+            events.append({"program": program.name,
+                           "fingerprint": eplan.fingerprint,
+                           "changed": changed,
+                           "plan": eplan})
+        return events
 
     def replan_programs(self) -> list[dict]:
         """Re-plan every registered (program, topo) under the CURRENT
@@ -742,16 +878,36 @@ class Planner:
                                     executable_only=executable_only)
         if not d_plans or not c_plans:
             raise ValueError("no registered dispatch/combine plans")
+        failures = topo.failures if topo.failures else None
+        masked: list[str] = []
+
+        def half_ledger(cache_key, plan, scenario, bucket, knobs):
+            """Simulate one half of the pair; an infeasibility reason
+            string (instead of a Ledger) poisons every pairing it joins."""
+            if cache_key not in ledgers:
+                try:
+                    led = plan.simulate(scenario, bucket, **knobs)
+                    reason = (ledger_infeasible(led, failures)
+                              if failures is not None else None)
+                except (ValueError, KeyError, RuntimeError) as e:
+                    if failures is None:
+                        raise
+                    led, reason = None, str(e)
+                if reason is not None:
+                    masked.append(f"{plan.name}: {reason}")
+                    led = None
+                ledgers[cache_key] = led
+            return ledgers[cache_key]
+
         scored = []      # (t, order, pd, kn_d, ld, pc, kn_c, lc)
         ledgers: dict = {}
         for d_ord, pd in enumerate(d_plans):
             d_scheme = pd.shard_map_kwargs()["moe_scheme"]
             for kn_d in pd.knob_grid():
                 d_key = ("d", pd.name, tuple(sorted(kn_d.items())))
-                if d_key not in ledgers:
-                    ledgers[d_key] = pd.simulate(d_scenario, d_bucket,
-                                                 **kn_d)
-                ld = ledgers[d_key]
+                ld = half_ledger(d_key, pd, d_scenario, d_bucket, kn_d)
+                if ld is None:
+                    continue
                 for c_ord, pc in enumerate(c_plans):
                     c_scheme = pc.shard_map_kwargs()["moe_combine"]
                     # executable pairing: the baseline (unicast) dispatch
@@ -765,13 +921,18 @@ class Planner:
                             continue
                         c_key = ("c", pc.name,
                                  tuple(sorted(kn_c.items())))
-                        if c_key not in ledgers:
-                            ledgers[c_key] = pc.simulate(
-                                c_scenario, c_bucket, **kn_c)
-                        lc = ledgers[c_key]
+                        lc = half_ledger(c_key, pc, c_scenario, c_bucket,
+                                         kn_c)
+                        if lc is None:
+                            continue
                         t = score_pipeline((ld, lc), hw)
                         scored.append((t, (d_ord, c_ord), pd, kn_d, ld,
                                        pc, kn_c, lc))
+        if masked:
+            _metrics_registry()["repro_plan_infeasible_total"].inc(
+                len(masked), op="dispatch+combine", fabric=topo.name)
+        if not scored:
+            raise NoFeasiblePlanError("dispatch+combine", topo.name, masked)
         scored.sort(key=lambda s: (s[0], s[1]))
         return scored, d_bucket, c_bucket
 

@@ -63,8 +63,8 @@ def apply_event(truth: GroundTruth, topo, event: dict) -> GroundTruth:
     if kind == "degrade":
         return truth.degraded(topo, event.get("factor", 4.0))
     if kind == "recover":
-        # drop every per-link override: the fabric is healthy again
-        return dataclasses.replace(truth, link_bw=())
+        # drop every per-link override AND any blackout: healthy again
+        return dataclasses.replace(truth, link_bw=(), dead_links=())
     if kind == "asym":
         # one rail DIRECTION slows down (src_server -> everyone else);
         # the return direction stays healthy — the per-role fit case
@@ -326,6 +326,24 @@ def run_soak(*, fabric: str = "2x8", epochs: int = 48,
         f"classes around degrade@{deg}: pre={pre[-2:]} "
         f"at={classes[deg]} post={post[:3]}")
 
+    assertions = [a_detect, a_conv, a_flips, a_stale, a_slo]
+
+    # 6. asymmetric-degradation windows settle after ONE recalibration:
+    #    per-role fit attribution books each probe against the truly
+    #    bottlenecking direction, so the slow direction's fit converges
+    #    instead of alternating with the healthy return rail and
+    #    re-tripping the drift threshold every epoch
+    for ev in schedule:
+        if ev["kind"] != "asym":
+            continue
+        nxt = min((e["epoch"] for e in schedule
+                   if e["epoch"] > ev["epoch"]), default=epochs)
+        in_window = [e for e in recal_epochs if ev["epoch"] <= e < nxt]
+        assertions.append(check(
+            "asym_window", len(in_window) <= 1,
+            f"recalibrations during asym window "
+            f"[{ev['epoch']}, {nxt}): {in_window} (churn if > 1)"))
+
     result = {
         "config": {"fabric": fabric, "epochs": epochs,
                    "epoch_minutes": epoch_minutes,
@@ -336,7 +354,7 @@ def run_soak(*, fabric: str = "2x8", epochs: int = 48,
         "ts": time.time(),
         "wall_s": round(time.monotonic() - t_wall, 2),
         "schedule": schedule,
-        "assertions": [a_detect, a_conv, a_flips, a_stale, a_slo],
+        "assertions": assertions,
         "ok": not failures,
         "timeline": timeline,
     }
@@ -358,6 +376,261 @@ def run_soak(*, fabric: str = "2x8", epochs: int = 48,
     return result
 
 
+# ---------------------------------------------------------------------------
+# failure-events soak: rail blackout -> detect -> reroute -> hot re-bind
+# ---------------------------------------------------------------------------
+
+def run_failure_soak(*, fabric: str = "2x8", epochs: int = 8,
+                     noise: float = 0.01, seed: int = 0,
+                     detect_within: int = 2,
+                     out_path: str | None = None, port: int = 0) -> dict:
+    """The fault-tolerance arc end-to-end: a rail goes DARK mid-serve
+    (both directions of one inter-server link stop carrying probe
+    traffic), the FailureDetector declares it dead within
+    ``detect_within`` cycles, the planner retargets the bound program
+    around it on the surviving capacity graph, the staged replacement
+    plan hot-swaps in at a step boundary with ZERO cold retraces, no
+    executed plan ever charges the dark rail outside the detection
+    grace window, and recovery flips the decisions back.
+
+    Writes ``results/STRESS_failover.json``.
+    """
+    from repro.core.planner import ledger_infeasible, plan_site_ledgers
+    from repro.core.topology import FailureState
+    from repro.parallel.context import PlanBinder
+    from repro.telemetry.failover import FailureDetector
+
+    reset_default_registry()
+    topo = get_fabric(fabric)
+    planner = Planner()
+    store = CalibrationStore(":memory:")
+    detector = FailureDetector(topo, strikes=min(2, detect_within))
+    monitor = DriftMonitor(planner, store, topo, detector=detector)
+    truth = GroundTruth(noise=noise, seed=seed)
+
+    # the blacked-out rail: the first inter-server link, both directions
+    # (a dark cable is dark both ways)
+    rail = detector.rails[0]
+    blackout = {rail, (rail[1], rail[0])}
+    blackout_epoch = 1
+    restore_epoch = max(blackout_epoch + detect_within + 2, epochs - 3)
+    schedule = [
+        {"epoch": blackout_epoch, "kind": "blackout",
+         "links": sorted(blackout)},
+        {"epoch": restore_epoch, "kind": "restore"},
+    ]
+    by_epoch = {ev["epoch"]: ev for ev in schedule}
+
+    from repro.core import plan as plan_ir
+    program = plan_ir.CollectiveProgram(
+        name="stress_serve",
+        sites=(*plan_ir.moe_sites("prefill", num_experts=64, top_k=8,
+                                  tokens_per_rank=FLIP_BATCH,
+                                  token_bytes=TOKEN_BYTES),
+               *plan_ir.moe_sites("decode", num_experts=64, top_k=8,
+                                  tokens_per_rank=4,
+                                  token_bytes=TOKEN_BYTES)))
+    eplan = planner.plan_program(program, topo)
+
+    def decisions_of(plan) -> dict:
+        return {role: (plan.decisions[role].plan,
+                       tuple(plan.decisions[role].knobs))
+                for role in sorted(plan.decisions)}
+
+    pre_blackout = decisions_of(eplan)
+    plan_topos = {eplan.fingerprint: topo}
+
+    # the "traced lowering": the failure soak runs no real model, so the
+    # artifact is a build receipt — what matters is WHEN builds happen
+    # (stage time, off the step path) and that swaps never build
+    trace_log: list[str] = []
+
+    def trace_fn(plan):
+        trace_log.append(plan.fingerprint)
+        return {"fingerprint": plan.fingerprint}
+
+    binder = PlanBinder(trace_fn, plan=eplan)
+
+    exporter = MetricsExporter(port).start()
+    timeline: list[dict] = []
+    swap_epochs: list[int] = []
+    detect_log: list[dict] = []
+    recal_epochs: list[int] = []
+    t_wall = time.monotonic()
+    try:
+        for epoch in range(epochs):
+            # step boundary: a staged re-bind lands HERE, never mid-epoch
+            if binder.swap_if_pending():
+                swap_epochs.append(epoch)
+            event = by_epoch.get(epoch)
+            if event is not None:
+                if event["kind"] == "blackout":
+                    truth = truth.with_dead(blackout)
+                    print(f"epoch {epoch}: rail "
+                          f"{rail[0]}<->{rail[1]} went DARK")
+                else:
+                    truth = dataclasses.replace(truth, dead_links=())
+                    print(f"epoch {epoch}: rail restored")
+            probe = SimProbe(dataclasses.replace(truth,
+                                                 seed=seed + 1000 + epoch))
+            n_det = len(detector.events)
+            recal = monitor.run_cycle(probe)
+            if recal is not None:
+                recal_epochs.append(epoch)
+            for ev in detector.events[n_det:]:
+                detect_log.append({"epoch": epoch, **{
+                    k: (list(v) if isinstance(v, tuple) else v)
+                    for k, v in ev.items()}})
+            # stage the latest retargeted plan (no-op when it is already
+            # the active one); its lowering builds NOW, off the step path
+            staged = monitor.staged_plan(program.name)
+            staged_now = False
+            if staged is not None:
+                plan_topos.setdefault(staged.fingerprint, monitor.topo)
+                staged_now = binder.stage(staged)
+            # feasibility audit of the ACTIVE plan against hidden TRUTH
+            truth_failures = FailureState(
+                dead_links=set(truth.dead_links))
+            active = binder.plan
+            ledgers = plan_site_ledgers(
+                active, plan_topos[active.fingerprint])
+            violations = sorted(
+                role for role, led in ledgers.items()
+                if ledger_infeasible(led, truth_failures) is not None)
+            parsed = parse_text(scrape(exporter.url))
+            timeline.append({
+                "epoch": epoch,
+                "event": event,
+                "truth_dead": sorted(truth.dead_links),
+                "detector_dead": sorted(detector.dead_links()),
+                "active_fingerprint": active.fingerprint,
+                "active_decisions": decisions_of(active),
+                "swapped": epoch in swap_epochs,
+                "staged": staged_now,
+                "violations": violations,
+                "recalibrated": recal is not None,
+                "scrape": {
+                    "failed_links": _metric(parsed, "repro_failed_links",
+                                            fabric=fabric),
+                    "rebinds": sum(
+                        v for (n, _), v in parsed.items()
+                        if n == "repro_plan_rebind_total"),
+                    "cold_retraces": sum(
+                        v for (n, _), v in parsed.items()
+                        if n == "repro_rebind_cold_retrace_total"),
+                    "infeasible_masked": sum(
+                        v for (n, _), v in parsed.items()
+                        if n == "repro_plan_infeasible_total"),
+                },
+            })
+    finally:
+        exporter.stop()
+
+    failures_list: list[str] = []
+
+    def check(name: str, ok: bool, detail: str) -> dict:
+        if not ok:
+            failures_list.append(f"{name}: {detail}")
+        return {"name": name, "ok": bool(ok), "detail": detail}
+
+    # 1. detection: both directions of the dark rail declared dead
+    #    within the window, and revived within the window after restore
+    dead_at = {tuple(e["link"]): e["epoch"] for e in detect_log
+               if e["kind"] == "link_dead"}
+    revived_at = {tuple(e["link"]): e["epoch"] for e in detect_log
+                  if e["kind"] == "link_recovered"}
+    a_detect = check(
+        "detection",
+        all(blackout_epoch <= dead_at.get(k, 10 ** 9)
+            <= blackout_epoch + detect_within for k in blackout)
+        and all(restore_epoch <= revived_at.get(k, 10 ** 9)
+                <= restore_epoch + detect_within for k in blackout),
+        f"dead_at={dead_at} revived_at={revived_at} "
+        f"(blackout@{blackout_epoch}, restore@{restore_epoch}, "
+        f"window {detect_within})")
+
+    # 2. reroute: the failover swap lands within one step of detection
+    #    and the swapped-in plan's ledgers avoid the dark rail
+    first_dead = min(dead_at.values(), default=None)
+    failover_swap = next((e for e in swap_epochs
+                          if e > blackout_epoch), None)
+    all_violations = [(r["epoch"], r["violations"]) for r in timeline
+                      if r["violations"]]
+    a_reroute = check(
+        "reroute",
+        first_dead is not None and failover_swap is not None
+        and failover_swap <= first_dead + 1
+        and all(not r["violations"] for r in timeline
+                if failover_swap <= r["epoch"] < restore_epoch),
+        f"first link declared dead @{first_dead}, failover swap "
+        f"@{failover_swap}, post-swap violations: {all_violations}")
+
+    # 3. no infeasible execution outside the detection grace window
+    #    (the plan bound when the rail dies keeps executing until the
+    #    detector has evidence — that window is bounded, not zero)
+    grace = set(range(blackout_epoch,
+                      (failover_swap if failover_swap is not None
+                       else blackout_epoch + detect_within + 2)))
+    bad = [(r["epoch"], r["violations"]) for r in timeline
+           if r["violations"] and r["epoch"] not in grace]
+    a_exec = check(
+        "no_dead_exec", not bad and len(grace) <= detect_within + 2,
+        f"dead-link executions outside grace {sorted(grace)}: {bad}")
+
+    # 4. hot re-bind: exactly one swap per transition, all lowerings
+    #    built at stage time — zero cold retraces at swap time
+    a_rebind = check(
+        "rebind",
+        binder.swaps == 2 and binder.cold_retraces == 0
+        and len(trace_log) == binder.cache_misses,
+        f"swaps={binder.swaps} (want 2: failover + failback) "
+        f"cold_retraces={binder.cold_retraces} "
+        f"builds={len(trace_log)} cache_misses={binder.cache_misses}")
+
+    # 5. flip-back: after recovery the active plan's DECISIONS equal the
+    #    pre-blackout plan's (fingerprints may differ — calibration
+    #    refits during the blackout legitimately move hw identity)
+    final = timeline[-1]["active_decisions"]
+    a_flip = check(
+        "flipback", final == pre_blackout
+        and any(e.get("kind") == "failback" for e in monitor.events),
+        f"final decisions {final} vs pre-blackout {pre_blackout}; "
+        f"monitor events: "
+        f"{[e.get('kind') for e in monitor.events]}")
+
+    result = {
+        "config": {"fabric": fabric, "epochs": epochs, "noise": noise,
+                   "seed": seed, "detect_within": detect_within,
+                   "blackout_rail": sorted(blackout),
+                   "blackout_epoch": blackout_epoch,
+                   "restore_epoch": restore_epoch},
+        "ts": time.time(),
+        "wall_s": round(time.monotonic() - t_wall, 2),
+        "schedule": schedule,
+        "detections": detect_log,
+        "swap_epochs": swap_epochs,
+        "recal_epochs": recal_epochs,
+        "assertions": [a_detect, a_reroute, a_exec, a_rebind, a_flip],
+        "ok": not failures_list,
+        "timeline": timeline,
+    }
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(__file__), "..", "..",
+                                "..", "results", "STRESS_failover.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    for a in result["assertions"]:
+        print(f"[{'ok' if a['ok'] else 'FAIL'}] {a['name']}: {a['detail']}")
+    print(f"failure soak: {epochs} epoch(s), blackout@{blackout_epoch} "
+          f"restore@{restore_epoch}, {binder.swaps} swap(s), "
+          f"{binder.cold_retraces} cold retrace(s) -> {out_path}")
+    if failures_list:
+        for fmsg in failures_list:
+            print(f"STRESS FAILURE: {fmsg}", file=sys.stderr)
+    return result
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fabric", default="2x8")
@@ -375,12 +648,25 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: 6-epoch soak with one degradation + "
                          "recovery")
+    ap.add_argument("--failure-events", action="store_true",
+                    help="run the fault-tolerance arc instead: rail "
+                         "blackout -> detect -> reroute -> hot re-bind "
+                         "-> recover (results/STRESS_failover.json)")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="failure-events soak length (default 10)")
     ap.add_argument("--out", default=None,
                     help="result JSON path (default "
                          "results/STRESS_soak.json)")
     ap.add_argument("--metrics-port", type=int, default=0,
                     help="exporter port the soak scrapes (0 = ephemeral)")
     args = ap.parse_args(argv)
+    if args.failure_events:
+        result = run_failure_soak(
+            fabric=args.fabric, epochs=args.epochs or 10,
+            noise=args.noise, seed=args.seed,
+            detect_within=args.detect_within, out_path=args.out,
+            port=args.metrics_port)
+        return 0 if result["ok"] else 1
     epochs = (6 if args.smoke
               else max(4, int(args.hours * 60 / args.epoch_minutes)))
     result = run_soak(fabric=args.fabric, epochs=epochs,

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,16 +33,33 @@ class ServeConfig:
     cache_dtype: object = jnp.bfloat16
 
 
+@dataclasses.dataclass
+class _ServeLowering:
+    """Traced-lowering artifact of one ExecutionPlan: the jitted
+    prefill/decode pair whose MoE layers consumed exactly that plan's
+    decisions at trace time, plus the bound context they read them
+    from."""
+    pctx: object
+    model: object
+    prefill: Callable
+    decode: Callable
+
+
 class ServeEngine:
     def __init__(self, model, params, cfg: ServeConfig = ServeConfig(),
-                 pctx=None, fabric=None, calibration=None, monitor=None):
+                 pctx=None, fabric=None, calibration=None, monitor=None,
+                 model_builder=None):
         """``fabric``: optional fabric spec/name (see
         ``core.topology.get_fabric``) the planner scores against instead
         of the mesh-derived shape — the serving side of ``--fabric``.
         ``calibration``: optional telemetry CalibrationStore (or path):
         planner decisions are scored under the store's fitted hardware
         model.  ``monitor``: optional telemetry DriftMonitor whose
-        predicted-vs-measured state ``plan_report`` surfaces."""
+        predicted-vs-measured state ``plan_report`` surfaces.
+        ``model_builder``: optional ``pctx -> Model`` rebuilding the
+        model functions against a re-bound context (defaults to
+        ``models.api.build_model`` on the same config) — what
+        :meth:`rebind` traces when a replan swaps in."""
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -60,10 +77,54 @@ class ServeEngine:
             pctx = _dc.replace(pctx, **repl)
         self.pctx = pctx
         self.monitor = monitor
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode, donate_argnums=(2,))
+        self._model_builder = model_builder
+        from repro.parallel.context import PlanBinder
+        initial = pctx.execution_plan if pctx is not None else None
+        self._binder = PlanBinder(self._trace_plan, plan=initial)
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
         self._stale_warned = False
+
+    # -- hot plan re-bind -----------------------------------------------------
+    def _trace_plan(self, plan) -> _ServeLowering:
+        """PlanBinder trace_fn: (re)build + jit the phase functions under
+        ``plan``.  The initial bind reuses the already-constructed model
+        (serve.py binds the plan before building it, so its closures
+        consumed exactly this plan); a re-bind constructs fresh model
+        closures over the newly-bound context so the next trace reads
+        the new decisions."""
+        base_plan = self.pctx.execution_plan if self.pctx is not None \
+            else None
+        if plan is base_plan or self.pctx is None:
+            pctx, model = self.pctx, self.model
+        else:
+            pctx = self.pctx.bind(plan)
+            if self._model_builder is not None:
+                model = self._model_builder(pctx)
+            else:
+                from repro.models.api import build_model
+                model = build_model(self.model.cfg, pctx)
+        return _ServeLowering(
+            pctx=pctx, model=model, prefill=jax.jit(model.prefill),
+            decode=jax.jit(model.decode, donate_argnums=(2,)))
+
+    def rebind(self, plan) -> bool:
+        """Stage ``plan`` (e.g. a failover replan from the drift
+        monitor) for hot re-bind: its lowering is built NOW, off the
+        request path, and swapped in atomically at the next
+        :meth:`generate` entry.  Returns True when a swap is pending."""
+        return self._binder.stage(plan)
+
+    @property
+    def plan_binder(self):
+        return self._binder
+
+    @property
+    def _prefill(self):
+        return self._binder.artifact.prefill
+
+    @property
+    def _decode(self):
+        return self._binder.artifact.decode
 
     def serving_program(self, batch: int, prompt_len: int):
         """The declared collective program of this serving shape: both
@@ -89,7 +150,9 @@ class ServeEngine:
         calibration."""
         if self.pctx is None:
             return None
-        bound = self.pctx.execution_plan
+        # the binder's ACTIVE plan (post-swap) supersedes the context's
+        # construction-time binding once a hot re-bind has landed
+        bound = self._binder.plan or self.pctx.execution_plan
         if bound is not None:
             return bound
         program = self.serving_program(batch, prompt_len)
@@ -119,16 +182,27 @@ class ServeEngine:
             stale = self.pctx.bound_plan_stale()
             if stale is not None:
                 out["stale"] = stale
-                if stale and not self._stale_warned:
-                    self._stale_warned = True
-                    _metrics()["repro_plan_stale_total"].inc(
-                        program=eplan.program.name,
-                        fingerprint=eplan.fingerprint)
-                    print(f"WARNING: bound ExecutionPlan "
-                          f"{eplan.fingerprint} is stale — a replan "
-                          f"chose different decisions for this program; "
-                          f"serving continues on the old plan until "
-                          f"re-bind/re-trace")
+                if stale:
+                    # hot re-bind instead of the old warn-and-limp flow:
+                    # when the drift monitor retargeted this program
+                    # (failover/failback), stage its replacement plan —
+                    # the swap lands at the next generate() boundary
+                    staged = None
+                    if self.monitor is not None:
+                        staged = self.monitor.staged_plan(
+                            eplan.program.name)
+                    if staged is not None:
+                        out["restaged"] = self.rebind(staged)
+                    elif not self._stale_warned:
+                        self._stale_warned = True
+                        _metrics()["repro_plan_stale_total"].inc(
+                            program=eplan.program.name,
+                            fingerprint=eplan.fingerprint)
+                        print(f"WARNING: bound ExecutionPlan "
+                              f"{eplan.fingerprint} is stale — a replan "
+                              f"chose different decisions for this "
+                              f"program; serving continues on the old "
+                              f"plan until re-bind/re-trace")
         if eplan.phase_report:
             out["phases"] = {ph: dict(rep)
                              for ph, rep in eplan.phase_report.items()}
@@ -168,10 +242,14 @@ class ServeEngine:
         cfg = self.model.cfg
         b, s = prompts.shape
         max_new = max_new or self.cfg.max_new_tokens
+        # step boundary: a staged re-bind (failover replan) lands here —
+        # pointer swap onto the pre-traced lowering, never mid-decode
+        self._binder.swap_if_pending()
         plans = self.plan_report(b, s)
         if plans:
             self.stats["plans"] = plans
-        cache = self.model.init_cache(b, s + max_new, self.cfg.cache_dtype)
+        model = self._binder.artifact.model
+        cache = model.init_cache(b, s + max_new, self.cfg.cache_dtype)
         t0 = time.monotonic()
         from repro.data.pipeline import batch_for_model
         batch = batch_for_model(

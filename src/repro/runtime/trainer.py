@@ -167,7 +167,7 @@ class Trainer:
                  fault_hook: Optional[Callable[[int], None]] = None,
                  straggler_hook: Optional[Callable[[int, float], None]] = None,
                  step_hook: Optional[Callable[[int, dict], None]] = None,
-                 train_step=None):
+                 train_step=None, plan_binder=None):
         self.model = model
         self.optimizer = optimizer
         self.make_batch = make_batch
@@ -182,6 +182,12 @@ class Trainer:
         self.ckpt = (CheckpointManager(cfg.checkpoint_dir,
                                        keep_last_k=cfg.keep_last_k)
                      if cfg.checkpoint_dir else None)
+        # optional hot plan re-bind: a PlanBinder whose artifact IS the
+        # jitted step function — a failover replan staged mid-run swaps
+        # the step fn at the next step boundary without a cold retrace
+        self.plan_binder = plan_binder
+        if plan_binder is not None and plan_binder.artifact is not None:
+            train_step = plan_binder.artifact
         self.train_step = train_step or make_train_step(model, optimizer,
                                                         donate=False)
         self.metrics_history: list[dict] = []
@@ -221,6 +227,11 @@ class Trainer:
     def run(self) -> list[dict]:
         while int(self.state.step) < self.cfg.total_steps:
             step = int(self.state.step)
+            if self.plan_binder is not None \
+                    and self.plan_binder.swap_if_pending():
+                # staged re-bind lands between steps: the pre-traced
+                # step fn becomes active without stalling this step
+                self.train_step = self.plan_binder.artifact
             batch = self.make_batch(step)
             t0 = time.monotonic()
             for attempt in range(self.cfg.max_retries + 1):

@@ -22,6 +22,7 @@ launch/stress.py soak runs and benchmarks bench_calibration.
 """
 
 from .exporter import MetricsExporter, scrape, write_snapshot
+from .failover import FailureDetector, rail_probe_ledger
 from .fit import (FitResult, calibrated_hw, fit_link_class,
                   fit_link_classes, fit_link_roles, fit_measurements,
                   fit_overlap_eff)
@@ -29,24 +30,27 @@ from .metrics import (METRIC_SPECS, Counter, Gauge, Histogram,
                       MetricsRegistry, default_registry, parse_text,
                       reset_default_registry)
 from .monitor import DriftMonitor, StepAttribution, startup_calibration
-from .probe import (GroundTruth, LiveProbe, SimProbe, default_payloads,
+from .probe import (GroundTruth, LiveProbe, ProbePolicy, ProbeTimeout,
+                    SimProbe, attributed_bottleneck, default_payloads,
                     ledger_class_bytes, ledger_role_bytes, link_class,
-                    link_role, probe_link_directions, probe_record,
-                    probe_sweep)
+                    link_role, measure_safely, probe_link_directions,
+                    probe_record, probe_sweep)
 from .slo import classify, classify_record, classify_records
 from .store import (SCHEMA_VERSION, CalibrationStore, resolve_store,
                     topo_key)
 
 __all__ = [
-    "CalibrationStore", "Counter", "DriftMonitor", "FitResult", "Gauge",
-    "GroundTruth", "Histogram", "LiveProbe", "METRIC_SPECS",
-    "MetricsExporter", "MetricsRegistry", "SCHEMA_VERSION", "SimProbe",
-    "StepAttribution", "calibrated_hw", "classify", "classify_record",
-    "classify_records", "default_payloads", "default_registry",
-    "fit_link_class", "fit_link_classes", "fit_link_roles",
-    "fit_measurements", "fit_overlap_eff", "ledger_class_bytes",
-    "ledger_role_bytes", "link_class", "link_role", "parse_text",
-    "probe_link_directions", "probe_record", "probe_sweep",
+    "CalibrationStore", "Counter", "DriftMonitor", "FailureDetector",
+    "FitResult", "Gauge", "GroundTruth", "Histogram", "LiveProbe",
+    "METRIC_SPECS", "MetricsExporter", "MetricsRegistry", "ProbePolicy",
+    "ProbeTimeout", "SCHEMA_VERSION", "SimProbe", "StepAttribution",
+    "attributed_bottleneck", "calibrated_hw", "classify",
+    "classify_record", "classify_records", "default_payloads",
+    "default_registry", "fit_link_class", "fit_link_classes",
+    "fit_link_roles", "fit_measurements", "fit_overlap_eff",
+    "ledger_class_bytes", "ledger_role_bytes", "link_class", "link_role",
+    "measure_safely", "parse_text", "probe_link_directions",
+    "probe_record", "probe_sweep", "rail_probe_ledger",
     "reset_default_registry", "resolve_store", "scrape",
     "startup_calibration", "topo_key", "write_snapshot",
 ]

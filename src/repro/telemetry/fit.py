@@ -199,9 +199,27 @@ def fit_link_roles(records: Sequence[dict], *,
         records = [r for r in records if is_fit_record(r)]
     roles = sorted({_dominant_role(r) for r in records
                     if r.get("role_bytes")} - {"intra"})
+
+    def inter_roles(rec: dict) -> list:
+        return [k for k, v in rec.get("role_bytes", {}).items()
+                if k != "intra" and v > 0]
+
     out = {}
     for role in roles:
-        fit = fit_link_class(records, role, bytes_field="role_bytes",
+        # a record witnesses a DIRECTED line cleanly only when its
+        # ledger charges that one inter direction (the per-direction
+        # p2p sweep).  A bidirectional record's measured time is set by
+        # whichever direction is truly slower — under asymmetric
+        # degradation that need not be the direction carrying the most
+        # bytes, so such records sit on the WRONG line and poison the
+        # regression (observed: the healthy return direction never
+        # reaches a trusted fit, and recalibration churns every cycle).
+        # When single-direction evidence exists, regress on it alone;
+        # fabrics without direction probes keep the old mixed pool.
+        sole = [r for r in records
+                if _dominant_role(r) == role and len(inter_roles(r)) == 1]
+        pool = sole if sole else records
+        fit = fit_link_class(pool, role, bytes_field="role_bytes",
                              dominant_fn=_dominant_role, **floor_kw)
         if fit is not None:
             out[role] = fit

@@ -432,6 +432,49 @@ METRIC_SPECS = {
         type="gauge", labels=("op", "payload_bucket", "fabric"),
         help="Latest measured/predicted latency ratio per op x payload "
              "cell (the quantity the SLO bands cut)."),
+    # -- fault tolerance -----------------------------------------------------
+    "repro_probe_failures_total": dict(
+        type="counter", labels=("reason", "fabric"),
+        help="Probe attempts that failed after exhausting the retry "
+             "policy (reason: timeout, error); failed probes produce no "
+             "calibration record instead of crashing the cycle."),
+    "repro_plan_infeasible_total": dict(
+        type="counter", labels=("op", "fabric"),
+        help="Plan candidates masked as infeasible under the topology's "
+             "FailureState (ledger charges a dead link, or the plan's "
+             "relay engine is dead) during a planner sweep."),
+    "repro_failures_detected_total": dict(
+        type="counter", labels=("fabric", "kind"),
+        help="Fault declarations by the failure detector (kind: link) "
+             "after K consecutive probe timeouts on the same target."),
+    "repro_failures_recovered_total": dict(
+        type="counter", labels=("fabric", "kind"),
+        help="Fault revivals by the failure detector: a previously-dead "
+             "target answered a probe again."),
+    "repro_failed_links": dict(
+        type="gauge", labels=("fabric",),
+        help="Directed links currently declared dead by the failure "
+             "detector."),
+    "repro_plan_rebind_total": dict(
+        type="counter", labels=("program", "fingerprint"),
+        help="Hot plan re-binds: a staged ExecutionPlan swapped in at a "
+             "step boundary by the double-buffered binder."),
+    "repro_rebind_cold_retrace_total": dict(
+        type="counter", labels=("program",),
+        help="Re-bind swaps that had to build their traced lowering AT "
+             "the swap point (the pending artifact was missing) — the "
+             "cold retrace the double-buffered binder exists to avoid; "
+             "should stay 0."),
+    "repro_lowering_cache_hits_total": dict(
+        type="counter", labels=("program",),
+        help="Traced-lowering cache hits keyed on plan fingerprint: a "
+             "staged plan reused an existing lowering (e.g. recovery "
+             "flipping back to the pre-failure plan) with no retrace."),
+    "repro_lowering_cache_misses_total": dict(
+        type="counter", labels=("program",),
+        help="Traced-lowering cache misses: a staged plan's lowering was "
+             "built fresh, off the step path (double-buffered, not a "
+             "cold retrace)."),
 }
 
 

@@ -52,9 +52,13 @@ class DriftMonitor:
                  topo: Topology, *, threshold: float = 0.25,
                  window: int = 32, min_observations: int = 3,
                  cooldown: int = 1,
-                 base_hw: Optional[HardwareModel] = None) -> None:
+                 base_hw: Optional[HardwareModel] = None,
+                 detector=None) -> None:
         self.planner = planner
         self.store = store
+        # base_topo stays the healthy fabric; topo is the EFFECTIVE one
+        # (base with the detector's declared failures applied)
+        self.base_topo = topo
         self.topo = topo
         self.threshold = float(threshold)
         self.window = int(window)
@@ -63,6 +67,7 @@ class DriftMonitor:
         # fits always start from the pristine base so repeated
         # recalibrations replace (never compound) earlier overrides
         self.base_hw = base_hw or planner.hw
+        self.detector = detector    # Optional[failover.FailureDetector]
         self._errs: dict[str, deque] = {}
         self.events: list[dict] = []
         self.checks = 0
@@ -175,6 +180,42 @@ class DriftMonitor:
             time.perf_counter() - t_start, fabric=self.topo.name)
         return event
 
+    def apply_failures(self, failures) -> Optional[dict]:
+        """Recompute the effective topology from the healthy base plus
+        ``failures`` (a :class:`~repro.core.topology.FailureState`) and
+        RETARGET every registered program onto it — the reaction half of
+        the fault-tolerance arc.  Returns a ``failover``/``failback``
+        event (with per-program replan results, including a typed
+        ``NoFeasiblePlanError`` for unplannable programs), or None when
+        the effective fabric is unchanged."""
+        new_topo = self.base_topo.with_failures(failures)
+        if new_topo.fingerprint() == self.topo.fingerprint():
+            return None
+        old_topo = self.topo
+        self.topo = new_topo
+        retargets = self.planner.retarget_programs(old_topo, new_topo)
+        event = {
+            "kind": "failover" if failures else "failback",
+            "time": time.time(),
+            "check": self.checks,
+            "fabric": topo_key(new_topo),
+            "dead_links": sorted(failures.dead_links),
+            "dead_relays": sorted(failures.dead_relays),
+            "lost_npus": sorted(failures.lost_npus),
+            "programs": [{"program": e["program"],
+                          "fingerprint": e["fingerprint"],
+                          "changed": e["changed"],
+                          "error": str(e["error"]) if e.get("error")
+                          else None}
+                         for e in retargets],
+            "plans": {e["program"]: e["plan"] for e in retargets},
+        }
+        self.events.append(event)
+        # predictions are judged against the new fabric from here on
+        for dq in self._errs.values():
+            dq.clear()
+        return event
+
     def replanned(self, program_name: str):
         """Latest replanned ExecutionPlan for ``program_name`` (from the
         planner's program registry), or None — what a launch surface
@@ -209,7 +250,14 @@ class DriftMonitor:
         event if one fired.  ``directions=False`` skips the per-direction
         p2p probes (they exist so never-bottlenecking rail directions —
         asymmetric forward rails — get fitted instead of staying
-        nominal)."""
+        nominal).  With a failure ``detector`` attached, every cycle
+        starts with a rail scan against the HEALTHY base fabric (the
+        only place a dead rail's recovery is visible) and a change in
+        the declared fault set retargets all programs via
+        :meth:`apply_failures` before the calibration probes run on the
+        surviving capacity graph."""
+        if self.detector is not None and self.detector.scan(executor):
+            self.apply_failures(self.detector.failures())
         records = probe_sweep(self.topo, executor, ops=ops,
                               payloads=payloads, hw=self.planner.hw,
                               **scenario_kw)
@@ -224,10 +272,34 @@ class DriftMonitor:
     # -- reporting (ServeEngine.plan_report / train logs) --------------------
     @property
     def last_recalibration(self) -> Optional[dict]:
-        return self.events[-1] if self.events else None
+        # events interleave recalibrations with failover/failback; the
+        # last RECAL is the one carrying drift/fit fields
+        for e in reversed(self.events):
+            if "drift" in e:
+                return e
+        return None
+
+    @property
+    def last_failover(self) -> Optional[dict]:
+        for e in reversed(self.events):
+            if e.get("kind") in ("failover", "failback"):
+                return e
+        return None
+
+    def staged_plan(self, program_name: str):
+        """The most recent retargeted plan for ``program_name`` from a
+        failover/failback event, if any — what a serving engine stages
+        for hot re-bind when its bound plan goes stale."""
+        for e in reversed(self.events):
+            plan = e.get("plans", {}).get(program_name)
+            if plan is not None:
+                return plan
+        return None
 
     def report(self) -> dict:
         last = self.last_recalibration
+        fail = self.last_failover
+        recals = sum(1 for e in self.events if "drift" in e)
         return {
             "drift_pct": round(100.0 * self.drift(), 2),
             "drift_by_op_pct": {op: round(100.0 * v, 2)
@@ -235,11 +307,16 @@ class DriftMonitor:
             "observations": self._n_observations(),
             "checks": self.checks,
             "threshold_pct": 100.0 * self.threshold,
-            "recalibrations": len(self.events),
+            "recalibrations": recals,
             "last_recalibration": (
                 None if last is None else
                 {k: last[k] for k in ("check", "drift", "fits",
                                       "measured_links", "n_records")}),
+            "last_failover": (
+                None if fail is None else
+                {k: fail[k] for k in ("kind", "check", "fabric",
+                                      "dead_links", "dead_relays",
+                                      "lost_npus")}),
             "store_records": len(self.store),
         }
 

@@ -24,6 +24,7 @@ regresses against.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Mapping, Optional, Sequence
 
@@ -41,6 +42,78 @@ from .store import SCHEMA_VERSION, topo_key
 ALLGATHER_SWEEP = (256 << 10, 1 << 20, 4 << 20, 16 << 20, 64 << 20)
 DISPATCH_BATCH_SWEEP = (32, 128, 512, 2048)
 DEFAULT_OPS = ("allgather", "dispatch", "combine")
+
+
+class ProbeTimeout(RuntimeError):
+    """A probe attempt exceeded its deadline (live) or targeted a link
+    the ground truth has blacked out (sim) — the fabric-side signal the
+    failure detector turns into dead-link declarations."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbePolicy:
+    """Bounded-retry policy for one probe attempt.
+
+    A probe that times out (or crashes) is retried up to ``retries``
+    times with exponential backoff — ``backoff_s * backoff_mult**k``,
+    jittered by ±``jitter`` fraction so a fleet of probers never
+    synchronizes its retry storms.  ``timeout_s`` is the per-attempt
+    soft deadline enforced by :class:`LiveProbe` wall clocks (``None``
+    disables it; :class:`SimProbe` timeouts are truth-driven instead).
+    ``sleep`` is injectable so tests and the sim harness never actually
+    wait.
+    """
+
+    timeout_s: Optional[float] = None
+    retries: int = 2
+    backoff_s: float = 0.02
+    backoff_mult: float = 2.0
+    jitter: float = 0.25
+    sleep: object = time.sleep
+
+    def delays(self):
+        rng = np.random.default_rng()
+        for k in range(max(0, self.retries)):
+            d = self.backoff_s * self.backoff_mult ** k
+            if self.jitter:
+                d *= 1.0 + self.jitter * float(rng.uniform(-1.0, 1.0))
+            yield d
+
+    def run(self, fn):
+        """``fn()`` with bounded retry; re-raises the final failure."""
+        last = None
+        for delay in itertools.chain(self.delays(), (None,)):
+            try:
+                return fn()
+            except Exception as e:           # noqa: BLE001 — policy layer
+                last = e
+                if delay is None:
+                    raise
+                self.sleep(delay)
+        raise last  # pragma: no cover — unreachable
+
+
+DEFAULT_POLICY = ProbePolicy()
+
+
+def measure_safely(executor, op: str, plan_name: str, payload_bytes: float,
+                   topo: Topology, *, policy: ProbePolicy = DEFAULT_POLICY,
+                   **measure_kw) -> Optional[float]:
+    """One probe measurement under the retry policy; ``None`` (plus a
+    ``repro_probe_failures_total{reason}`` increment) when every attempt
+    failed, so a dark rail or a crashing lowering skips ONE record
+    instead of killing the whole calibration cycle."""
+    try:
+        return policy.run(lambda: executor.measure(
+            op, plan_name, payload_bytes, topo, **measure_kw))
+    except ProbeTimeout:
+        reason = "timeout"
+    except Exception:                        # noqa: BLE001 — harden the cycle
+        reason = "error"
+    from . import metrics as _metrics
+    _metrics.default_registry()["repro_probe_failures_total"].inc(
+        reason=reason, fabric=topo.name)
+    return None
 
 
 def default_payloads(op: str, token_bytes: int = 7168) -> tuple:
@@ -103,14 +176,18 @@ class GroundTruth:
 
     ``link_bw`` overrides true per-link bandwidths (sorted tuple, like
     ``HardwareModel.link_bw``); ``noise`` is a lognormal sigma applied to
-    every measurement (run-to-run jitter).  The planner never sees this
-    object — only the probe's measured times.
+    every measurement (run-to-run jitter); ``dead_links`` are directed
+    links that are ACTUALLY dark — any probe whose ledger charges one
+    times out (:class:`ProbeTimeout`) instead of returning a number,
+    exactly what a blacked-out rail does to a live prober.  The planner
+    never sees this object — only the probe's measured times.
     """
 
     hw: HardwareModel = DEFAULT
     link_bw: tuple = ()
     noise: float = 0.0
     seed: int = 0
+    dead_links: tuple = ()
 
     def true_hw(self) -> HardwareModel:
         if not self.link_bw:
@@ -135,6 +212,13 @@ class GroundTruth:
                 links[key] = cur.get(key, ln.bw) / float(factor)
         return self.with_links(links)
 
+    def with_dead(self, links) -> "GroundTruth":
+        """Truth with ``links`` (directed ``(src, dst)`` pairs) fully
+        dark — the scripted rail blackout of the failure-events soak."""
+        dead = set(self.dead_links)
+        dead.update((int(a), int(b)) for a, b in links)
+        return dataclasses.replace(self, dead_links=tuple(sorted(dead)))
+
 
 class SimProbe:
     """Simulation executor: scores the plan's ledger under the ground
@@ -154,6 +238,13 @@ class SimProbe:
             plan = plan_ir.get_plan(op, plan_name)
             scenario = Planner._scenario(op, topo, scenario_kw)
             ledger = plan.simulate(scenario, payload_bytes, **(knobs or {}))
+        if self.truth.dead_links:
+            dead = set(self.truth.dead_links)
+            for key in ledger.link_bytes:
+                if key in dead:
+                    raise ProbeTimeout(
+                        f"{op}/{plan_name} probe crossed dark link "
+                        f"{key[0]}->{key[1]}")
         t = score_ledger(ledger, self.truth.true_hw())
         if self.truth.noise:
             t *= float(np.exp(self._rng.normal(0.0, self.truth.noise)))
@@ -179,23 +270,39 @@ class LiveProbe:
 
     def __init__(self, mesh, *, axis_name: str = "model",
                  ep_axis: str = "data", pod_axis: Optional[str] = None,
-                 repeats: int = 3, warmup: int = 1) -> None:
+                 repeats: int = 3, warmup: int = 1,
+                 timeout_s: Optional[float] = None) -> None:
         self.mesh = mesh
         self.axis_name = axis_name
         self.ep_axis = ep_axis
         self.pod_axis = pod_axis
         self.repeats = int(repeats)
         self.warmup = int(warmup)
+        self.timeout_s = timeout_s
 
     def _time(self, fn, *args) -> float:
+        """min-of-repeats blocked wall clock, under the soft per-probe
+        deadline: a blocked call cannot be interrupted mid-flight, so a
+        hung collective is detected as soon as it RETURNS past the
+        deadline (or as soon as the warmup run blows it) and surfaces as
+        :class:`ProbeTimeout` for the retry policy / failure detector
+        instead of silently poisoning the calibration store."""
         import jax
+
+        def timed(run_fn) -> float:
+            t0 = time.monotonic()
+            jax.block_until_ready(run_fn())
+            dt = time.monotonic() - t0
+            if self.timeout_s is not None and dt > self.timeout_s:
+                raise ProbeTimeout(
+                    f"probe took {dt:.3f}s > deadline {self.timeout_s:.3f}s")
+            return dt
+
         for _ in range(max(1, self.warmup)):
-            jax.block_until_ready(fn(*args))
+            timed(lambda: fn(*args))
         best = float("inf")
         for _ in range(max(1, self.repeats)):
-            t0 = time.monotonic()
-            jax.block_until_ready(fn(*args))
-            best = min(best, time.monotonic() - t0)
+            best = min(best, timed(lambda: fn(*args)))
         return best
 
     def measure(self, op: str, plan_name: str, payload_bytes: float,
@@ -237,6 +344,12 @@ class LiveProbe:
         if per < 1 or src == dst and n_servers > 1:
             dst = (src + 1) % n_servers
         perm = [(src * per + i, dst * per + i) for i in range(max(1, per))]
+        if "src_node" in scenario_kw and "dst_node" in scenario_kw:
+            # single-rail probe (the failure detector's granularity):
+            # exactly one ordered rank pair carries traffic
+            total = n_servers * max(1, per)
+            perm = [(int(scenario_kw["src_node"]) % total,
+                     int(scenario_kw["dst_node"]) % total)]
         feat = 64
         rows = max(1, int(payload_bytes) // (4 * feat))
         n = int(np.prod([self.mesh.shape[a] for a in (axis,)]))
@@ -343,13 +456,43 @@ class LiveProbe:
 # the sweep
 # ---------------------------------------------------------------------------
 
+def attributed_bottleneck(ledger: plan_ir.Ledger,
+                          hw: Optional[HardwareModel]) -> tuple[int, int]:
+    """Bottleneck link of a ledger under the MEASURED per-link
+    bandwidths (``hw.link_bw``), falling back to the topology's nominal
+    ones where no measurement exists.
+
+    This is the per-role fit-attribution fix (ROADMAP): under a
+    single-direction degradation the nominal-bandwidth argmax ties
+    between the two rail directions and can attribute a slow-direction
+    record to the healthy reverse role, dragging BOTH role fits down and
+    re-tripping drift every cycle.  Attributing under the fitted model
+    (available from the first recalibration on) pins the record to the
+    direction that actually bottlenecked it, so the churn stops after
+    one recalibration.  Ties break toward the smaller link key for
+    determinism."""
+    measured = dict(hw.link_bw) if hw is not None and hw.link_bw else {}
+    best_key, best_t = None, -1.0
+    for key, nbytes in sorted(ledger.link_bytes.items()):
+        bw = measured.get(key, ledger.topo.link(*key).bw)
+        t = nbytes / bw
+        if t > best_t:
+            best_key, best_t = key, t
+    return best_key
+
+
 def probe_record(op: str, plan: plan_ir.CollectivePlan, payload_bytes: float,
                  topo: Topology, measured_s: float, predicted_s: float,
                  ledger: plan_ir.Ledger, source: str,
-                 knobs: Optional[dict] = None) -> dict:
-    """One schema-versioned store record for a timed plan execution."""
+                 knobs: Optional[dict] = None,
+                 hw: Optional[HardwareModel] = None) -> dict:
+    """One schema-versioned store record for a timed plan execution.
+    Pass the planner's current ``hw`` so the bottleneck class/role is
+    attributed under measured link bandwidths (see
+    :func:`attributed_bottleneck`); without it attribution falls back to
+    the topology's nominal bandwidths."""
     cls_bytes = ledger_class_bytes(ledger)
-    (bsrc, bdst), bbytes = ledger.bottleneck_link
+    bsrc, bdst = attributed_bottleneck(ledger, hw)
     return {
         "schema": SCHEMA_VERSION,
         "ts": time.time(),
@@ -379,13 +522,16 @@ def probe_sweep(topo: Topology, executor, *,
                 payloads: Optional[Mapping[str, Sequence[float]]] = None,
                 hw: HardwareModel = DEFAULT,
                 token_bytes: int = 7168,
+                policy: ProbePolicy = DEFAULT_POLICY,
                 **scenario_kw) -> list[dict]:
     """Time every registered plan of every op over a payload sweep.
 
     ``hw`` is the calibration the PREDICTED times are scored under (pass
     the planner's current model so record drift reflects model error);
-    the executor supplies the measured side.  Returns store-ready
-    records.
+    the executor supplies the measured side.  Probes run under
+    ``policy`` (bounded retry + backoff): a probe that still fails is
+    counted and SKIPPED — no record — so a dark rail never crashes the
+    cycle or poisons the store.  Returns store-ready records.
     """
     records: list[dict] = []
     kw = dict(scenario_kw)
@@ -403,12 +549,14 @@ def probe_sweep(topo: Topology, executor, *,
             for payload in sweep:
                 ledger = plan.simulate(scenario, payload, **knobs)
                 predicted = score_ledger(ledger, hw)
-                measured = executor.measure(
-                    op, plan.name, payload, topo, ledger=ledger,
-                    knobs=knobs, **kw)
+                measured = measure_safely(
+                    executor, op, plan.name, payload, topo, policy=policy,
+                    ledger=ledger, knobs=knobs, **kw)
+                if measured is None:
+                    continue
                 records.append(probe_record(
                     op, plan, payload, topo, measured, predicted, ledger,
-                    getattr(executor, "source", "unknown"), knobs))
+                    getattr(executor, "source", "unknown"), knobs, hw=hw))
     return records
 
 
@@ -419,7 +567,8 @@ DIRECTION_SWEEP = (256 << 10, 1 << 20, 4 << 20, 16 << 20)
 
 def probe_link_directions(topo: Topology, executor, *,
                           payloads: Sequence[float] = DIRECTION_SWEEP,
-                          hw: HardwareModel = DEFAULT) -> list[dict]:
+                          hw: HardwareModel = DEFAULT,
+                          policy: ProbePolicy = DEFAULT_POLICY) -> list[dict]:
     """Directed point-to-point microbenchmark of every ordered server
     pair that has rails (the "linkprobe"/"p2p" plan).
 
@@ -439,10 +588,12 @@ def probe_link_directions(topo: Topology, executor, *,
         for payload in payloads:
             ledger = plan.simulate(scenario, payload)
             predicted = score_ledger(ledger, hw)
-            measured = executor.measure(
-                "linkprobe", "p2p", payload, topo, ledger=ledger,
-                knobs={}, src_server=sa, dst_server=sb)
+            measured = measure_safely(
+                executor, "linkprobe", "p2p", payload, topo, policy=policy,
+                ledger=ledger, knobs={}, src_server=sa, dst_server=sb)
+            if measured is None:
+                continue
             records.append(probe_record(
                 "linkprobe", plan, payload, topo, measured, predicted,
-                ledger, getattr(executor, "source", "unknown"), {}))
+                ledger, getattr(executor, "source", "unknown"), {}, hw=hw))
     return records

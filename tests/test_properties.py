@@ -391,3 +391,40 @@ class TestContentionProperties:
         oracle_s = oracle.phase_report["train"]["score_s"]
         assert oracle_s <= beam_s + 1e-12
         assert beam_s == pytest.approx(oracle_s, rel=1e-9)
+
+
+class TestFailoverProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(spec=cluster_specs(), nbytes=st.integers(1024, 2 ** 24),
+           seed=st.integers(0, 999), frac=st.floats(0.0, 0.9))
+    def test_no_surviving_candidate_charges_a_dead_link(
+            self, spec, nbytes, seed, frac):
+        """On ANY fabric x ANY dead-rail subset, the planner either
+        raises the typed NoFeasiblePlanError or every surviving
+        candidate's ledger avoids the dead links entirely — feasibility
+        masking admits no middle ground."""
+        import random
+
+        from repro.core import planner as pl
+        from repro.core.topology import FailureState
+
+        topo = spec.build()
+        rails = sorted(k for k in topo.links
+                       if topo.server_of(k[0]) != topo.server_of(k[1]))
+        rng = random.Random(seed)
+        dead = set(rng.sample(rails, int(len(rails) * frac)))
+        failures = FailureState(dead_links=dead)
+        failed = topo.with_failures(failures) if dead else topo
+        planner = pl.Planner()
+        for op in ("dispatch", "allreduce", "reduce_scatter"):
+            scenario = pl.Planner._scenario(op, failed, {})
+            try:
+                rows = planner._site_rows(op, scenario, nbytes,
+                                          planner.hw, True)
+            except pl.NoFeasiblePlanError as e:
+                assert e.op == op
+                assert e.masked    # the typed error names its evidence
+                continue
+            for row in rows:
+                ledger = row[4]
+                assert pl.ledger_infeasible(ledger, failures) is None
