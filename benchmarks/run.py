@@ -1138,6 +1138,194 @@ def bench_failover(smoke: bool = False):
     return rows
 
 
+def bench_serving(smoke: bool = False):
+    """Continuous batching vs static batching under open-loop Poisson
+    traffic, and planner-informed admission vs the crossover-oblivious
+    greedy-admit baseline (ISSUE 10).
+
+    Three schedulers drain the SAME seeded arrival stream per swept
+    rate, in pure virtual-time simulation (planner-predicted step
+    costs, no models, deterministic on CPU):
+
+      * ``static``      — drain-the-batch barrier: nothing is admitted
+        while any cohort is in flight (the pre-PR-10 ``generate`` shape);
+      * ``cont_greedy`` — iteration-level join/exit, admits every ready
+        request, never consults the planner: after the decode batch
+        grows past the bucket its plan was bound for, decode keeps
+        executing the STALE scheme (unicast at a multiwrite-sized
+        payload — exactly what crossover-oblivious admission costs);
+      * ``cont_planner`` — the shipped policy: holds the batch when the
+        planner predicts the grown bucket blows the TPOT SLO, and
+        stages the next bucket's plan through ``PlanBinder`` ahead of
+        admission (pointer-flip growth), escaping to admission under
+        TTFT queue pressure.
+
+    CI gates (also under ``--smoke``):
+      * continuous beats static on p99 TTFT at >= 1 swept rate;
+      * >= 1 swept rate where planner-informed admission held below the
+        scheme crossover (or prefetch-rebound across it) AND beat the
+        greedy baseline on BOTH p99 TTFT and p99 TPOT;
+      * zero cold retraces across every plan swap (the per-run binder
+        counters and the process metric delta).
+    Full mode emits results/BENCH_serving.json.
+    """
+    import json
+    import os
+
+    from repro.core import latency_model as lm
+    from repro.core import plan as plan_ir
+    from repro.core.planner import default_planner
+    from repro.core.topology import get_fabric
+    from repro.parallel.context import PlanBinder
+    from repro.serving import (AdmissionController, BatchScheduler,
+                               PlannerProbe, RequestQueue, TrafficConfig,
+                               TrafficGenerator)
+    from repro.telemetry.metrics import default_registry
+
+    fabric = "2x8"
+    token_bytes = 2 * 7168               # bf16 activations, DeepSeek d_model
+    topo = get_fabric(fabric)
+    planner = default_planner()
+    probe = PlannerProbe(topo, token_bytes=token_bytes)
+    xover = probe.crossover_batch()
+    anchor = int(xover) if xover != float("inf") else 64
+    tpot_slo_s = probe.decode_step_s(anchor) * 1.15
+    ttft_slo_s = 0.08
+    capacity, n_requests, seed = 512, 300, 7
+    rates = (500.0, 8000.0) if smoke else (250.0, 500.0, 1000.0, 2000.0,
+                                           4000.0, 8000.0, 16000.0)
+
+    # decode-phase serve program per batch bucket — what the admission
+    # controller stages through the binder ahead of a bucket crossing
+    bucket_plans = {}
+
+    def plan_for_bucket(bucket):
+        eplan = bucket_plans.get(bucket)
+        if eplan is None:
+            sites = plan_ir.moe_sites(
+                "decode", num_experts=64, top_k=8, tokens_per_rank=bucket,
+                token_bytes=token_bytes,
+                compute_s=lm.expert_compute_time_s(bucket, 8, 7168, 2048))
+            eplan = planner.plan_program(
+                plan_ir.CollectiveProgram("serve", sites), topo, None)
+            bucket_plans[bucket] = eplan
+        return eplan
+
+    reg = default_registry()
+    cold0 = reg["repro_rebind_cold_retrace_total"].value(program="serve")
+
+    def drain(rate, mode):
+        queue = RequestQueue()
+        cfg = TrafficConfig(arrival_rate_rps=rate, num_requests=n_requests,
+                            prompt_lens=(128,), max_news=(16,), seed=seed)
+        for r in TrafficGenerator(cfg).requests():
+            queue.push(r)
+        policy = "planner" if mode == "cont_planner" else "greedy"
+        adm = AdmissionController(
+            probe, capacity=capacity, policy=policy,
+            tpot_slo_s=tpot_slo_s, ttft_slo_s=ttft_slo_s)
+        binder = None
+        pfb = None
+        if mode == "cont_planner":
+            # receipt-artifact binder: the staging/swap path is real
+            # (fingerprint cache, rebind + cold-retrace metrics), only
+            # the lowering is a stub — no models in the simulation
+            binder = PlanBinder(
+                lambda p: {"plan": None if p is None else p.fingerprint},
+                plan=plan_for_bucket(1))
+            pfb = plan_for_bucket
+        sched = BatchScheduler(
+            queue=queue, admission=adm, probe=probe, binder=binder,
+            plan_for_bucket=pfb, static_batching=(mode == "static"))
+        sched.run_until_drained()
+        rep = sched.report(ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+        rep["mode"], rep["rate_rps"] = mode, rate
+        return rep
+
+    table, rows, failures = [], [], []
+    for rate in rates:
+        cell = {m: drain(rate, m)
+                for m in ("static", "cont_greedy", "cont_planner")}
+        table.extend(cell.values())
+        pl, gr, st = (cell["cont_planner"], cell["cont_greedy"],
+                      cell["static"])
+        print(f"serving rate={rate:7.0f}/s  "
+              f"static p99ttft={st['ttft_p99_s'] * 1e3:8.2f}ms  "
+              f"greedy p99ttft={gr['ttft_p99_s'] * 1e3:8.2f}ms "
+              f"p99tpot={gr['tpot_p99_s'] * 1e6:8.1f}us  "
+              f"planner p99ttft={pl['ttft_p99_s'] * 1e3:8.2f}ms "
+              f"p99tpot={pl['tpot_p99_s'] * 1e6:8.1f}us  "
+              f"holds={pl['admission_holds']} "
+              f"prefetch={pl['prefetch_rebinds']} "
+              f"goodput={pl['goodput_rps']:.0f}/s")
+        rows.append({"name": f"serving_r{rate:.0f}_planner_p99_ttft",
+                     "metric": "ms", "value": pl["ttft_p99_s"] * 1e3})
+        rows.append({"name": f"serving_r{rate:.0f}_planner_p99_tpot",
+                     "metric": "us", "value": pl["tpot_p99_s"] * 1e6})
+        rows.append({"name": f"serving_r{rate:.0f}_greedy_p99_ttft",
+                     "metric": "ms", "value": gr["ttft_p99_s"] * 1e3})
+        rows.append({"name": f"serving_r{rate:.0f}_static_p99_ttft",
+                     "metric": "ms", "value": st["ttft_p99_s"] * 1e3})
+
+    # gate 1: continuous beats static on p99 TTFT somewhere
+    cont_wins = [r for r in table if r["mode"] == "cont_planner" and
+                 r["ttft_p99_s"] < next(
+                     s["ttft_p99_s"] for s in table
+                     if s["mode"] == "static" and
+                     s["rate_rps"] == r["rate_rps"])]
+    if not cont_wins:
+        failures.append("continuous batching never beat static on p99 "
+                        "TTFT at any swept rate")
+    # gate 2: planner-informed admission engaged AND beat greedy
+    informed_wins = []
+    for rate in rates:
+        pl = next(r for r in table if r["mode"] == "cont_planner" and
+                  r["rate_rps"] == rate)
+        gr = next(r for r in table if r["mode"] == "cont_greedy" and
+                  r["rate_rps"] == rate)
+        engaged = pl["admission_holds"] > 0 or pl["prefetch_rebinds"] > 0
+        if engaged and pl["ttft_p99_s"] < gr["ttft_p99_s"] and \
+                pl["tpot_p99_s"] < gr["tpot_p99_s"]:
+            informed_wins.append(rate)
+    if not informed_wins:
+        failures.append(
+            "planner-informed admission never simultaneously engaged "
+            "(hold below crossover / prefetch-rebind across it) and beat "
+            "greedy-admit on p99 TTFT + TPOT")
+    # gate 3: every plan swap was warm
+    for r in table:
+        if r.get("cold_retraces"):
+            failures.append(f"{r['mode']}@{r['rate_rps']}: "
+                            f"{r['cold_retraces']} cold retraces")
+    cold_delta = reg["repro_rebind_cold_retrace_total"].value(
+        program="serve") - cold0
+    if cold_delta:
+        failures.append(f"repro_rebind_cold_retrace_total grew by "
+                        f"{cold_delta} during the sweep")
+
+    for f in failures:
+        print(f"SERVING GATE FAIL: {f}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+    if not smoke:
+        out = {"run_meta": run_metadata(fabric),
+               "token_bytes": token_bytes,
+               "crossover_batch": xover,
+               "tpot_slo_us": tpot_slo_s * 1e6,
+               "ttft_slo_ms": ttft_slo_s * 1e3,
+               "capacity": capacity, "num_requests": n_requests,
+               "informed_win_rates": informed_wins,
+               "cells": table}
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_serving.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
+    return rows
+
+
 MICRO_BENCHES = {
     "bench_planner": lambda smoke: bench_planner(),
     "bench_failover": bench_failover,
@@ -1147,6 +1335,7 @@ MICRO_BENCHES = {
     "bench_program": bench_program,
     "bench_allreduce": bench_allreduce,
     "bench_contention": bench_contention,
+    "bench_serving": bench_serving,
     "bench_kernels": lambda smoke: bench_kernels(),
     "bench_dispatch_sim": lambda smoke: bench_dispatch_sim(),
     "bench_train_throughput": lambda smoke: bench_train_throughput(),

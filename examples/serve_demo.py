@@ -39,10 +39,55 @@ def demo(arch: str, max_new: int = 16):
     return out
 
 
+def demo_continuous(arch: str = "rwkv6_7b", max_new: int = 12):
+    """Continuous batching against the live engine: requests arrive
+    staggered, join as cohorts between decode steps while earlier
+    cohorts are still decoding, and finished sequences exit without a
+    drain barrier — bit-exact with the one-shot batched generate
+    (cohort rows are numerically independent under greedy decoding)."""
+    from repro.serving import (AdmissionController, BatchScheduler,
+                               Request, RequestQueue)
+
+    cfg = get_config(arch).reduced(n_layers=4, d_model=128, n_heads=4,
+                                   d_ff=256, vocab=1024)
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params,
+                         ServeConfig(max_new_tokens=max_new,
+                                     temperature=0.0))
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab, size=(6, 32)).astype(np.int32)
+    ref = engine.generate(prompts)          # one-shot: one cohort at t=0
+
+    queue = RequestQueue()
+    for i in range(prompts.shape[0]):
+        queue.push(Request(rid=i, arrival_s=0.003 * i,
+                           prompt=prompts[i], max_new=max_new))
+    sched = BatchScheduler(
+        queue=queue,
+        # capacity 3 forces several cohorts: later requests join while
+        # earlier cohorts still hold decode slots
+        admission=AdmissionController(capacity=3, policy="greedy"),
+        engine=engine, eos_id=engine.cfg.eos_id, seed=0)
+    sched.run_until_drained()
+    out = np.zeros_like(ref)
+    for req in sched.completed:
+        toks = req.tokens[:max_new]
+        out[req.rid, :len(toks)] = toks
+    assert (out == ref).all(), "continuous batching diverged from one-shot"
+    rep = sched.report()
+    print(f"{arch:24s} continuous: {rep['completed']} request(s), "
+          f"{rep['iterations']} iteration(s), max in-flight "
+          f"{rep['max_in_flight']} (capacity 3), TTFT p99 "
+          f"{rep['ttft_p99_s'] * 1e3:.1f}ms — bit-exact vs one-shot")
+
+
 def main():
     for arch in ("mistral_nemo_12b", "gemma2_9b", "rwkv6_7b", "zamba2_7b"):
         demo(arch)
-    print("OK — all families serve deterministically.")
+    demo_continuous()
+    print("OK — all families serve deterministically; continuous "
+          "batching is bit-exact with one-shot generate.")
 
 
 if __name__ == "__main__":

@@ -58,6 +58,17 @@ def bucket_payload(payload_bytes: float) -> int:
     return 1 << int(math.ceil(math.log2(float(payload_bytes))))
 
 
+def batch_bucket(batch: int) -> int:
+    """Power-of-two decode-batch bucket — the serving tier's admission
+    granularity.  Batch-bucket plans are planned and prefetched at these
+    sizes, so growing the decode batch WITHIN a bucket never re-plans
+    and growing it ACROSS a bucket boundary is a staged
+    ``PlanBinder`` pointer flip rather than a cold retrace."""
+    if batch <= 1:
+        return 1
+    return 1 << int(math.ceil(math.log2(float(batch))))
+
+
 def bucket_compute_s(compute_s: float) -> float:
     """Power-of-two bucket (in nanoseconds) for the overlap-context
     compute time, mirroring :func:`bucket_payload`: nearby compute

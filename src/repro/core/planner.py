@@ -1153,3 +1153,16 @@ def emergent_flip_batch(op: str, topo: Topology,
         if d.plan != base:
             return float(batch)
     return math.inf
+
+
+def serve_flip_batches(topo: Topology, token_bytes: int = 7168,
+                       hw: Optional[HardwareModel] = None,
+                       planner: Optional[Planner] = None,
+                       **scenario_kw) -> dict:
+    """Decode-phase scheme-crossover batches per MoE op — what the
+    serving tier's AdmissionController consults before growing the
+    decode batch across a bucket boundary (``inf``: that op's baseline
+    never flips, growth is scheme-neutral)."""
+    return {op: emergent_flip_batch(op, topo, token_bytes=token_bytes,
+                                    hw=hw, planner=planner, **scenario_kw)
+            for op in ("dispatch", "combine")}

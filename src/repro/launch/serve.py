@@ -13,6 +13,52 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def serve_continuous(args, cfg, engine, pctx):
+    """Drain a seeded Poisson arrival stream through the continuous-
+    batching scheduler against the live engine; returns the scheduler
+    report."""
+    from repro.serving import (AdmissionController, BatchScheduler,
+                               PlannerProbe, RequestQueue, TrafficConfig,
+                               TrafficGenerator)
+
+    itemsize = 4 if args.smoke else 2
+    probe = engine.plan_probe(itemsize)
+    if probe is None:
+        # pctx-free host (CPU smoke): the admission controller still
+        # gets a planner oracle, scored on the requested fabric
+        from repro.core.topology import get_fabric
+        probe = PlannerProbe(
+            get_fabric(args.fabric or "2x8"),
+            token_bytes=cfg.d_model * itemsize,
+            num_experts=getattr(cfg, "num_experts", 0) or 64,
+            top_k=getattr(cfg, "top_k", 0) or 8)
+    xover = probe.crossover_batch()
+    anchor = int(xover) if xover != float("inf") else max(1, args.prompts)
+    tpot_slo_s = (args.tpot_slo_us * 1e-6 if args.tpot_slo_us
+                  else probe.decode_step_s(anchor) * 1.15)
+    ttft_slo_s = (args.ttft_slo_us * 1e-6 if args.ttft_slo_us else 0.08)
+    queue = RequestQueue()
+    traffic = TrafficConfig(
+        arrival_rate_rps=args.arrival_rate, num_requests=args.requests,
+        prompt_lens=(args.prompt_len,), max_news=(args.max_new,),
+        vocab=cfg.vocab, seed=args.seed)
+    for req in TrafficGenerator(traffic).requests():
+        queue.push(req)
+    admission = AdmissionController(
+        probe, capacity=args.prompts, policy="planner",
+        tpot_slo_s=tpot_slo_s, ttft_slo_s=ttft_slo_s)
+    sched = BatchScheduler(
+        queue=queue, admission=admission, engine=engine, probe=probe,
+        binder=engine.plan_binder if pctx is not None else None,
+        plan_for_bucket=lambda b: engine.bucket_plan(b, args.prompt_len),
+        eos_id=None, seed=args.seed)
+    sched.run_until_drained()
+    print(f"continuous serving: capacity {args.prompts}, crossover batch "
+          f"{anchor if xover != float('inf') else 'none'}, TPOT SLO "
+          f"{tpot_slo_s * 1e6:.0f}us, TTFT SLO {ttft_slo_s * 1e3:.0f}ms")
+    return sched.report(ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -41,6 +87,29 @@ def main(argv=None):
     ap.add_argument("--calibration-store", default=None,
                     help="calibration JSONL path (default "
                          "results/calibration/calibration.jsonl)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching serving tier: seeded open-"
+                         "loop Poisson arrivals drain through the "
+                         "iteration-level BatchScheduler (finished "
+                         "sequences exit / queued requests join between "
+                         "decode steps) under planner-informed admission, "
+                         "instead of the one-shot batched generate")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="continuous mode: total requests in the arrival "
+                         "stream")
+    ap.add_argument("--arrival-rate", type=float, default=100.0,
+                    help="continuous mode: open-loop Poisson arrival rate "
+                         "(requests/s on the scheduler's virtual clock)")
+    ap.add_argument("--ttft-slo-us", type=float, default=None,
+                    help="continuous mode: time-to-first-token SLO (us) "
+                         "for admission pressure + per-request SLO "
+                         "classes (default 80000)")
+    ap.add_argument("--tpot-slo-us", type=float, default=None,
+                    help="continuous mode: time-per-output-token SLO "
+                         "(us); admission holds the decode batch at the "
+                         "largest size whose planner-predicted step meets "
+                         "this (default: 1.15x the predicted step at the "
+                         "scheme-crossover batch)")
     ap.add_argument("--decode-slo-us", type=float, default=None,
                     help="decode-phase latency budget (us): the planner "
                          "rejects prefill plan combinations whose shared-"
@@ -137,6 +206,25 @@ def main(argv=None):
                          ServeConfig(max_new_tokens=args.max_new,
                                      temperature=args.temperature),
                          pctx=pctx, calibration=store, monitor=monitor)
+    if args.continuous:
+        rep = serve_continuous(args, cfg, engine, pctx)
+        print(f"served {rep['completed']}/{args.requests} request(s) in "
+              f"{rep['iterations']} iteration(s), horizon "
+              f"{rep['horizon_s'] * 1e3:.0f}ms, max in-flight "
+              f"{rep['max_in_flight']}")
+        print(f"TTFT p50/p99 {rep['ttft_p50_s'] * 1e3:.1f}/"
+              f"{rep['ttft_p99_s'] * 1e3:.1f}ms, TPOT p50/p99 "
+              f"{rep['tpot_p50_s'] * 1e6:.0f}/{rep['tpot_p99_s'] * 1e6:.0f}"
+              f"us, queue-wait p99 {rep['queue_wait_p99_s'] * 1e3:.1f}ms")
+        print(f"admission: holds={rep['admission_holds']} "
+              f"rejects={sum(rep['admission_rejects'].values())}; "
+              f"plan prefetches={rep['prefetch_rebinds']} "
+              f"swaps={rep.get('plan_swaps', 0)} "
+              f"cold retraces={rep.get('cold_retraces', 0)}; SLO-good "
+              f"{rep['slo_good']}/{rep['completed']} "
+              f"(goodput {rep['goodput_rps']:.1f}/s)")
+        finish_exporter_from_args(args, exporter)
+        return 0
     prompts = np.random.default_rng(args.seed).integers(
         0, cfg.vocab, size=(args.prompts, args.prompt_len)).astype(np.int32)
     out = engine.generate(prompts, seed=args.seed)

@@ -451,6 +451,33 @@ def run_failure_soak(*, fabric: str = "2x8", epochs: int = 8,
 
     binder = PlanBinder(trace_fn, plan=eplan)
 
+    # live queued traffic rides through the blackout: a seeded open-loop
+    # Poisson stream drains through the continuous-batching scheduler
+    # (virtual clock) WHILE the fault arc runs.  Epochs whose active
+    # plan still charges the dark rail quadruple the virtual step time
+    # (the degraded fabric); the drain must lose nothing.
+    from repro.serving import (AdmissionController, BatchScheduler,
+                               PlannerProbe, RequestQueue, TrafficConfig,
+                               TrafficGenerator)
+    traffic_window_s = 0.25          # virtual serving time per soak epoch
+    n_traffic = 120
+    sprobe = PlannerProbe(topo, token_bytes=TOKEN_BYTES)
+    traffic_tpot_slo = sprobe.decode_step_s(FLIP_BATCH) * 1.15
+    queue = RequestQueue()
+    for req in TrafficGenerator(TrafficConfig(
+            arrival_rate_rps=n_traffic / (0.6 * epochs * traffic_window_s),
+            num_requests=n_traffic, prompt_lens=(128,), max_news=(16,),
+            seed=seed + 77)).requests():
+        queue.push(req)
+    sched = BatchScheduler(
+        queue=queue,
+        admission=AdmissionController(sprobe, capacity=FLIP_BATCH,
+                                      policy="planner",
+                                      tpot_slo_s=traffic_tpot_slo,
+                                      ttft_slo_s=0.08),
+        probe=sprobe)
+    deg_start = deg_end = None
+
     exporter = MetricsExporter(port).start()
     timeline: list[dict] = []
     swap_epochs: list[int] = []
@@ -497,6 +524,15 @@ def run_failure_soak(*, fabric: str = "2x8", epochs: int = 8,
             violations = sorted(
                 role for role, led in ledgers.items()
                 if ledger_infeasible(led, truth_failures) is not None)
+            # serve this epoch's slice of the request stream under the
+            # fabric the active plan actually gets: dark-rail epochs run
+            # at 4x virtual step time until the failover swap lands
+            if violations and deg_start is None:
+                deg_start = sched.now
+            if not violations and deg_start is not None and deg_end is None:
+                deg_end = sched.now
+            sched.step_time_scale = 4.0 if violations else 1.0
+            sched.run_for(traffic_window_s)
             parsed = parse_text(scrape(exporter.url))
             timeline.append({
                 "epoch": epoch,
@@ -509,6 +545,11 @@ def run_failure_soak(*, fabric: str = "2x8", epochs: int = 8,
                 "staged": staged_now,
                 "violations": violations,
                 "recalibrated": recal is not None,
+                "traffic": {"now_s": sched.now,
+                            "completed": len(sched.completed),
+                            "queue_depth": len(queue),
+                            "in_flight": sched.in_flight,
+                            "degraded": bool(violations)},
                 "scrape": {
                     "failed_links": _metric(parsed, "repro_failed_links",
                                             fabric=fabric),
@@ -525,6 +566,13 @@ def run_failure_soak(*, fabric: str = "2x8", epochs: int = 8,
             })
     finally:
         exporter.stop()
+
+    # post-recovery drain: whatever the blackout backed up must finish
+    # on the healthy fabric
+    sched.step_time_scale = 1.0
+    sched.run_until_drained()
+    if deg_start is not None and deg_end is None:
+        deg_end = sched.now
 
     failures_list: list[str] = []
 
@@ -598,19 +646,60 @@ def run_failure_soak(*, fabric: str = "2x8", epochs: int = 8,
         f"monitor events: "
         f"{[e.get('kind') for e in monitor.events]}")
 
+    # 6. traffic: the dark-rail drain loses NOTHING — every arrived
+    #    request is admitted and completes; the degraded window's TTFT
+    #    spike stays bounded by the window itself (no unbounded
+    #    starvation); and after recovery the TTFT tail returns to the
+    #    healthy band
+    from repro.serving.scheduler import _pctl
+    from repro.telemetry.metrics import default_registry
+    reg = default_registry()
+    admitted_m = reg["repro_requests_total"].value(outcome="admitted")
+    completed_m = reg["repro_requests_total"].value(outcome="completed")
+    pre = [r.ttft_s for r in sched.completed
+           if deg_start is None or r.first_token_s < deg_start]
+    # recovery is judged on requests that ARRIVED after the degraded
+    # window closed (first-token timing alone still carries the
+    # blackout backlog's queueing tail)
+    post = [r.ttft_s for r in sched.completed
+            if deg_end is not None and r.arrival_s >= deg_end]
+    pre_p99 = _pctl(pre, 99)
+    post_p99 = _pctl(post, 99)
+    spike = max((r.ttft_s for r in sched.completed), default=0.0)
+    deg_len = ((deg_end - deg_start)
+               if deg_start is not None and deg_end is not None else 0.0)
+    a_traffic = check(
+        "traffic",
+        len(sched.completed) == n_traffic and len(queue) == 0
+        and sched.in_flight == 0 and admitted_m == completed_m == n_traffic
+        and deg_len > 0 and pre and post
+        and spike <= deg_len + max(10 * pre_p99, 0.05)
+        # 2.5x, not 1x: post-drain concurrency is higher than the light
+        # pre-blackout warmup, so iterations are legitimately longer
+        and post_p99 <= 2.5 * pre_p99 and post_p99 <= 0.5 * spike,
+        f"completed={len(sched.completed)}/{n_traffic} "
+        f"(metrics admitted={admitted_m:.0f} completed={completed_m:.0f}), "
+        f"degraded window {deg_len * 1e3:.0f}ms, max TTFT "
+        f"{spike * 1e3:.1f}ms, p99 TTFT pre/post "
+        f"{pre_p99 * 1e3:.1f}/{post_p99 * 1e3:.1f}ms")
+
     result = {
         "config": {"fabric": fabric, "epochs": epochs, "noise": noise,
                    "seed": seed, "detect_within": detect_within,
                    "blackout_rail": sorted(blackout),
                    "blackout_epoch": blackout_epoch,
-                   "restore_epoch": restore_epoch},
+                   "restore_epoch": restore_epoch,
+                   "traffic": {"requests": n_traffic,
+                               "window_s": traffic_window_s,
+                               "tpot_slo_s": traffic_tpot_slo}},
         "ts": time.time(),
         "wall_s": round(time.monotonic() - t_wall, 2),
         "schedule": schedule,
         "detections": detect_log,
         "swap_epochs": swap_epochs,
         "recal_epochs": recal_epochs,
-        "assertions": [a_detect, a_reroute, a_exec, a_rebind, a_flip],
+        "assertions": [a_detect, a_reroute, a_exec, a_rebind, a_flip,
+                       a_traffic],
         "ok": not failures_list,
         "timeline": timeline,
     }

@@ -591,6 +591,23 @@ class PlanBinder:
         self._pending = plan
         return True
 
+    def prefetch(self, plan) -> bool:
+        """Warm the traced-lowering cache for ``plan`` WITHOUT staging a
+        swap — the serving tier's batch-bucket prefetch.  The
+        neighboring bucket's lowering is built here, off the step path,
+        so a later :meth:`stage` + :meth:`swap_if_pending` when the
+        decode batch grows across the bucket boundary is a pure pointer
+        flip (mirroring the failover swap).  Returns True when this
+        call built the artifact; False when it was already cached (or
+        already active)."""
+        key = self._key(plan)
+        if key == self._key(self._active[0]) or key in self._cache:
+            return False
+        self._build(plan)
+        self._metrics()["repro_plan_prefetch_total"].inc(
+            program=self._program(plan))
+        return True
+
     def swap_if_pending(self) -> bool:
         """Make the staged plan active (call between steps).  A pure
         pointer swap when the staged lowering is cached; a cache miss

@@ -45,6 +45,17 @@ class _ServeLowering:
     decode: Callable
 
 
+@dataclasses.dataclass
+class CohortState:
+    """In-flight decode state of one cohort (one prefill's worth of
+    requests, position-aligned): the KV/recurrent cache, the last
+    logits, and the sampling key."""
+    cache: object
+    logits: object
+    key: object
+    batch: int
+
+
 class ServeEngine:
     def __init__(self, model, params, cfg: ServeConfig = ServeConfig(),
                  pctx=None, fabric=None, calibration=None, monitor=None,
@@ -83,6 +94,13 @@ class ServeEngine:
         self._binder = PlanBinder(self._trace_plan, plan=initial)
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
         self._stale_warned = False
+        # (batch, prompt_len)-keyed memos: per-step scheduler queries
+        # (plan_report, admission probes) must never re-derive the
+        # program or re-plan — the planner LRU stays warm and these
+        # stay O(1) on the hot path
+        self._programs: dict = {}
+        self._plan_cache: dict = {}
+        self._probe = None
 
     # -- hot plan re-bind -----------------------------------------------------
     def _trace_plan(self, plan) -> _ServeLowering:
@@ -112,6 +130,7 @@ class ServeEngine:
         monitor) for hot re-bind: its lowering is built NOW, off the
         request path, and swapped in atomically at the next
         :meth:`generate` entry.  Returns True when a swap is pending."""
+        self.invalidate_plan_cache()
         return self._binder.stage(plan)
 
     @property
@@ -136,11 +155,40 @@ class ServeEngine:
         MultiWrite with a shared microbatch G > 1 (decode has no compute
         to hide chunks behind).  Sites assume bf16 activations (the
         production serving dtype; fp32 smoke launchers bind their own
-        program with the right itemsize before building the model)."""
-        from repro.parallel.context import build_collective_program
-        return build_collective_program(
-            self.model.cfg, self.pctx, "serve",
-            {"prefill": (batch, prompt_len), "decode": (batch, 1)})
+        program with the right itemsize before building the model).
+
+        Memoized on ``(batch, prompt_len)``: per-step scheduler queries
+        reuse the declared program instead of re-deriving its sites."""
+        key = (int(batch), int(prompt_len))
+        program = self._programs.get(key)
+        if program is None:
+            from repro.parallel.context import build_collective_program
+            program = build_collective_program(
+                self.model.cfg, self.pctx, "serve",
+                {"prefill": (batch, prompt_len), "decode": (batch, 1)})
+            self._programs[key] = program
+        return program
+
+    def invalidate_plan_cache(self) -> None:
+        """Drop memoized fresh plans (a recalibration or re-bind may
+        have changed what planning would choose; the declared programs
+        themselves are shape-only and stay)."""
+        self._plan_cache.clear()
+
+    def _fresh_plan(self, batch: int, prompt_len: int):
+        """Fresh jointly-planned ExecutionPlan for this exact serving
+        shape, memoized on ``(batch, prompt_len)`` — repeated per-step
+        queries hit this dict (and underneath it the planner LRU), not
+        a re-plan."""
+        key = (int(batch), int(prompt_len))
+        if key in self._plan_cache:
+            return self._plan_cache[key]
+        program = self.serving_program(batch, prompt_len)
+        plan = None
+        if program.sites and self.pctx.plan_policy == "auto":
+            plan = self.pctx.plan_collectives(program)
+        self._plan_cache[key] = plan
+        return plan
 
     def execution_plan(self, batch: int, prompt_len: int):
         """The jointly-planned ExecutionPlan for this serving shape: the
@@ -155,10 +203,48 @@ class ServeEngine:
         bound = self._binder.plan or self.pctx.execution_plan
         if bound is not None:
             return bound
-        program = self.serving_program(batch, prompt_len)
-        if not program.sites or self.pctx.plan_policy != "auto":
+        return self._fresh_plan(batch, prompt_len)
+
+    # -- batch-bucket plan prefetch (the serving tier's admission seam) ------
+    def bucket_plan(self, batch: int, prompt_len: int):
+        """ExecutionPlan for the BUCKETED serving shape — what the
+        admission controller stages ahead of growing the decode batch
+        across a bucket boundary.  None when the context cannot plan
+        (no context, pinned policy, or no collective sites)."""
+        if self.pctx is None or self.pctx.plan_policy != "auto":
             return None
-        return self.pctx.plan_collectives(program)
+        from repro.core.plan import batch_bucket
+        return self._fresh_plan(batch_bucket(max(1, batch)), prompt_len)
+
+    def prefetch_bucket(self, batch: int, prompt_len: int) -> bool:
+        """Warm the traced-lowering cache for the bucketed serving
+        shape's plan, off the step path (``PlanBinder.prefetch``), so a
+        later admission across the bucket boundary swaps on a pointer
+        flip.  Returns True when a lowering was built."""
+        plan = self.bucket_plan(batch, prompt_len)
+        if plan is None:
+            return False
+        return self._binder.prefetch(plan)
+
+    def plan_probe(self, itemsize: int = 2):
+        """PlannerProbe over this engine's fabric/calibration — the
+        admission controller's latency oracle.  ``itemsize`` must match
+        the traced activation dtype (2 = bf16 production, 4 = fp32
+        smoke).  None when the engine has no parallel context."""
+        if self._probe is not None:
+            return self._probe
+        if self.pctx is None:
+            return None
+        from repro.serving.admission import PlannerProbe
+        cfg = self.model.cfg
+        topo, hw = self.pctx._plan_topo_hw(
+            getattr(cfg, "num_experts", 0) or 0)
+        self._probe = PlannerProbe(
+            topo, token_bytes=cfg.d_model * itemsize,
+            num_experts=getattr(cfg, "num_experts", 0) or 64,
+            top_k=getattr(cfg, "top_k", 0) or 8, hw=hw,
+            d_model=cfg.d_model, tp=self.pctx.model_size)
+        return self._probe
 
     def plan_report(self, batch: int, prompt_len: int) -> dict:
         """Per-phase view of the jointly-planned serving program: each
@@ -236,10 +322,59 @@ class ServeEngine:
                     eplan.decision(site.role).report()
         return out
 
+    # -- the step-level cohort API (what the BatchScheduler drives) ----------
+    def start_cohort(self, prompts: np.ndarray,
+                     max_new: Optional[int] = None,
+                     seed: int = 0):
+        """Prefill one cohort of requests ([b, s] int32, already padded
+        to one shared prompt_len) and sample its first tokens.  Returns
+        ``(state, tokens, wall_s)`` — feed ``tokens`` back through
+        :meth:`step_cohort` for each subsequent decode round."""
+        cfg = self.model.cfg
+        b, s = prompts.shape
+        max_new = max_new or self.cfg.max_new_tokens
+        model = self._binder.artifact.model
+        t0 = time.monotonic()
+        cache = model.init_cache(b, s + max_new, self.cfg.cache_dtype)
+        from repro.data.pipeline import batch_for_model
+        batch = batch_for_model(
+            cfg, {"tokens": prompts, "labels": prompts})
+        batch.pop("labels", None)
+        logits, cache = self._prefill(self.params, batch, cache)
+        state = CohortState(cache=cache, logits=logits,
+                            key=jax.random.key(seed), batch=b)
+        tokens = self._sample(state)
+        return state, tokens, time.monotonic() - t0
+
+    def step_cohort(self, state: "CohortState", tokens: np.ndarray):
+        """One decode round: consume the cohort's last sampled tokens,
+        sample the next.  Returns ``(state, tokens, wall_s)``."""
+        t0 = time.monotonic()
+        dec_in = self._decode_batch(np.asarray(tokens, np.int32)[:, None])
+        state.logits, state.cache = self._decode(
+            self.params, dec_in, state.cache)
+        tokens = self._sample(state)
+        return state, tokens, time.monotonic() - t0
+
+    def _sample(self, state: "CohortState") -> np.ndarray:
+        if self.cfg.temperature > 0:
+            state.key, sub = jax.random.split(state.key)
+            nxt = jax.random.categorical(
+                sub, jnp.asarray(state.logits) / self.cfg.temperature,
+                axis=-1)
+        else:
+            nxt = jnp.argmax(state.logits, axis=-1)
+        return np.asarray(nxt, np.int32)
+
     def generate(self, prompts: np.ndarray, max_new: Optional[int] = None,
                  seed: int = 0) -> np.ndarray:
-        """prompts: [B, S] int32 (already padded).  Returns [B, max_new]."""
-        cfg = self.model.cfg
+        """prompts: [B, S] int32 (already padded).  Returns [B, max_new].
+
+        Thin client of the continuous-batching scheduler: the whole
+        batch arrives at t=0 and drains as one cohort through the same
+        :meth:`start_cohort`/:meth:`step_cohort` loop the serving tier
+        interleaves — one code path, bit-exact either way under greedy
+        decoding (rows are numerically independent)."""
         b, s = prompts.shape
         max_new = max_new or self.cfg.max_new_tokens
         # step boundary: a staged re-bind (failover replan) lands here —
@@ -248,40 +383,33 @@ class ServeEngine:
         plans = self.plan_report(b, s)
         if plans:
             self.stats["plans"] = plans
-        model = self._binder.artifact.model
-        cache = model.init_cache(b, s + max_new, self.cfg.cache_dtype)
-        t0 = time.monotonic()
-        from repro.data.pipeline import batch_for_model
-        batch = batch_for_model(
-            cfg, {"tokens": prompts, "labels": prompts})
-        batch.pop("labels", None)
-        logits, cache = self._prefill(self.params, batch, cache)
-        dt = time.monotonic() - t0
-        self.stats["prefill_s"] += dt
-        _metrics()["repro_step_wall_seconds"].observe(dt, phase="prefill")
+        from repro.serving.admission import AdmissionController
+        from repro.serving.queue import Request, RequestQueue
+        from repro.serving.scheduler import BatchScheduler
+        queue = RequestQueue()
+        for i in range(b):
+            queue.push(Request(rid=i, arrival_s=0.0,
+                               prompt=np.asarray(prompts[i], np.int32),
+                               max_new=max_new))
+        sched = BatchScheduler(
+            queue=queue,
+            admission=AdmissionController(capacity=b, policy="greedy"),
+            engine=self, eos_id=self.cfg.eos_id, seed=seed)
+        sched.run_until_drained()
         out = np.zeros((b, max_new), np.int32)
-        done = np.zeros((b,), bool)
-        key = jax.random.key(seed)
-        t0 = time.monotonic()
-        for t in range(max_new):
-            if self.cfg.temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, jnp.asarray(logits) / self.cfg.temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            nxt = np.asarray(nxt, np.int32)
-            out[:, t] = np.where(done, 0, nxt)
-            if self.cfg.eos_id is not None:
-                done |= nxt == self.cfg.eos_id
-                if done.all():
-                    break
-            dec_in = self._decode_batch(nxt[:, None])
-            logits, cache = self._decode(self.params, dec_in, cache)
-        dt = time.monotonic() - t0
-        self.stats["decode_s"] += dt
-        _metrics()["repro_step_wall_seconds"].observe(dt, phase="decode")
-        self.stats["tokens"] += int((~done).sum()) * max_new
+        never_eos = 0
+        for req in sched.completed:
+            toks = req.tokens[:max_new]
+            out[req.rid, :len(toks)] = toks
+            never_eos += 0 if req.eos else 1
+        self.stats["prefill_s"] += sched.wall["prefill_s"]
+        self.stats["decode_s"] += sched.wall["decode_s"]
+        reg = _metrics()
+        reg["repro_step_wall_seconds"].observe(
+            sched.wall["prefill_s"], phase="prefill")
+        reg["repro_step_wall_seconds"].observe(
+            sched.wall["decode_s"], phase="decode")
+        self.stats["tokens"] += never_eos * max_new
         return out
 
     def _decode_batch(self, tokens: np.ndarray):

@@ -475,6 +475,50 @@ METRIC_SPECS = {
         help="Traced-lowering cache misses: a staged plan's lowering was "
              "built fresh, off the step path (double-buffered, not a "
              "cold retrace)."),
+    # -- serving tier (continuous batching) ----------------------------------
+    "repro_request_ttft_seconds": dict(
+        type="histogram", labels=(), buckets=_WALL_BUCKETS,
+        help="Per-request time to first token (virtual serving clock), "
+             "queue wait included."),
+    "repro_request_tpot_seconds": dict(
+        type="histogram", labels=(), buckets=_WALL_BUCKETS,
+        help="Per-request time per output token over the decode tail "
+             "(excludes the prefill-produced first token)."),
+    "repro_request_queue_wait_seconds": dict(
+        type="histogram", labels=(), buckets=_WALL_BUCKETS,
+        help="Per-request wait between arrival and admission into a "
+             "decode cohort."),
+    "repro_serving_queue_depth": dict(
+        type="gauge", labels=(),
+        help="Arrived-but-unadmitted requests after the last scheduling "
+             "iteration."),
+    "repro_serving_in_flight": dict(
+        type="gauge", labels=(),
+        help="Live (admitted, unfinished) sequences after the last "
+             "scheduling iteration — the decode batch the planner's "
+             "crossovers are cut against."),
+    "repro_requests_total": dict(
+        type="counter", labels=("outcome",),
+        help="Request lifecycle events by outcome (admitted, "
+             "completed)."),
+    "repro_admission_rejects_total": dict(
+        type="counter", labels=("reason",),
+        help="Ready requests NOT admitted this iteration, by reason: "
+             "capacity (slots full) or tpot_slo (the planner predicts "
+             "the grown decode bucket would blow the TPOT SLO — the "
+             "crossover-aware hold)."),
+    "repro_request_slo_class_total": dict(
+        type="counter", labels=("metric", "slo"),
+        help="Per-request SLO classes cut against the planner's own "
+             "predicted service times (metric: ttft, tpot), using the "
+             "standard good/acceptable/poor bands times the request's "
+             "deadline-class slack."),
+    "repro_plan_prefetch_total": dict(
+        type="counter", labels=("program",),
+        help="Batch-bucket plan prefetches: a neighboring bucket's "
+             "ExecutionPlan staged through PlanBinder ahead of "
+             "admission, so batch growth across the bucket swaps on a "
+             "warm lowering (pointer flip, never a cold retrace)."),
 }
 
 

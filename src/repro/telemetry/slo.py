@@ -78,6 +78,51 @@ def classify_records(records: Iterable[Mapping], *,
     return cells
 
 
+REQUEST_METRICS = ("ttft", "tpot")
+
+
+def classify_request(measured: Mapping, predicted: Mapping, *,
+                     slack: float = 1.0, good: float = GOOD_RATIO,
+                     acceptable: float = ACCEPT_RATIO) -> dict:
+    """Band one serving request's TTFT/TPOT against the planner's
+    predicted service times (the serving tier's per-request SLO).
+
+    ``measured``/``predicted`` map ``"ttft"``/``"tpot"`` to seconds;
+    ``slack`` multiplies the prediction before banding — the deadline
+    class's tolerance (interactive 1x, batch traffic much looser).
+    Returns per-metric classes plus ``"overall"`` (the worst, matching
+    the worst-per-cell convention of :func:`classify_records`)."""
+    rank = {c: i for i, c in enumerate(("good", "acceptable", "poor"))}
+    out = {}
+    worst = None
+    for m in REQUEST_METRICS:
+        p = predicted.get(m)
+        scaled = p * slack if p is not None else None
+        cls = classify(measured.get(m), scaled,
+                       good=good, acceptable=acceptable)
+        out[m] = cls
+        if cls != "unknown" and (worst is None or
+                                 rank[cls] > rank[worst]):
+            worst = cls
+    out["overall"] = worst if worst is not None else "unknown"
+    return out
+
+
+def observe_request(measured: Mapping, predicted: Mapping, *,
+                    slack: float = 1.0, registry=None,
+                    good: float = GOOD_RATIO,
+                    acceptable: float = ACCEPT_RATIO) -> dict:
+    """Classify one request (:func:`classify_request`) and emit the
+    per-metric classes into ``repro_request_slo_class_total``."""
+    from . import metrics as _m
+    reg = registry if registry is not None else _m.default_registry()
+    cls = classify_request(measured, predicted, slack=slack,
+                           good=good, acceptable=acceptable)
+    for m in REQUEST_METRICS:
+        reg["repro_request_slo_class_total"].inc(metric=m, slo=cls[m])
+    return cls
+
+
 def observe_record(record: Mapping, *, registry=None,
                    good: float = GOOD_RATIO,
                    acceptable: float = ACCEPT_RATIO) -> str:
